@@ -1,0 +1,95 @@
+//! Co-design explorer: the §V design-space walk-through.
+//!
+//! Sweeps the knobs the paper's Discussion identifies — prefill chunk
+//! size, state dimension, concat offload, double-buffering — and prints
+//! the deployment recipe a hardware-aware model would adopt.
+//!
+//! Run: `cargo run --release --example codesign_explorer`
+
+use npuperf::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+use npuperf::coordinator::chunking;
+use npuperf::coordinator::state::{SessionKind, StateManager};
+use npuperf::{npu, ops};
+
+fn latency(op: OperatorKind, n: usize, d_state: usize, sim: &SimConfig) -> f64 {
+    let hw = NpuConfig::default();
+    let spec = WorkloadSpec::new(op, n).with_d_state(d_state);
+    npu::run(&ops::lower(&spec, &hw, sim), &hw, sim).latency_ms()
+}
+
+fn main() {
+    let hw = NpuConfig::default();
+    let sim = SimConfig::default();
+
+    // ---- 1. chunked prefill (§V: optimum 2048, 8x memory reduction) ----
+    println!("=== chunked prefill, N = 32768 ===");
+    for c in [512usize, 1024, 2048, 4096] {
+        let p = chunking::plan(32_768, c, 64, &hw);
+        println!(
+            "  C={:<5} peak={:<10} latency={:>8.2} ms{}",
+            c,
+            npuperf::util::fmt::bytes(p.peak_bytes),
+            p.latency_ms,
+            if p.overflows { "  [scratchpad overflow]" } else { "" }
+        );
+    }
+    let best = chunking::optimal_chunk(32_768, 64, &hw);
+    println!(
+        "  -> optimal C={} ; peak-memory reduction {:.1}x vs monolithic\n",
+        best.chunk,
+        chunking::peak_memory_reduction(32_768, best.chunk, 64)
+    );
+
+    // ---- 2. state dimension (§V: d_state 32 sweet spot) ----------------
+    println!("=== d_state sweep at N=4096 (latency ms) ===");
+    println!("{:<10} {:>8} {:>8} {:>8} {:>8}", "operator", "16", "32", "64", "128");
+    for op in [OperatorKind::Linear, OperatorKind::Toeplitz, OperatorKind::Fourier] {
+        let l: Vec<f64> =
+            [16, 32, 64, 128].iter().map(|&d| latency(op, 4096, d, &sim)).collect();
+        println!(
+            "{:<10} {:>8.2} {:>8.2} {:>8.2} {:>8.2}",
+            op.paper_name(),
+            l[0],
+            l[1],
+            l[2],
+            l[3]
+        );
+    }
+
+    // ---- 3. concat offload + double buffering ---------------------------
+    println!("\n=== DMA management ablations at N=4096 ===");
+    let base = latency(OperatorKind::Fourier, 4096, 16, &sim);
+    let off = latency(OperatorKind::Fourier, 4096, 16, &sim.clone().with_offload(true));
+    println!(
+        "Fourier concat offload to CPU: {base:.2} -> {off:.2} ms ({:+.1}%; paper: -32%)",
+        100.0 * (off - base) / base
+    );
+    let db = latency(OperatorKind::Toeplitz, 8192, 16, &sim);
+    let nodb =
+        latency(OperatorKind::Toeplitz, 8192, 16, &sim.clone().with_double_buffer(false));
+    println!(
+        "Toeplitz double-buffering:     {nodb:.2} -> {db:.2} ms ({:+.1}%)",
+        100.0 * (db - nodb) / nodb
+    );
+
+    // ---- 4. memory-state tradeoff (Fig 1) -------------------------------
+    println!("\n=== persistent-state footprint at 100K tokens (Fig 1) ===");
+    let mut m = StateManager::new(u64::MAX);
+    for (id, op) in OperatorKind::ALL.iter().enumerate() {
+        m.open(id as u64, *op, 64, 16);
+        m.append(id as u64, 100_000);
+        println!(
+            "  {:<12} {:>12}   ({:?})",
+            op.paper_name(),
+            npuperf::util::fmt::bytes(m.session_bytes(id as u64).unwrap()),
+            SessionKind::for_operator(*op)
+        );
+    }
+
+    // ---- 5. the recipe ---------------------------------------------------
+    println!("\n=== co-design recipe (paper §V) ===");
+    println!("  - prefill in {}-token chunks (scratchpad-bounded)", best.chunk);
+    println!("  - prefer Toeplitz/Linear beyond ~1K context; avoid Fourier");
+    println!("  - keep element-wise epilogues fused or SHAVE becomes the wall");
+    println!("  - offload state concats to the host CPU when DMA-bound");
+}

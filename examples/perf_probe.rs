@@ -1,0 +1,18 @@
+use npuperf::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+use npuperf::{npu, ops};
+use std::time::Instant;
+fn main() {
+    let hw = NpuConfig::default();
+    let sim = SimConfig::default();
+    for op in OperatorKind::ALL {
+        let spec = WorkloadSpec::new(op, 8192);
+        let t0 = Instant::now();
+        let g = ops::lower(&spec, &hw, &sim);
+        let t_lower = t0.elapsed();
+        let t1 = Instant::now();
+        let r = npu::run(&g, &hw, &sim);
+        let t_sim = t1.elapsed();
+        println!("{:<10} nodes={:<7} lower={:>8.1?} sim={:>8.1?} (modeled {:.1} ms)",
+                 op.name(), g.len(), t_lower, t_sim, r.latency_ms());
+    }
+}

@@ -1,0 +1,43 @@
+//! Quickstart: the 60-second tour of the library.
+//!
+//! 1. Simulate one operator on the modeled NPU and read its report.
+//! 2. Calibrate the effective roofline ceilings (paper §IV-A).
+//! 3. Ask the cost model which operator to deploy at a given context.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use npuperf::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+use npuperf::coordinator::Router;
+use npuperf::model::calibrate;
+use npuperf::{npu, ops};
+
+fn main() {
+    let hw = NpuConfig::default(); // paper Table I testbed
+    let sim = SimConfig::default(); // 16-bit, 128-wide tiles, double-buffered
+
+    // --- 1. simulate full causal attention at a long context -----------
+    let spec = WorkloadSpec::new(OperatorKind::Causal, 8192);
+    let graph = ops::lower(&spec, &hw, &sim);
+    let report = npu::run(&graph, &hw, &sim);
+    let [dpu, dma, shave] = report.utilization();
+    println!("== {spec} ==");
+    println!("latency     : {:.2} ms", report.latency_ms());
+    println!("bottleneck  : {} (DPU {:.1}% / DMA {:.1}% / SHAVE {:.1}%)",
+             report.bottleneck(), dpu * 100.0, dma * 100.0, shave * 100.0);
+    println!("pipeline    : {:.1}% stalled on pull", report.stall.stall_frac() * 100.0);
+    println!("cache       : {:.1}% efficient, reuse {:.1} ms",
+             report.cache.efficiency() * 100.0, report.cache.reuse_ns / 1e6);
+
+    // --- 2. effective ceilings ------------------------------------------
+    let c = calibrate(&hw, &sim);
+    println!("\n== effective ceilings (paper: pi 500 GOP/s, beta 3.2 GB/s) ==");
+    println!("pi_eff  : {:.0} GOP/s ({:.1}% of nominal)", c.pi_eff_gops, c.compute_derate() * 100.0);
+    println!("beta_eff: {:.2} GB/s ({:.1}% of nominal)", c.beta_eff_gbps, c.bandwidth_derate() * 100.0);
+    println!("I_crit  : {:.0} Ops/Byte", c.i_crit());
+
+    // --- 3. which operator should serve 8K contexts? -------------------
+    println!("\n== operator ranking at N=8192 (cost model) ==");
+    for (i, (op, ms)) in Router::standard().rank_operators(8192, &hw, &sim).iter().enumerate() {
+        println!("{}. {:<12} {:.2} ms", i + 1, op.paper_name(), ms);
+    }
+}

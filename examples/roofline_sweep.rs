@@ -1,0 +1,58 @@
+//! Roofline sweep: place every operator on the effective-ceiling roofline
+//! across a range of context lengths — extends the paper's single-point
+//! Fig 7 into a trajectory view (how intensity and achieved GOP/s move as
+//! context grows).
+//!
+//! Run: `cargo run --release --example roofline_sweep`
+
+use npuperf::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+use npuperf::model::{calibrate, Roofline};
+use npuperf::{npu, ops};
+
+fn main() {
+    let hw = NpuConfig::default();
+    let sim = SimConfig::default();
+    let ceilings = calibrate(&hw, &sim);
+    let roofline = Roofline::new(ceilings);
+
+    println!(
+        "effective roofline: pi_eff={:.0} GOP/s, beta_eff={:.2} GB/s, I_crit={:.0} Op/B\n",
+        ceilings.pi_eff_gops,
+        ceilings.beta_eff_gbps,
+        ceilings.i_crit()
+    );
+    println!(
+        "{:<12} {:>6} {:>12} {:>14} {:>12} {:>10}",
+        "operator", "N", "I (Op/B)", "meas (GOP/s)", "bound", "of roof"
+    );
+    for op in OperatorKind::ALL {
+        for n in [1024usize, 2048, 4096, 8192] {
+            let spec = WorkloadSpec::new(op, n);
+            let g = ops::lower(&spec, &hw, &sim);
+            let r = npu::run(&g, &hw, &sim);
+            let p = roofline.place(&spec, &r, sim.elem_bytes);
+            println!(
+                "{:<12} {:>6} {:>12.2} {:>14.2} {:>12.1} {:>9.1}%",
+                op.paper_name(),
+                n,
+                p.intensity,
+                p.measured_gops,
+                p.bound_gops,
+                100.0 * p.roof_fraction()
+            );
+        }
+        println!();
+    }
+
+    // Single-point paper comparison plot (Fig 7).
+    let points: Vec<_> = OperatorKind::ALL
+        .iter()
+        .map(|&op| {
+            let spec = WorkloadSpec::new(op, 4096);
+            let g = ops::lower(&spec, &hw, &sim);
+            let r = npu::run(&g, &hw, &sim);
+            roofline.place(&spec, &r, sim.elem_bytes)
+        })
+        .collect();
+    println!("{}", roofline.ascii_plot(&points, 64, 18));
+}

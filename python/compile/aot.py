@@ -1,0 +1,179 @@
+"""AOT compile path: lower L2 jax functions to HLO *text* + golden I/O.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/gen_hlo.py).
+
+Outputs, per artifact ``<name>``:
+
+- ``artifacts/<name>.hlo.txt``    — the HLO module the Rust runtime compiles
+- ``artifacts/<name>.golden.txt`` — seeded inputs + oracle outputs so Rust
+                                    integration tests can validate numerics
+- ``artifacts/manifest.txt``      — one line per artifact: name, kind,
+                                    operator, N, d, input arity/shapes
+
+Run via ``make artifacts`` (no-op if inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Context lengths lowered for *real* PJRT execution. Longer contexts
+# (1024..8192, paper Tables II-VIII) run on the NPU simulator — compiling
+# interpret-mode Pallas HLO at N=8192 is neither needed nor cheap.
+OPERATOR_CONTEXTS = (128, 256, 512)
+BLOCK_CONTEXTS = (128, 256)
+BLOCK_D_MODEL = 256
+BLOCK_N_HEADS = 4
+BLOCK_D_FF = 512
+GOLDEN_SEED = 1234
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (the 0.5.1-safe path).
+
+    ``print_large_constants=True`` is essential: the default printer elides
+    big constant literals as ``constant({...})``, which the text parser on
+    the Rust side silently fills with zeros — baked model weights would
+    vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _write_tensor(f, arr: np.ndarray) -> None:
+    arr = np.asarray(arr)
+    f.write(f"tensor {arr.ndim} {' '.join(str(s) for s in arr.shape)}\n")
+    f.write(" ".join(f"{x:.9g}" for x in arr.reshape(-1)) + "\n")
+
+
+def _write_golden(path: str, name: str, inputs, outputs) -> None:
+    with open(path, "w") as f:
+        f.write(f"artifact {name}\n")
+        f.write(f"inputs {len(inputs)}\n")
+        for a in inputs:
+            _write_tensor(f, a)
+        f.write(f"outputs {len(outputs)}\n")
+        for a in outputs:
+            _write_tensor(f, a)
+
+
+def _lower_artifact(out_dir: str, name: str, fn, example_inputs) -> dict:
+    specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in example_inputs]
+    lowered = jax.jit(fn).lower(*specs)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    outputs = fn(*example_inputs)
+    _write_golden(
+        os.path.join(out_dir, f"{name}.golden.txt"), name, example_inputs, outputs
+    )
+    return {
+        "name": name,
+        "inputs": [tuple(a.shape) for a in example_inputs],
+        "outputs": [tuple(np.asarray(a).shape) for a in outputs],
+    }
+
+
+def _rand(rng: np.random.RandomState, *shape) -> jnp.ndarray:
+    return jnp.asarray(rng.randn(*shape) * 0.5, jnp.float32)
+
+
+def build_all(out_dir: str, quick: bool = False) -> list[dict]:
+    os.makedirs(out_dir, exist_ok=True)
+    rng = np.random.RandomState(GOLDEN_SEED)
+    manifest: list[dict] = []
+
+    op_contexts = OPERATOR_CONTEXTS if not quick else (128,)
+    blk_contexts = BLOCK_CONTEXTS if not quick else (128,)
+    ops = model.OPERATOR_NAMES if not quick else ("causal", "linear")
+
+    for op in ops:
+        for n in op_contexts:
+            name = f"{op}_n{n}_d{model.D_HEAD}"
+            fn = model.make_operator_fn(op)
+            q, k, v = (_rand(rng, n, model.D_HEAD) for _ in range(3))
+            entry = _lower_artifact(out_dir, name, fn, (q, k, v))
+            entry.update(kind="operator", operator=op, n=n, d=model.D_HEAD)
+            manifest.append(entry)
+            print(f"  lowered {name}")
+
+    for op in ops:
+        for n in blk_contexts:
+            name = f"block_{op}_n{n}_dm{BLOCK_D_MODEL}"
+            fn = model.make_block_fn(op, BLOCK_D_MODEL, BLOCK_N_HEADS, BLOCK_D_FF)
+            x = _rand(rng, n, BLOCK_D_MODEL)
+            entry = _lower_artifact(out_dir, name, fn, (x,))
+            entry.update(kind="block", operator=op, n=n, d=BLOCK_D_MODEL)
+            manifest.append(entry)
+            print(f"  lowered {name}")
+
+    # Decode-phase artifacts (one autoregressive step, §II-A Eq. 3): the
+    # causal step over a 512-token KV cache and the recurrent linear step.
+    if not quick:
+        from .kernels import decode as decode_kernels
+
+        n_cache = 512
+        name = f"decode_causal_n{n_cache}_d{model.D_HEAD}"
+        fn = lambda q, k, v: (decode_kernels.causal_decode(q, k, v),)
+        q1 = _rand(rng, 1, model.D_HEAD)
+        kc, vc = _rand(rng, n_cache, model.D_HEAD), _rand(rng, n_cache, model.D_HEAD)
+        entry = _lower_artifact(out_dir, name, fn, (q1, kc, vc))
+        entry.update(kind="decode", operator="causal", n=n_cache, d=model.D_HEAD)
+        manifest.append(entry)
+        print(f"  lowered {name}")
+
+        name = f"decode_linear_d{model.D_HEAD}_r{model.D_STATE}"
+        proj = model._linear_proj(model.D_HEAD, model.D_STATE)
+        step = lambda q, k, v, s, z: decode_kernels.linear_decode_step(
+            q, k, v, proj, s, z
+        )
+        s0 = jnp.zeros((model.D_STATE, model.D_HEAD), jnp.float32)
+        z0 = jnp.zeros((1, model.D_STATE), jnp.float32)
+        entry = _lower_artifact(
+            out_dir,
+            name,
+            step,
+            (q1, _rand(rng, 1, model.D_HEAD), _rand(rng, 1, model.D_HEAD), s0, z0),
+        )
+        entry.update(kind="decode", operator="linear", n=1, d=model.D_HEAD)
+        manifest.append(entry)
+        print(f"  lowered {name}")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        for e in manifest:
+            ins = ";".join(",".join(str(d) for d in s) for s in e["inputs"])
+            outs = ";".join(",".join(str(d) for d in s) for s in e["outputs"])
+            f.write(
+                f"{e['name']} kind={e['kind']} op={e['operator']} n={e['n']} "
+                f"d={e['d']} inputs={ins} outputs={outs}\n"
+            )
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--quick", action="store_true", help="small artifact set for CI smoke"
+    )
+    args = ap.parse_args()
+    manifest = build_all(args.out, quick=args.quick)
+    print(f"wrote {len(manifest)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

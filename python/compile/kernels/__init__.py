@@ -1,0 +1,26 @@
+"""L1 Pallas kernels for the five causal inference operators (paper §II-C).
+
+Public entry points (all take ``(N, d)`` arrays, return ``(N, d)``):
+
+- :func:`causal.causal_attention`       — Full Causal Mask (quadratic baseline)
+- :func:`retentive.retentive_attention` — Retentive decay
+- :func:`toeplitz.toeplitz_attention`   — band-limited Toeplitz
+- :func:`linear.linear_attention`       — chunked causal linear (low-rank phi)
+- :func:`fourier.fourier_attention`     — frequency-domain product
+
+``ref`` holds the pure-jnp oracles each kernel is tested against.
+"""
+
+from .causal import causal_attention
+from .retentive import retentive_attention
+from .toeplitz import toeplitz_attention
+from .linear import linear_attention
+from .fourier import fourier_attention
+
+__all__ = [
+    "causal_attention",
+    "retentive_attention",
+    "toeplitz_attention",
+    "linear_attention",
+    "fourier_attention",
+]

@@ -1,0 +1,49 @@
+"""Full Causal Mask attention as a Pallas kernel (paper §II-C, Table IV/V).
+
+Grid over query blocks; K/V stream fully into VMEM per step. This is the
+quadratic baseline — the simulator shows it spilling its N×N score matrix
+out of the 4 MB scratchpad at long context (the 96.7 %-stall row of
+Table V); here we only care that the numerics match the oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, block_q: int):
+    i = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32) * scale
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    scores = q @ k.T  # (block_q, N)
+    qpos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    kpos = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    probs = common.row_softmax_masked(scores, kpos <= qpos)
+    o_ref[...] = (probs @ v).astype(o_ref.dtype)
+
+
+def causal_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """softmax(QK^T / sqrt(d) + M) V for q, k, v : (N, d)."""
+    n, d = q.shape
+    bq = common.q_block(n)
+    assert n % bq == 0, f"context {n} must be a multiple of the query block {bq}"
+    kernel = functools.partial(_kernel, scale=1.0 / (d**0.5), block_q=bq)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), q.dtype),
+        interpret=common.INTERPRET,
+    )(q, k, v)

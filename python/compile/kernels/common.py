@@ -1,0 +1,48 @@
+"""Shared helpers for the Pallas kernels.
+
+Block-size policy (DESIGN.md §Hardware-Adaptation): blocks are multiples of
+the NPU's 128×128 systolic tile (≙ TPU MXU tile) and sized so one grid
+step's working set fits the 4 MB scratchpad (≙ VMEM). ``interpret=True``
+everywhere — the CPU PJRT plugin cannot execute Mosaic custom-calls, so the
+kernels lower to plain HLO; the *structure* (BlockSpec schedule) is what
+carries over to real hardware.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+# Systolic/MXU tile edge. Query blocks are one tile row tall.
+TILE = 128
+
+# Scratchpad budget from paper Table I, used by vmem_footprint() checks.
+SCRATCHPAD_BYTES = 4 * 1024 * 1024
+
+INTERPRET = True  # CPU PJRT: always interpret-mode (see module docstring)
+
+
+def q_block(n: int) -> int:
+    """Query-block height: one systolic tile, shrunk for tiny test shapes."""
+    return min(TILE, n)
+
+
+def row_softmax_masked(scores: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Stable masked row softmax (same contract as ref._masked_softmax)."""
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m) * mask.astype(scores.dtype)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def vmem_footprint_bytes(*shapes_dtypes: tuple[tuple[int, ...], jnp.dtype]) -> int:
+    """Bytes of VMEM one grid step touches — asserted < SCRATCHPAD_BYTES in
+    tests so kernel block choices stay honest to the 4 MB budget."""
+    total = 0
+    for shape, dtype in shapes_dtypes:
+        count = 1
+        for s in shape:
+            count *= s
+        total += count * jnp.dtype(dtype).itemsize
+    return total

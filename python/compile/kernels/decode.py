@@ -1,0 +1,99 @@
+"""Decode-phase kernels: one autoregressive step (paper §II-A, Eq. 3).
+
+Two step forms, matching the memory-state tradeoff of Fig 1:
+
+- :func:`causal_decode` — attention-class step: the new token's query
+  attends over the whole KV cache (O(N·d) work and memory).
+- :func:`linear_decode_step` — recurrent-class step: rank-r state update +
+  readout (O(r·d) work, O(r·d) memory, independent of context).
+
+Both are Pallas kernels (interpret=True) validated against the prefill
+oracles: decoding token t over prefix K/V[: t] must reproduce row t of the
+prefill output exactly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _causal_decode_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    q = q_ref[...].astype(jnp.float32) * scale  # (1, d)
+    k = k_ref[...].astype(jnp.float32)  # (N, d)
+    v = v_ref[...].astype(jnp.float32)
+    scores = q @ k.T  # (1, N) — every cached position is attendable
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = (probs @ v).astype(o_ref.dtype)
+
+
+def causal_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """One attention decode step: q : (1, d), cache k/v : (N, d) → (1, d)."""
+    n, d = k.shape
+    assert q.shape == (1, d), f"decode query must be (1, {d}), got {q.shape}"
+    import functools
+
+    kernel = functools.partial(_causal_decode_kernel, scale=1.0 / (d**0.5))
+    full = lambda *shape: pl.BlockSpec(shape, lambda: tuple(0 for _ in shape))
+    return pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[full(1, d), full(n, d), full(n, d)],
+        out_specs=full(1, d),
+        out_shape=jax.ShapeDtypeStruct((1, d), q.dtype),
+        interpret=common.INTERPRET,
+    )(q, k, v)
+
+
+def _linear_step_kernel(q_ref, k_ref, v_ref, p_ref, s_ref, z_ref, o_ref, s_out, z_out):
+    q = q_ref[...].astype(jnp.float32)  # (1, d)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    p = p_ref[...].astype(jnp.float32)  # (d, r)
+    s = s_ref[...].astype(jnp.float32)  # (r, d)
+    z = z_ref[...].astype(jnp.float32)  # (1, r)
+
+    def phi(x):
+        h = x @ p
+        return jnp.where(h > 0, h + 1.0, jnp.exp(h))
+
+    pq = phi(q)  # (1, r)
+    pk = phi(k)  # (1, r)
+    s_new = s + pk.T @ v  # (r, d)
+    z_new = z + pk
+    num = pq @ s_new  # (1, d)
+    den = jnp.sum(pq * z_new, axis=-1, keepdims=True)
+    o_ref[...] = (num / den).astype(o_ref.dtype)
+    s_out[...] = s_new
+    z_out[...] = z_new
+
+
+def linear_decode_step(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    proj: jnp.ndarray,
+    s: jnp.ndarray,
+    z: jnp.ndarray,
+):
+    """One recurrent decode step. Shapes: q/k/v (1, d), proj (d, r),
+    s (r, d), z (1, r). Returns (y (1, d), s', z')."""
+    d, r = proj.shape
+    full = lambda *shape: pl.BlockSpec(shape, lambda: tuple(0 for _ in shape))
+    return pl.pallas_call(
+        _linear_step_kernel,
+        grid=(),
+        in_specs=[full(1, d), full(1, d), full(1, d), full(d, r), full(r, d), full(1, r)],
+        out_specs=[full(1, d), full(r, d), full(1, r)],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, d), q.dtype),
+            jax.ShapeDtypeStruct((r, d), jnp.float32),
+            jax.ShapeDtypeStruct((1, r), jnp.float32),
+        ],
+        interpret=common.INTERPRET,
+    )(q, k, v, proj, s, z)

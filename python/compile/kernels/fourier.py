@@ -1,0 +1,57 @@
+"""Fourier structured attention: FFT at L2, frequency product in Pallas.
+
+F^-1(F(Q) ⊙ conj(F(K)) ⊙ F(V)) — the r/fft itself is a global butterfly
+network with no efficient systolic mapping (the paper's point: "FFT
+overheads violate NPU execution assumptions"), so on-device it runs as DFT
+matmuls + DMA-heavy concats, which the simulator models. Numerically we
+lower the transform through XLA's native FFT and keep the *hot element-wise
+spectrum product* — the part that would land on SHAVE — as the Pallas
+kernel, split into real/imag planes (Pallas has no complex dtype support).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _spectrum_kernel(qr, qi, kr, ki, vr, vi, or_, oi_):
+    """out = q * conj(k) * v over (F, d) real/imag planes."""
+    a_r = qr[...] * kr[...] + qi[...] * ki[...]  # re(q * conj(k))
+    a_i = qi[...] * kr[...] - qr[...] * ki[...]  # im(q * conj(k))
+    or_[...] = a_r * vr[...] - a_i * vi[...]
+    oi_[...] = a_r * vi[...] + a_i * vr[...]
+
+
+def _spectrum_product(qw: jnp.ndarray, kw: jnp.ndarray, vw: jnp.ndarray) -> jnp.ndarray:
+    f, d = qw.shape
+    full = pl.BlockSpec((f, d), lambda: (0, 0))
+    out_r, out_i = pl.pallas_call(
+        _spectrum_kernel,
+        grid=(),
+        in_specs=[full] * 6,
+        out_specs=[full, full],
+        out_shape=[jax.ShapeDtypeStruct((f, d), jnp.float32)] * 2,
+        interpret=common.INTERPRET,
+    )(
+        jnp.real(qw).astype(jnp.float32),
+        jnp.imag(qw).astype(jnp.float32),
+        jnp.real(kw).astype(jnp.float32),
+        jnp.imag(kw).astype(jnp.float32),
+        jnp.real(vw).astype(jnp.float32),
+        jnp.imag(vw).astype(jnp.float32),
+    )
+    return out_r + 1j * out_i
+
+
+def fourier_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Frequency-domain attention for q, k, v : (N, d)."""
+    n = q.shape[0]
+    qw = jnp.fft.rfft(q.astype(jnp.float32), axis=0)
+    kw = jnp.fft.rfft(k.astype(jnp.float32), axis=0)
+    vw = jnp.fft.rfft(v.astype(jnp.float32), axis=0)
+    out = jnp.fft.irfft(_spectrum_product(qw, kw, vw), n=n, axis=0)
+    return (out / n).astype(q.dtype)

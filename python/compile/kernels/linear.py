@@ -1,0 +1,98 @@
+"""Causal linear attention as a chunked Pallas kernel.
+
+phi(x) = elu(x P) + 1 with a low-rank projection P : (d, r) — the paper's
+"kernel function = low-rank projections". Causality is handled with the
+standard chunked decomposition:
+
+    y_chunk = intra(chunk)                (C×C masked, quadratic in C only)
+            + phi(q_chunk) @ S            (inter-chunk recurrent state, r×d)
+
+The (r, d) state S and (r,) normalizer z are carried across chunks by a
+``jax.lax.scan`` at L2 — each scan step is one ``pallas_call``. This is the
+O(d) persistent-state end of the paper's memory-state tradeoff (Fig 1): the
+NPU keeps only S/z resident in scratchpad instead of an O(N·d) KV cache.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+CHUNK = 128  # one systolic tile of rows per chunk
+
+
+def _phi(x: jnp.ndarray, proj: jnp.ndarray) -> jnp.ndarray:
+    h = x @ proj
+    return jnp.where(h > 0, h + 1.0, jnp.exp(h))
+
+
+def _chunk_kernel(q_ref, k_ref, v_ref, p_ref, s_ref, z_ref, o_ref, s_out_ref, z_out_ref):
+    """One chunk step: consume state (S, z), emit outputs and next state."""
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    p = p_ref[...].astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)  # (r, d) inter-chunk KV state
+    z = z_ref[...].astype(jnp.float32)  # (1, r) inter-chunk normalizer
+    pq = _phi(q, p)  # (C, r)
+    pk = _phi(k, p)  # (C, r)
+    c = q.shape[0]
+    # Intra-chunk causal part: A[i,j] = pq_i . pk_j for j <= i.
+    a = pq @ pk.T
+    qpos = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    a = jnp.where(kpos <= qpos, a, 0.0)
+    num = a @ v + pq @ s
+    zc = jnp.cumsum(pk, axis=0)  # within-chunk normalizer prefix
+    den = jnp.sum(pq * (zc + z), axis=-1, keepdims=True)
+    o_ref[...] = (num / den).astype(o_ref.dtype)
+    s_out_ref[...] = (s + pk.T @ v).astype(s_out_ref.dtype)
+    z_out_ref[...] = (z + jnp.sum(pk, axis=0, keepdims=True)).astype(z_out_ref.dtype)
+
+
+def _chunk_step(q, k, v, proj, s, z):
+    c, d = q.shape
+    r = proj.shape[1]
+    full = lambda *shape: pl.BlockSpec(shape, lambda: tuple(0 for _ in shape))
+    return pl.pallas_call(
+        _chunk_kernel,
+        grid=(),
+        in_specs=[full(c, d), full(c, d), full(c, d), full(d, r), full(r, d), full(1, r)],
+        out_specs=[full(c, d), full(r, d), full(1, r)],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, d), q.dtype),
+            jax.ShapeDtypeStruct((r, d), jnp.float32),
+            jax.ShapeDtypeStruct((1, r), jnp.float32),
+        ],
+        interpret=common.INTERPRET,
+    )(q, k, v, proj, s, z)
+
+
+def linear_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, proj: jnp.ndarray
+) -> jnp.ndarray:
+    """Chunked causal linear attention for q, k, v : (N, d), proj : (d, r)."""
+    n, d = q.shape
+    r = proj.shape[1]
+    chunk = min(CHUNK, n)
+    assert n % chunk == 0, f"context {n} must be a multiple of the chunk {chunk}"
+    m = n // chunk
+    qc = q.reshape(m, chunk, d)
+    kc = k.reshape(m, chunk, d)
+    vc = v.reshape(m, chunk, d)
+
+    def step(carry, xs):
+        s, z = carry
+        qi, ki, vi = xs
+        o, s2, z2 = _chunk_step(qi, ki, vi, proj, s, z)
+        return (s2, z2), o
+
+    s0 = jnp.zeros((r, d), jnp.float32)
+    z0 = jnp.zeros((1, r), jnp.float32)
+    (_, _), out = jax.lax.scan(step, (s0, z0), (qc, kc, vc))
+    return out.reshape(n, d)

@@ -1,0 +1,139 @@
+"""Pure-jnp oracles for the five causal inference operators.
+
+These are the *correctness* references (paper §II-C). Every Pallas kernel in
+this package is validated against the matching function here by
+``python/tests/test_kernels.py``; the Rust runtime re-validates the lowered
+HLO against golden I/O produced from these same functions.
+
+Shapes follow the paper's microbenchmark setup: single head,
+``q, k, v : (N, d_h)`` with ``d_h = 64`` by default. Batch/head dims are
+added at the model (L2) level with ``vmap``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # finite stand-in for -inf: keeps softmax NaN-free on f32
+
+
+def _causal_mask(n: int) -> jnp.ndarray:
+    """Lower-triangular boolean mask M[i, j] = (j <= i)."""
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    return j <= i
+
+
+def _masked_softmax(scores: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Numerically-stable row softmax over the masked entries only."""
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m) * mask.astype(scores.dtype)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def causal_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Full Causal Mask attention: softmax(QK^T / sqrt(d) + M) V."""
+    n, d = q.shape
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    probs = _masked_softmax(scores, _causal_mask(n))
+    return probs @ v
+
+
+def retentive_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, gamma: float = 0.97
+) -> jnp.ndarray:
+    """Retentive attention: softmax((QK^T / sqrt(d)) ⊙ W) V with
+    W[i, j] = gamma^(i - j) for j <= i (recency-biased decay, paper §II-C).
+    """
+    n, d = q.shape
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    mask = j <= i
+    # gamma^(i-j) via exp/log keeps the lowering free of integer pow ops.
+    decay = jnp.exp((i - j).astype(q.dtype) * jnp.log(jnp.asarray(gamma, q.dtype)))
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(d, q.dtype)) * jnp.where(mask, decay, 0.0)
+    probs = _masked_softmax(scores, mask)
+    return probs @ v
+
+
+def toeplitz_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, gamma: float = 0.9
+) -> jnp.ndarray:
+    """Toeplitz structured attention (full-band reference):
+    softmax(QK^T ⊙ W) V with W[i, j] = gamma^|i-j|, causal-masked.
+    """
+    n, d = q.shape
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    mask = j <= i
+    decay = jnp.exp(jnp.abs(i - j).astype(q.dtype) * jnp.log(jnp.asarray(gamma, q.dtype)))
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(d, q.dtype)) * jnp.where(mask, decay, 0.0)
+    probs = _masked_softmax(scores, mask)
+    return probs @ v
+
+
+def toeplitz_banded_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    band: int = 128,
+    gamma: float = 0.9,
+) -> jnp.ndarray:
+    """Band-limited Toeplitz attention: position i attends to
+    j in [i - band + 1, i]. This is the sub-quadratic variant the paper
+    benchmarks (its latency scales near-linearly, Table III) — the
+    gamma^|i-j| decay makes weights outside a modest band negligible.
+    """
+    n, d = q.shape
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    mask = (j <= i) & (i - j < band)
+    decay = jnp.exp(jnp.abs(i - j).astype(q.dtype) * jnp.log(jnp.asarray(gamma, q.dtype)))
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(d, q.dtype)) * jnp.where(mask, decay, 0.0)
+    probs = _masked_softmax(scores, mask)
+    return probs @ v
+
+
+def _phi(x: jnp.ndarray, proj: jnp.ndarray) -> jnp.ndarray:
+    """Low-rank feature map phi(x) = elu(x P) + 1 (positive by construction).
+
+    The paper's linear attention uses "low-rank projections" as the kernel
+    function; the +1-elu keeps features positive so the normalizer never
+    crosses zero.
+    """
+    h = x @ proj
+    return jnp.where(h > 0, h + 1.0, jnp.exp(h))
+
+
+def linear_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, proj: jnp.ndarray
+) -> jnp.ndarray:
+    """Causal linear attention: y_t = phi(q_t) S_t / (phi(q_t) . z_t) with
+    S_t = sum_{s<=t} phi(k_s) v_s^T and z_t = sum_{s<=t} phi(k_s).
+    O(N · r · d) compute, O(r · d) state — the SSM-like end of the
+    memory-state tradeoff (paper Fig 1).
+    """
+    pq = _phi(q, proj)  # (N, r)
+    pk = _phi(k, proj)  # (N, r)
+    # Cumulative KV state: S_t = cumsum_t(pk_t ⊗ v_t); materialized (N, r, d)
+    # in the oracle only — kernels carry (r, d) chunk state instead.
+    kv = pk[:, :, None] * v[:, None, :]
+    s = jnp.cumsum(kv, axis=0)
+    z = jnp.cumsum(pk, axis=0)
+    num = jnp.einsum("nr,nrd->nd", pq, s)
+    den = jnp.sum(pq * z, axis=-1, keepdims=True)
+    return num / den
+
+
+def fourier_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Fourier structured attention: F^-1(F(Q) ⊙ conj(F(K)) ⊙ F(V)),
+    transforms taken along the sequence axis per channel (paper §II-C).
+    Normalized by N so magnitudes stay comparable across context lengths.
+    """
+    n = q.shape[0]
+    qw = jnp.fft.rfft(q, axis=0)
+    kw = jnp.fft.rfft(k, axis=0)
+    vw = jnp.fft.rfft(v, axis=0)
+    out = jnp.fft.irfft(qw * jnp.conj(kw) * vw, n=n, axis=0)
+    return (out / n).astype(q.dtype)

@@ -1,0 +1,59 @@
+"""Retentive (decayed recurrent) attention as a Pallas kernel.
+
+softmax((QK^T / sqrt(d)) ⊙ W) V with W[i,j] = gamma^(i-j) on the causal
+triangle. The extra element-wise decay multiply is exactly the work the
+paper attributes to the SHAVE cores (Table II: SHAVE-bound past N = 1024);
+structurally it is a fused epilogue on the score tile.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, log_gamma: float, block_q: int):
+    i = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32) * scale
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    scores = q @ k.T
+    qpos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    kpos = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    mask = kpos <= qpos
+    # Decay epilogue (SHAVE work on the NPU): gamma^(i-j), fused on the tile.
+    delta = (qpos - kpos).astype(jnp.float32)
+    decay = jnp.exp(delta * log_gamma)
+    scores = scores * jnp.where(mask, decay, 0.0)
+    probs = common.row_softmax_masked(scores, mask)
+    o_ref[...] = (probs @ v).astype(o_ref.dtype)
+
+
+def retentive_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, gamma: float = 0.97
+) -> jnp.ndarray:
+    """Retentive decay attention for q, k, v : (N, d)."""
+    n, d = q.shape
+    bq = common.q_block(n)
+    assert n % bq == 0, f"context {n} must be a multiple of the query block {bq}"
+    kernel = functools.partial(
+        _kernel, scale=1.0 / (d**0.5), log_gamma=math.log(gamma), block_q=bq
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), q.dtype),
+        interpret=common.INTERPRET,
+    )(q, k, v)

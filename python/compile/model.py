@@ -1,0 +1,156 @@
+"""L2 JAX model: attention layers + a small transformer block per operator.
+
+This is the build-time compute-graph layer of the three-layer stack. Every
+function here is pure JAX calling the L1 Pallas kernels in ``kernels/``;
+``aot.py`` lowers the jitted functions once to HLO text, and the Rust
+runtime (L3) executes them through PJRT — Python never runs on the request
+path.
+
+Two artifact families are produced:
+
+- **operator artifacts** — a single-head causal operator ``(N, d_h)`` →
+  ``(N, d_h)``; these are the microbenchmark subjects of paper §III.
+- **block artifacts** — a pre-norm transformer block (MHA with a pluggable
+  causal operator + MLP), the unit the serving example drives end-to-end.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import (
+    causal_attention,
+    fourier_attention,
+    linear_attention,
+    retentive_attention,
+    toeplitz_attention,
+)
+
+# Paper defaults (§III-A): head dim 64, decay factors, Toeplitz band, and the
+# low-rank feature dimension d_state = 16 (§III-E sweeps it to 128).
+D_HEAD = 64
+D_STATE = 16
+RETENTIVE_GAMMA = 0.97
+TOEPLITZ_GAMMA = 0.9
+TOEPLITZ_BAND = 128
+
+OPERATOR_NAMES = ("causal", "retentive", "toeplitz", "linear", "fourier")
+
+
+def _linear_proj(d: int, d_state: int) -> jnp.ndarray:
+    """Fixed (seeded) low-rank projection for linear attention's phi."""
+    rng = np.random.RandomState(7)
+    return jnp.asarray(rng.randn(d, d_state) * (1.0 / np.sqrt(d)), jnp.float32)
+
+
+def attention_op(
+    name: str, d: int = D_HEAD, d_state: int = D_STATE
+) -> Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]:
+    """Return the single-head operator ``fn(q, k, v) -> y`` for ``name``.
+
+    Operator hyper-parameters (decay rates, band, projection) are baked in
+    as compile-time constants so each artifact is self-contained.
+    """
+    if name == "causal":
+        return causal_attention
+    if name == "retentive":
+        return functools.partial(retentive_attention, gamma=RETENTIVE_GAMMA)
+    if name == "toeplitz":
+        return functools.partial(
+            toeplitz_attention, band=TOEPLITZ_BAND, gamma=TOEPLITZ_GAMMA
+        )
+    if name == "linear":
+        proj = _linear_proj(d, d_state)
+        return lambda q, k, v: linear_attention(q, k, v, proj)
+    if name == "fourier":
+        return fourier_attention
+    raise ValueError(f"unknown operator {name!r}; expected one of {OPERATOR_NAMES}")
+
+
+def make_operator_fn(name: str, d: int = D_HEAD, d_state: int = D_STATE):
+    """Jittable single-head operator for AOT lowering: (q, k, v) -> (y,)."""
+    op = attention_op(name, d, d_state)
+
+    def fn(q, k, v):
+        return (op(q, k, v),)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Transformer block
+# ---------------------------------------------------------------------------
+
+
+def init_block_params(
+    seed: int, d_model: int, n_heads: int, d_ff: int
+) -> dict[str, jnp.ndarray]:
+    """Seeded block parameters (served weights are fixed per artifact)."""
+    rng = np.random.RandomState(seed)
+
+    def w(*shape):
+        return jnp.asarray(rng.randn(*shape) * (1.0 / np.sqrt(shape[0])), jnp.float32)
+
+    return {
+        "wq": w(d_model, d_model),
+        "wk": w(d_model, d_model),
+        "wv": w(d_model, d_model),
+        "wo": w(d_model, d_model),
+        "w1": w(d_model, d_ff),
+        "b1": jnp.zeros((d_ff,), jnp.float32),
+        "w2": w(d_ff, d_model),
+        "b2": jnp.zeros((d_model,), jnp.float32),
+        "ln1_g": jnp.ones((d_model,), jnp.float32),
+        "ln1_b": jnp.zeros((d_model,), jnp.float32),
+        "ln2_g": jnp.ones((d_model,), jnp.float32),
+        "ln2_b": jnp.zeros((d_model,), jnp.float32),
+    }
+
+
+def _layer_norm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def multi_head_attention(
+    x: jnp.ndarray, params: dict, op_name: str, n_heads: int
+) -> jnp.ndarray:
+    """MHA with a pluggable causal operator: heads run under vmap so each
+    head lowers to the same Pallas kernel schedule."""
+    n, d_model = x.shape
+    d_h = d_model // n_heads
+    q = (x @ params["wq"]).reshape(n, n_heads, d_h).transpose(1, 0, 2)
+    k = (x @ params["wk"]).reshape(n, n_heads, d_h).transpose(1, 0, 2)
+    v = (x @ params["wv"]).reshape(n, n_heads, d_h).transpose(1, 0, 2)
+    op = attention_op(op_name, d_h)
+    y = jax.vmap(op)(q, k, v)  # (H, N, d_h)
+    y = y.transpose(1, 0, 2).reshape(n, d_model)
+    return y @ params["wo"]
+
+
+def transformer_block(
+    x: jnp.ndarray, params: dict, op_name: str, n_heads: int
+) -> jnp.ndarray:
+    """Pre-norm block: x + MHA(LN(x)); x + MLP(LN(x))."""
+    h = x + multi_head_attention(
+        _layer_norm(x, params["ln1_g"], params["ln1_b"]), params, op_name, n_heads
+    )
+    m = _layer_norm(h, params["ln2_g"], params["ln2_b"])
+    m = jax.nn.gelu(m @ params["w1"] + params["b1"]) @ params["w2"] + params["b2"]
+    return h + m
+
+
+def make_block_fn(op_name: str, d_model: int, n_heads: int, d_ff: int, seed: int = 11):
+    """Jittable transformer block with baked weights: (x,) -> (y,)."""
+    params = init_block_params(seed, d_model, n_heads, d_ff)
+
+    def fn(x):
+        return (transformer_block(x, params, op_name, n_heads),)
+
+    return fn

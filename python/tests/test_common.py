@@ -1,0 +1,75 @@
+"""Kernel block-policy tests: the DESIGN.md §Hardware-Adaptation contract —
+blocks are MXU/systolic-tile multiples and every grid step's working set
+fits the 4 MB scratchpad (VMEM analogue)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import common
+
+
+def test_tile_is_systolic_edge():
+    assert common.TILE == 128
+
+
+def test_q_block_caps_at_context():
+    assert common.q_block(64) == 64
+    assert common.q_block(128) == 128
+    assert common.q_block(8192) == 128
+
+
+@pytest.mark.parametrize("n", [128, 256, 512])
+def test_causal_kernel_vmem_budget(n):
+    """One causal grid step: q block + full K/V stream + score block, f32.
+    Must fit the 4 MiB scratchpad with double-buffering headroom (<50%)."""
+    d = 64
+    bq = common.q_block(n)
+    fp = common.vmem_footprint_bytes(
+        ((bq, d), jnp.float32),  # q block
+        ((n, d), jnp.float32),  # K
+        ((n, d), jnp.float32),  # V
+        ((bq, n), jnp.float32),  # scores
+        ((bq, d), jnp.float32),  # out
+    )
+    assert fp < common.SCRATCHPAD_BYTES // 2, f"N={n}: {fp} bytes"
+
+
+def test_toeplitz_window_vmem_independent_of_n():
+    d, band = 64, 128
+    bq = common.q_block(8192)
+    window = band + bq
+    fp = common.vmem_footprint_bytes(
+        ((bq, d), jnp.float32),
+        ((window, d), jnp.float32),
+        ((window, d), jnp.float32),
+        ((bq, window), jnp.float32),
+        ((bq, d), jnp.float32),
+    )
+    # Constant in N and tiny: the whole point of the banded schedule.
+    assert fp < common.SCRATCHPAD_BYTES // 8
+
+
+def test_linear_chunk_state_vmem():
+    d, r, c = 64, 16, 128
+    fp = common.vmem_footprint_bytes(
+        ((c, d), jnp.float32),
+        ((c, d), jnp.float32),
+        ((c, d), jnp.float32),
+        ((d, r), jnp.float32),
+        ((r, d), jnp.float32),  # state S
+        ((c, c), jnp.float32),  # intra-chunk scores
+        ((c, d), jnp.float32),  # out
+    )
+    assert fp < common.SCRATCHPAD_BYTES // 16, "chunk step is tiny by design"
+
+
+def test_footprint_arithmetic():
+    fp = common.vmem_footprint_bytes(((10, 10), jnp.float32), ((5,), jnp.bfloat16))
+    assert fp == 10 * 10 * 4 + 5 * 2
+
+
+def test_interpret_mode_is_forced():
+    # CPU PJRT cannot run Mosaic custom-calls: the flag must stay on.
+    assert common.INTERPRET is True

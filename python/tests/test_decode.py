@@ -1,0 +1,87 @@
+"""Decode-step kernels vs prefill oracles: token-by-token decoding must
+reproduce the prefill outputs row for row (the §II-A prefill/decode
+equivalence)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import decode, ref
+
+
+def _qkv(n, d, seed=0):
+    rng = np.random.RandomState(seed)
+    return tuple(jnp.asarray(rng.randn(n, d) * 0.5, jnp.float32) for _ in range(3))
+
+
+def _proj(d, r, seed=7):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(d, r) * 0.3, jnp.float32)
+
+
+def test_causal_decode_matches_prefill_last_row():
+    q, k, v = _qkv(128, 64)
+    prefill = ref.causal_attention(q, k, v)
+    step = decode.causal_decode(q[-1:], k, v)
+    np.testing.assert_allclose(
+        np.asarray(step[0]), np.asarray(prefill[-1]), rtol=2e-5, atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("t", [0, 1, 17, 63])
+def test_causal_decode_matches_prefill_any_position(t):
+    q, k, v = _qkv(64, 32, seed=3)
+    prefill = ref.causal_attention(q, k, v)
+    step = decode.causal_decode(q[t : t + 1], k[: t + 1], v[: t + 1])
+    np.testing.assert_allclose(
+        np.asarray(step[0]), np.asarray(prefill[t]), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_linear_decode_sequence_matches_prefill():
+    """Running the recurrent step over the whole sequence must equal the
+    parallel (cumsum) oracle — the linear-attention duality."""
+    n, d, r = 96, 32, 16
+    q, k, v = _qkv(n, d, seed=5)
+    p = _proj(d, r)
+    want = np.asarray(ref.linear_attention(q, k, v, p))
+    s = jnp.zeros((r, d), jnp.float32)
+    z = jnp.zeros((1, r), jnp.float32)
+    got = []
+    for t in range(n):
+        y, s, z = decode.linear_decode_step(
+            q[t : t + 1], k[t : t + 1], v[t : t + 1], p, s, z
+        )
+        got.append(np.asarray(y[0]))
+    np.testing.assert_allclose(np.stack(got), want, rtol=5e-4, atol=5e-4)
+
+
+def test_linear_decode_state_is_cumulative():
+    d, r = 32, 8
+    q, k, v = _qkv(4, d, seed=9)
+    p = _proj(d, r)
+    s = jnp.zeros((r, d), jnp.float32)
+    z = jnp.zeros((1, r), jnp.float32)
+    _, s1, z1 = decode.linear_decode_step(q[:1], k[:1], v[:1], p, s, z)
+    _, s2, z2 = decode.linear_decode_step(q[1:2], k[1:2], v[1:2], p, s1, z1)
+    assert float(jnp.sum(jnp.abs(s2))) > float(jnp.sum(jnp.abs(s1)))
+    assert float(z2.sum()) > float(z1.sum())
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.sampled_from([16, 48, 96]),
+    d=st.sampled_from([16, 32, 64]),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_hypothesis_causal_decode(n, d, seed):
+    q, k, v = _qkv(n, d, seed=seed)
+    prefill = ref.causal_attention(q, k, v)
+    t = n - 1
+    step = decode.causal_decode(q[t : t + 1], k, v)
+    np.testing.assert_allclose(
+        np.asarray(step[0]), np.asarray(prefill[t]), rtol=1e-4, atol=1e-4
+    )

@@ -1,0 +1,259 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal of the stack.
+
+Every Pallas kernel (interpret=True) must match its pure-jnp oracle in
+``compile.kernels.ref``. Fixed-shape tests pin the paper's configurations;
+hypothesis sweeps shapes/dtypes per the repo test policy.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    causal,
+    fourier,
+    linear,
+    ref,
+    retentive,
+    toeplitz,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _qkv(n: int, d: int, seed: int = 0, dtype=jnp.float32):
+    rng = np.random.RandomState(seed)
+    return tuple(jnp.asarray(rng.randn(n, d) * 0.5, dtype) for _ in range(3))
+
+
+def _proj(d: int, r: int, seed: int = 7):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(d, r) * 0.3, jnp.float32)
+
+
+def _assert_close(a, b, rtol=2e-5, atol=2e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-shape (paper configuration) tests
+# ---------------------------------------------------------------------------
+
+PAPER_SHAPES = [(128, 64), (256, 64), (512, 64)]
+
+
+@pytest.mark.parametrize("n,d", PAPER_SHAPES)
+def test_causal_matches_oracle(n, d):
+    q, k, v = _qkv(n, d)
+    _assert_close(causal.causal_attention(q, k, v), ref.causal_attention(q, k, v))
+
+
+@pytest.mark.parametrize("n,d", PAPER_SHAPES)
+def test_retentive_matches_oracle(n, d):
+    q, k, v = _qkv(n, d, seed=1)
+    _assert_close(
+        retentive.retentive_attention(q, k, v, gamma=0.97),
+        ref.retentive_attention(q, k, v, gamma=0.97),
+    )
+
+
+@pytest.mark.parametrize("n,d", PAPER_SHAPES)
+def test_toeplitz_matches_banded_oracle(n, d):
+    q, k, v = _qkv(n, d, seed=2)
+    _assert_close(
+        toeplitz.toeplitz_attention(q, k, v, band=128, gamma=0.9),
+        ref.toeplitz_banded_attention(q, k, v, band=128, gamma=0.9),
+    )
+
+
+@pytest.mark.parametrize("n,d", PAPER_SHAPES)
+def test_linear_matches_oracle(n, d):
+    q, k, v = _qkv(n, d, seed=3)
+    p = _proj(d, 16)
+    _assert_close(
+        linear.linear_attention(q, k, v, p),
+        ref.linear_attention(q, k, v, p),
+        rtol=2e-4,
+        atol=2e-4,
+    )
+
+
+@pytest.mark.parametrize("n,d", PAPER_SHAPES)
+def test_fourier_matches_oracle(n, d):
+    q, k, v = _qkv(n, d, seed=4)
+    _assert_close(
+        fourier.fourier_attention(q, k, v),
+        ref.fourier_attention(q, k, v),
+        rtol=2e-4,
+        atol=2e-4,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Semantics / invariants
+# ---------------------------------------------------------------------------
+
+
+def test_causal_first_row_is_v0():
+    """Position 0 can only attend to itself: y_0 == v_0."""
+    q, k, v = _qkv(128, 32, seed=5)
+    out = causal.causal_attention(q, k, v)
+    _assert_close(out[0], v[0])
+
+
+def test_causality_no_future_leak():
+    """Perturbing tokens at positions > t must not change outputs <= t."""
+    q, k, v = _qkv(256, 64, seed=6)
+    t = 100
+    k2 = k.at[t + 1 :].set(9.0)
+    v2 = v.at[t + 1 :].set(-9.0)
+    for fn in (
+        causal.causal_attention,
+        retentive.retentive_attention,
+        lambda a, b, c: toeplitz.toeplitz_attention(a, b, c, band=64),
+        lambda a, b, c: linear.linear_attention(a, b, c, _proj(64, 16)),
+    ):
+        _assert_close(fn(q, k, v)[: t + 1], fn(q, k2, v2)[: t + 1], rtol=1e-4, atol=1e-4)
+
+
+def test_retentive_reduces_to_causal_at_gamma_one():
+    """gamma = 1 removes the decay: retentive == full causal."""
+    q, k, v = _qkv(128, 64, seed=8)
+    _assert_close(
+        retentive.retentive_attention(q, k, v, gamma=1.0 - 1e-12),
+        ref.causal_attention(q, k, v),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_toeplitz_full_band_matches_full_oracle():
+    """band >= N makes the banded kernel exact against the full oracle."""
+    q, k, v = _qkv(128, 64, seed=9)
+    _assert_close(
+        toeplitz.toeplitz_attention(q, k, v, band=128, gamma=0.9),
+        ref.toeplitz_attention(q, k, v, gamma=0.9),
+    )
+
+
+def test_attention_rows_are_convex_combinations():
+    """Softmax rows sum to 1 => outputs stay in conv-hull bounds of V."""
+    q, k, v = _qkv(256, 64, seed=10)
+    for fn in (causal.causal_attention, retentive.retentive_attention):
+        out = np.asarray(fn(q, k, v))
+        assert out.max() <= float(np.max(v)) + 1e-4
+        assert out.min() >= float(np.min(v)) - 1e-4
+
+
+def test_linear_chunk_boundary_consistency():
+    """Chunked kernel must be invariant to where chunk boundaries fall:
+    N=256 (2 chunks of 128) must equal the oracle's global cumsum."""
+    q, k, v = _qkv(256, 64, seed=11)
+    p = _proj(64, 16)
+    _assert_close(
+        linear.linear_attention(q, k, v, p),
+        ref.linear_attention(q, k, v, p),
+        rtol=2e-4,
+        atol=2e-4,
+    )
+
+
+def test_fourier_linearity_in_v():
+    """Fourier attention is linear in V: f(q,k,2v) == 2 f(q,k,v)."""
+    q, k, v = _qkv(128, 32, seed=12)
+    _assert_close(
+        fourier.fourier_attention(q, k, 2.0 * v),
+        2.0 * fourier.fourier_attention(q, k, v),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis shape/dtype sweeps
+# ---------------------------------------------------------------------------
+
+_shapes = st.sampled_from([(64, 16), (64, 32), (128, 16), (128, 64), (256, 32)])
+_seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@settings(max_examples=12, deadline=None)
+@given(shape=_shapes, seed=_seeds)
+def test_hypothesis_causal(shape, seed):
+    n, d = shape
+    q, k, v = _qkv(n, d, seed=seed % 1000)
+    _assert_close(causal.causal_attention(q, k, v), ref.causal_attention(q, k, v))
+
+
+@settings(max_examples=12, deadline=None)
+@given(shape=_shapes, seed=_seeds, gamma=st.floats(min_value=0.8, max_value=0.999))
+def test_hypothesis_retentive(shape, seed, gamma):
+    n, d = shape
+    q, k, v = _qkv(n, d, seed=seed % 1000)
+    _assert_close(
+        retentive.retentive_attention(q, k, v, gamma=gamma),
+        ref.retentive_attention(q, k, v, gamma=gamma),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    shape=_shapes,
+    seed=_seeds,
+    band=st.sampled_from([32, 64, 128]),
+)
+def test_hypothesis_toeplitz(shape, seed, band):
+    n, d = shape
+    q, k, v = _qkv(n, d, seed=seed % 1000)
+    _assert_close(
+        toeplitz.toeplitz_attention(q, k, v, band=band),
+        ref.toeplitz_banded_attention(q, k, v, band=band),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(shape=_shapes, seed=_seeds, r=st.sampled_from([8, 16, 32]))
+def test_hypothesis_linear(shape, seed, r):
+    n, d = shape
+    q, k, v = _qkv(n, d, seed=seed % 1000)
+    p = _proj(d, r, seed=seed % 97)
+    _assert_close(
+        linear.linear_attention(q, k, v, p),
+        ref.linear_attention(q, k, v, p),
+        rtol=5e-4,
+        atol=5e-4,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(shape=_shapes, seed=_seeds)
+def test_hypothesis_fourier(shape, seed):
+    n, d = shape
+    q, k, v = _qkv(n, d, seed=seed % 1000)
+    _assert_close(
+        fourier.fourier_attention(q, k, v),
+        ref.fourier_attention(q, k, v),
+        rtol=2e-4,
+        atol=2e-4,
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(shape=st.sampled_from([(128, 64), (256, 32)]), seed=_seeds)
+def test_hypothesis_bfloat16_causal(shape, seed):
+    """bfloat16 inputs: kernel upcasts to f32 internally; loose tolerance."""
+    n, d = shape
+    q, k, v = _qkv(n, d, seed=seed % 1000, dtype=jnp.bfloat16)
+    got = causal.causal_attention(q, k, v).astype(jnp.float32)
+    want = ref.causal_attention(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    _assert_close(got, want, rtol=5e-2, atol=5e-2)

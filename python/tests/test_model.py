@@ -1,0 +1,101 @@
+"""L2 model tests: operator wrappers, MHA, transformer block shapes/semantics."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _x(n, d, seed=0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(n, d) * 0.5, jnp.float32)
+
+
+@pytest.mark.parametrize("op", model.OPERATOR_NAMES)
+def test_operator_fn_shape(op):
+    fn = model.make_operator_fn(op)
+    q, k, v = _x(128, 64, 1), _x(128, 64, 2), _x(128, 64, 3)
+    (y,) = fn(q, k, v)
+    assert y.shape == (128, 64)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_operator_fn_matches_ref_causal():
+    fn = model.make_operator_fn("causal")
+    q, k, v = _x(256, 64, 4), _x(256, 64, 5), _x(256, 64, 6)
+    np.testing.assert_allclose(
+        np.asarray(fn(q, k, v)[0]),
+        np.asarray(ref.causal_attention(q, k, v)),
+        rtol=2e-5,
+        atol=2e-5,
+    )
+
+
+@pytest.mark.parametrize("op", model.OPERATOR_NAMES)
+def test_block_shape_and_finite(op):
+    fn = model.make_block_fn(op, d_model=256, n_heads=4, d_ff=512)
+    x = _x(128, 256, 7)
+    (y,) = fn(x)
+    assert y.shape == (128, 256)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_block_is_deterministic():
+    fn = model.make_block_fn("causal", 256, 4, 512)
+    x = _x(128, 256, 8)
+    (a,) = fn(x)
+    (b,) = fn(x)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_block_params_seeded():
+    p1 = model.init_block_params(11, 256, 4, 512)
+    p2 = model.init_block_params(11, 256, 4, 512)
+    for k in p1:
+        np.testing.assert_array_equal(np.asarray(p1[k]), np.asarray(p2[k]))
+
+
+def test_block_causality():
+    """Block outputs at positions <= t must not depend on tokens > t."""
+    fn = model.make_block_fn("causal", 256, 4, 512)
+    x = _x(128, 256, 9)
+    t = 50
+    x2 = x.at[t + 1 :].set(3.0)
+    (a,) = fn(x)
+    (b,) = fn(x2)
+    np.testing.assert_allclose(
+        np.asarray(a[: t + 1]), np.asarray(b[: t + 1]), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_mha_head_split_consistency():
+    """One head of MHA with identity projections reduces to the raw op."""
+    n, d_model, h = 128, 64, 1
+    params = model.init_block_params(0, d_model, h, 128)
+    eye = jnp.eye(d_model, dtype=jnp.float32)
+    params = dict(params, wq=eye, wk=eye, wv=eye, wo=eye)
+    x = _x(n, d_model, 10)
+    got = model.multi_head_attention(x, params, "causal", h)
+    want = ref.causal_attention(x, x, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_attention_op_unknown_raises():
+    with pytest.raises(ValueError):
+        model.attention_op("nonexistent")
+
+
+def test_block_jit_roundtrip():
+    """The exact function aot.py lowers must be jittable with static shapes."""
+    fn = model.make_block_fn("linear", 256, 4, 512)
+    x = _x(128, 256, 12)
+    (eager,) = fn(x)
+    (jitted,) = jax.jit(fn)(x)
+    np.testing.assert_allclose(
+        np.asarray(eager), np.asarray(jitted), rtol=1e-5, atol=1e-5
+    )

@@ -1,0 +1,76 @@
+//! End-to-end serving bench: drive the coordinator with deployment-shaped
+//! request traces (paper §I workloads) — PJRT execution for compiled
+//! contexts, simulated NPU beyond — and report batched latency/throughput.
+
+use npuperf::config::OperatorKind;
+use npuperf::coordinator::{
+    workload_gen::{generate, Profile},
+    BackendKind, Coordinator, CoordinatorConfig, Request,
+};
+use npuperf::report::export;
+use npuperf::util::stats::Summary;
+
+fn run_profile(coord: &Coordinator, profile: Profile, count: usize) -> Vec<String> {
+    let trace = generate(profile, count, 0xBEEF);
+    let reqs: Vec<Request> = trace
+        .iter()
+        .enumerate()
+        .map(|(i, g)| Request { spec: g.spec, session: i as u64, inputs: None })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let responses = coord.submit_all(reqs).expect("serve");
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut pjrt = Summary::new();
+    let mut sim = Summary::new();
+    for r in &responses {
+        match r.backend {
+            BackendKind::Pjrt => pjrt.push(r.backend_ns / 1e6),
+            BackendKind::Simulate => sim.push(r.backend_ns / 1e6),
+        }
+    }
+    println!(
+        "{profile:?}: {count} reqs in {wall:.2}s ({:.0} req/s) — PJRT {} (mean {:.2} ms, p99 {:.2} ms), simulated {} (modeled mean {:.2} ms)",
+        count as f64 / wall,
+        pjrt.len(),
+        pjrt.mean(),
+        pjrt.percentile(99.0),
+        sim.len(),
+        sim.mean(),
+    );
+    vec![
+        format!("{profile:?}"),
+        count.to_string(),
+        format!("{wall:.3}"),
+        format!("{:.1}", count as f64 / wall),
+        pjrt.len().to_string(),
+        format!("{:.4}", pjrt.mean()),
+        sim.len().to_string(),
+        format!("{:.4}", sim.mean()),
+    ]
+}
+
+fn main() {
+    let artifact_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let cfg = if artifact_dir.join("manifest.txt").exists() {
+        CoordinatorConfig { artifact_dir: Some(artifact_dir), warmup: true, ..Default::default() }
+    } else {
+        eprintln!("artifacts missing: simulation-only serving bench");
+        CoordinatorConfig::default()
+    };
+    let coord = Coordinator::new(cfg).expect("coordinator");
+
+    let mut rows = Vec::new();
+    for profile in [Profile::Chat, Profile::Documents, Profile::Mixed] {
+        rows.push(run_profile(&coord, profile, 100));
+    }
+    println!("\n{}", coord.metrics_snapshot().unwrap());
+    let _ = OperatorKind::ALL;
+
+    export::write_csv(
+        export::report_dir().join("e2e_serving.csv"),
+        &["profile", "requests", "wall_s", "req_per_s", "pjrt_count", "pjrt_mean_ms", "sim_count", "sim_mean_ms"],
+        &rows,
+    )
+    .unwrap();
+}

@@ -1,0 +1,52 @@
+//! Extension bench: the co-design payoff — the paper's quadratic DRA
+//! kernel vs the hardware-aware chunkwise-recurrent retention form
+//! (ops::retentive_chunked). Quantifies the paper's conclusion that
+//! "throughput gains come from co-designing causal operators".
+
+use npuperf::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+use npuperf::model::EnergyModel;
+use npuperf::ops::{retentive, retentive_chunked};
+use npuperf::report::export;
+use npuperf::npu;
+
+fn main() {
+    let hw = NpuConfig::default();
+    let sim = SimConfig::default();
+    let energy = EnergyModel::default();
+    println!(
+        "{:>6} {:>14} {:>14} {:>8} {:>12} {:>12}",
+        "N", "quadratic ms", "chunkwise ms", "speedup", "quad mJ", "chunk mJ"
+    );
+    let mut rows = Vec::new();
+    for n in [512usize, 1024, 2048, 4096, 8192, 16_384] {
+        let spec = WorkloadSpec::new(OperatorKind::Retentive, n);
+        let quad = npu::run(&retentive::lower(&spec, &hw, &sim), &hw, &sim);
+        let chunk = npu::run(&retentive_chunked::lower(&spec, &hw, &sim), &hw, &sim);
+        let speedup = quad.span_ns / chunk.span_ns;
+        let qe = energy.evaluate(&quad).total_mj();
+        let ce = energy.evaluate(&chunk).total_mj();
+        println!(
+            "{:>6} {:>14.2} {:>14.2} {:>7.1}x {:>12.3} {:>12.3}",
+            n,
+            quad.latency_ms(),
+            chunk.latency_ms(),
+            speedup,
+            qe,
+            ce
+        );
+        rows.push(vec![
+            n.to_string(),
+            format!("{:.4}", quad.latency_ms()),
+            format!("{:.4}", chunk.latency_ms()),
+            format!("{speedup:.2}"),
+            format!("{qe:.4}"),
+            format!("{ce:.4}"),
+        ]);
+    }
+    export::write_csv(
+        export::report_dir().join("ext_chunked_retention.csv"),
+        &["n", "quadratic_ms", "chunkwise_ms", "speedup", "quad_mj", "chunk_mj"],
+        &rows,
+    )
+    .unwrap();
+}

@@ -1,0 +1,44 @@
+//! Extension bench: decode-phase throughput (paper §II-A Eq. 3).
+//!
+//! Sustained tokens/s for one autoregressive decode step at growing
+//! retained context — the memory-state tradeoff at decode time: KV
+//! operators degrade with context, recurrent/banded operators stay flat.
+
+use npuperf::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+use npuperf::ops::decode;
+use npuperf::report::export;
+
+fn main() {
+    let hw = NpuConfig::default();
+    let sim = SimConfig::default();
+    println!(
+        "{:<12} {:>8} {:>8} {:>8} {:>8} {:>8}   tokens/s per retained context",
+        "operator", "1K", "4K", "16K", "64K", "128K"
+    );
+    let contexts = [1024usize, 4096, 16_384, 65_536, 131_072];
+    let mut rows = Vec::new();
+    for op in OperatorKind::ALL {
+        let tps: Vec<f64> = contexts
+            .iter()
+            .map(|&n| decode::tokens_per_second(&WorkloadSpec::new(op, n), &hw, &sim))
+            .collect();
+        println!(
+            "{:<12} {:>8.0} {:>8.0} {:>8.0} {:>8.0} {:>8.0}",
+            op.paper_name(),
+            tps[0],
+            tps[1],
+            tps[2],
+            tps[3],
+            tps[4]
+        );
+        for (&n, &t) in contexts.iter().zip(&tps) {
+            rows.push(vec![op.name().to_string(), n.to_string(), format!("{t:.1}")]);
+        }
+    }
+    export::write_csv(
+        export::report_dir().join("ext_decode_phase.csv"),
+        &["op", "context", "tokens_per_s"],
+        &rows,
+    )
+    .unwrap();
+}

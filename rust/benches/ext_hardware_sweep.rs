@@ -1,0 +1,61 @@
+//! Extension bench: hardware what-if sweeps (co-design, DESIGN.md S24).
+//!
+//! How do the paper's bottlenecks move if the NPU changes? Sweeps
+//! scratchpad size, DMA bandwidth and SHAVE width, reporting the
+//! long-context latency of the bottlenecked operators.
+
+use npuperf::config::{parse, NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+use npuperf::report::export;
+use npuperf::{npu, ops};
+
+fn lat(op: OperatorKind, n: usize, hw: &NpuConfig) -> f64 {
+    let sim = SimConfig::default();
+    npu::run(&ops::lower(&WorkloadSpec::new(op, n), hw, &sim), hw, &sim).latency_ms()
+}
+
+fn main() {
+    let mut rows = Vec::new();
+
+    println!("scratchpad sweep (causal N=2048 — score planes are 2x8.4 MiB):");
+    for (label, bytes) in [("4m", "4m"), ("8m", "8m"), ("16m", "16m"), ("32m", "32m")] {
+        let mut hw = NpuConfig::default();
+        parse::apply(&mut hw, "scratchpad_bytes", bytes).unwrap();
+        let ms = lat(OperatorKind::Causal, 2048, &hw);
+        println!("  scratchpad={label:<4} -> {ms:>8.2} ms");
+        rows.push(vec!["scratchpad".into(), label.into(), format!("{ms:.3}")]);
+    }
+
+    println!("\nDMA allocation-overhead sweep (causal N=8192 — the §V churn):");
+    for alloc_ns in [20_000.0f64, 10_000.0, 5_000.0, 1_000.0] {
+        let mut hw = NpuConfig::default();
+        hw.dma_alloc_ns = alloc_ns;
+        let ms = lat(OperatorKind::Causal, 8192, &hw);
+        println!("  alloc={alloc_ns:>7.0} ns -> {ms:>8.2} ms");
+        rows.push(vec!["dma_alloc_ns".into(), format!("{alloc_ns}"), format!("{ms:.3}")]);
+    }
+
+    println!("\nSHAVE width sweep (retentive N=8192 — SHAVE-bound):");
+    for cores in [4usize, 8, 16, 32] {
+        let mut hw = NpuConfig::default();
+        hw.shave_cores = cores;
+        let ms = lat(OperatorKind::Retentive, 8192, &hw);
+        println!("  shave_cores={cores:<3} -> {ms:>8.2} ms");
+        rows.push(vec!["shave_cores".into(), cores.to_string(), format!("{ms:.3}")]);
+    }
+
+    println!("\nDMA bandwidth sweep (fourier N=4096 — DMA-heavy):");
+    for bw in [32.0f64, 64.0, 128.0, 256.0] {
+        let mut hw = NpuConfig::default();
+        hw.dma_bw_gbps = bw;
+        let ms = lat(OperatorKind::Fourier, 4096, &hw);
+        println!("  dma={bw:>5.0} GB/s -> {ms:>8.2} ms");
+        rows.push(vec!["dma_bw_gbps".into(), format!("{bw}"), format!("{ms:.3}")]);
+    }
+
+    export::write_csv(
+        export::report_dir().join("ext_hardware_sweep.csv"),
+        &["knob", "value", "latency_ms"],
+        &rows,
+    )
+    .unwrap();
+}

@@ -1,0 +1,39 @@
+//! Bench: regenerate paper Table II / Fig 4 — device utilization breakdown
+//! (DPU/DMA/SHAVE %) for Fourier and Retentive across context lengths.
+
+use npuperf::config::{NpuConfig, OperatorKind, SimConfig};
+use npuperf::report::{export, figures, tables};
+use npuperf::util::stats::bench;
+
+fn main() {
+    let hw = NpuConfig::default();
+    let sim = SimConfig::default();
+    println!("{}", tables::table2(&hw, &sim));
+    println!("{}", figures::fig4(&hw, &sim));
+
+    // CSV series for external plotting.
+    let mut rows = Vec::new();
+    for op in [OperatorKind::Fourier, OperatorKind::Retentive] {
+        for (n, dpu, dma, shave) in figures::fig4_series(op, &hw, &sim) {
+            rows.push(vec![
+                op.name().to_string(),
+                n.to_string(),
+                format!("{dpu:.2}"),
+                format!("{dma:.2}"),
+                format!("{shave:.2}"),
+            ]);
+        }
+    }
+    export::write_csv(
+        export::report_dir().join("table2_utilization.csv"),
+        &["op", "context", "dpu_pct", "dma_pct", "shave_pct"],
+        &rows,
+    )
+    .unwrap();
+
+    // Wall-clock cost of producing one full sweep (simulator throughput).
+    let r = bench("table2 sweep", 1, 3, || {
+        let _ = figures::fig4_series(OperatorKind::Retentive, &hw, &sim);
+    });
+    println!("[bench] {}: mean {:.1} ms/iter over {} iters", r.name, r.mean_ms(), r.iters);
+}

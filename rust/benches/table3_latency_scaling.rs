@@ -1,0 +1,31 @@
+//! Bench: regenerate paper Table III / Fig 5 — latency scaling of the four
+//! sub-quadratic operators from N = 128 to 8192.
+
+use npuperf::config::{NpuConfig, SimConfig};
+use npuperf::report::{export, figures, tables};
+use npuperf::util::stats::bench;
+
+fn main() {
+    let hw = NpuConfig::default();
+    let sim = SimConfig::default();
+    println!("{}", tables::table3(&hw, &sim));
+    println!("{}", figures::fig5(&hw, &sim));
+
+    let mut rows = Vec::new();
+    for (op, series) in figures::fig5_series(&hw, &sim) {
+        for (n, ms) in series {
+            rows.push(vec![op.name().to_string(), n.to_string(), format!("{ms:.4}")]);
+        }
+    }
+    export::write_csv(
+        export::report_dir().join("table3_latency.csv"),
+        &["op", "context", "latency_ms"],
+        &rows,
+    )
+    .unwrap();
+
+    let r = bench("table3 sweep", 1, 3, || {
+        let _ = figures::fig5_series(&hw, &sim);
+    });
+    println!("[bench] {}: mean {:.1} ms/iter over {} iters", r.name, r.mean_ms(), r.iters);
+}

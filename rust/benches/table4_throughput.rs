@@ -1,0 +1,30 @@
+//! Bench: regenerate paper Table IV — latency and operator throughput at
+//! short (512) and long (8192) context for all five operators.
+
+use npuperf::config::{NpuConfig, OperatorKind, SimConfig};
+use npuperf::report::{export, run_cell, tables};
+
+fn main() {
+    let hw = NpuConfig::default();
+    let sim = SimConfig::default();
+    println!("{}", tables::table4(&hw, &sim));
+
+    let mut rows = Vec::new();
+    for op in OperatorKind::ALL {
+        for n in [512usize, 8192] {
+            let r = run_cell(op, n, &hw, &sim);
+            rows.push(vec![
+                op.name().to_string(),
+                n.to_string(),
+                format!("{:.4}", r.latency_ms()),
+                format!("{:.1}", r.throughput_ops_s()),
+            ]);
+        }
+    }
+    export::write_csv(
+        export::report_dir().join("table4_throughput.csv"),
+        &["op", "context", "latency_ms", "throughput_ops_s"],
+        &rows,
+    )
+    .unwrap();
+}

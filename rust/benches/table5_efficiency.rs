@@ -1,0 +1,37 @@
+//! Bench: regenerate paper Table V / Fig 6 — pipeline stall, cache
+//! efficiency and state-reuse latency at long contexts.
+
+use npuperf::config::{NpuConfig, OperatorKind, SimConfig};
+use npuperf::report::{export, figures, run_cell, tables};
+
+fn main() {
+    let hw = NpuConfig::default();
+    let sim = SimConfig::default();
+    println!("{}", tables::table5(&hw, &sim));
+    println!("{}", figures::fig6(&hw, &sim));
+
+    let cells = [
+        (OperatorKind::Causal, 8192),
+        (OperatorKind::Retentive, 8192),
+        (OperatorKind::Fourier, 4096),
+        (OperatorKind::Linear, 8192),
+        (OperatorKind::Toeplitz, 4096),
+    ];
+    let mut rows = Vec::new();
+    for (op, n) in cells {
+        let r = run_cell(op, n, &hw, &sim);
+        rows.push(vec![
+            op.name().to_string(),
+            n.to_string(),
+            format!("{:.2}", r.stall.stall_frac() * 100.0),
+            format!("{:.2}", r.cache.efficiency() * 100.0),
+            format!("{:.4}", r.cache.reuse_ns / 1e6),
+        ]);
+    }
+    export::write_csv(
+        export::report_dir().join("table5_efficiency.csv"),
+        &["op", "context", "stall_pct", "cache_eff_pct", "reuse_ms"],
+        &rows,
+    )
+    .unwrap();
+}

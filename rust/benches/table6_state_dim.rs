@@ -1,0 +1,33 @@
+//! Bench: regenerate paper Table VI — latency impact of growing the state
+//! dimension d_state from 16 to 128 at fixed context N = 4096.
+
+use npuperf::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+use npuperf::report::{export, tables};
+use npuperf::{npu, ops};
+
+fn main() {
+    let hw = NpuConfig::default();
+    let sim = SimConfig::default();
+    println!("{}", tables::table6(&hw, &sim));
+
+    // Full sweep (not just the two paper points) for the CSV.
+    let mut rows = Vec::new();
+    for op in [OperatorKind::Linear, OperatorKind::Toeplitz, OperatorKind::Fourier] {
+        for d_state in [16usize, 32, 64, 128] {
+            let spec = WorkloadSpec::new(op, 4096).with_d_state(d_state);
+            let g = ops::lower(&spec, &hw, &sim);
+            let r = npu::run(&g, &hw, &sim);
+            rows.push(vec![
+                op.name().to_string(),
+                d_state.to_string(),
+                format!("{:.4}", r.latency_ms()),
+            ]);
+        }
+    }
+    export::write_csv(
+        export::report_dir().join("table6_state_dim.csv"),
+        &["op", "d_state", "latency_ms"],
+        &rows,
+    )
+    .unwrap();
+}

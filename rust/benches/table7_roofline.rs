@@ -1,0 +1,34 @@
+//! Bench: regenerate paper Table VII / Fig 7 — operational intensity,
+//! measured GOP/s and the effective-ceiling roofline.
+
+use npuperf::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+use npuperf::model::{calibrate, Roofline};
+use npuperf::report::{export, figures, run_cell, tables};
+
+fn main() {
+    let hw = NpuConfig::default();
+    let sim = SimConfig::default();
+    println!("{}", tables::table7(&hw, &sim));
+    println!("{}", figures::fig7(&hw, &sim));
+
+    let roofline = Roofline::new(calibrate(&hw, &sim));
+    let mut rows = Vec::new();
+    for op in OperatorKind::ALL {
+        let spec = WorkloadSpec::new(op, 4096);
+        let r = run_cell(op, 4096, &hw, &sim);
+        let p = roofline.place(&spec, &r, sim.elem_bytes);
+        rows.push(vec![
+            op.name().to_string(),
+            format!("{:.3}", p.intensity),
+            format!("{:.3}", p.measured_gops),
+            format!("{:.3}", p.bound_gops),
+            format!("{:.4}", p.roof_fraction()),
+        ]);
+    }
+    export::write_csv(
+        export::report_dir().join("table7_roofline.csv"),
+        &["op", "intensity_ops_per_byte", "measured_gops", "bound_gops", "roof_fraction"],
+        &rows,
+    )
+    .unwrap();
+}

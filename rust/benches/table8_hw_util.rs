@@ -1,0 +1,34 @@
+//! Bench: regenerate paper Table VIII / Fig 8 — stall / cache efficiency /
+//! compute utilization at N = 4096 for all five operators.
+
+use npuperf::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+use npuperf::model::{calibrate, Roofline};
+use npuperf::report::{export, figures, run_cell, tables};
+
+fn main() {
+    let hw = NpuConfig::default();
+    let sim = SimConfig::default();
+    println!("{}", tables::table8(&hw, &sim));
+    println!("{}", figures::fig8(&hw, &sim));
+
+    let ceilings = calibrate(&hw, &sim);
+    let roofline = Roofline::new(ceilings);
+    let mut rows = Vec::new();
+    for op in OperatorKind::ALL {
+        let spec = WorkloadSpec::new(op, 4096);
+        let r = run_cell(op, 4096, &hw, &sim);
+        let p = roofline.place(&spec, &r, sim.elem_bytes);
+        rows.push(vec![
+            op.name().to_string(),
+            format!("{:.2}", r.stall.stall_frac() * 100.0),
+            format!("{:.2}", r.cache.efficiency() * 100.0),
+            format!("{:.2}", p.measured_gops / ceilings.pi_eff_gops * 100.0),
+        ]);
+    }
+    export::write_csv(
+        export::report_dir().join("table8_hw_util.csv"),
+        &["op", "stall_pct", "cache_eff_pct", "compute_util_pct"],
+        &rows,
+    )
+    .unwrap();
+}

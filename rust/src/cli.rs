@@ -1,0 +1,386 @@
+//! Hand-rolled CLI (no clap in the offline crate set).
+//!
+//! ```text
+//! npuperf tables                 # all paper tables, ours vs published
+//! npuperf table <1..8>           # one table
+//! npuperf figures                # figs 3-8
+//! npuperf simulate <op> <N> [--d-state D] [--offload] [--no-double-buffer]
+//! npuperf roofline               # calibation + fig 7
+//! npuperf masks [N]              # fig 3
+//! npuperf rank <N>               # cost-model operator ranking (§V)
+//! npuperf chunking <N>           # chunked-prefill plan sweep (§V)
+//! npuperf validate [dir]         # golden-validate every artifact via PJRT
+//! npuperf serve [dir]            # demo serving loop over the artifacts
+//! npuperf hw                     # table 1
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+use crate::coordinator::{self, chunking, Coordinator, CoordinatorConfig, Request};
+use crate::model::{calibrate, Roofline};
+use crate::report::{figures, tables};
+use crate::{npu, ops};
+
+/// Entry point used by `main`.
+pub fn run(args: &[String]) -> Result<String> {
+    let mut hw = NpuConfig::default();
+    let mut sim = SimConfig::default();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest: Vec<&str> = args.iter().skip(1).map(String::as_str).collect();
+    // Global-ish flags consumed by simulate.
+    let flag = |name: &str| rest.iter().any(|a| *a == name);
+    let opt = |name: &str| {
+        rest.iter().position(|a| *a == name).and_then(|i| rest.get(i + 1)).copied()
+    };
+    if flag("--offload") {
+        sim.offload_concat_to_cpu = true;
+    }
+    if flag("--no-double-buffer") {
+        sim.double_buffer = false;
+    }
+    // Hardware what-if overrides: --hw-config FILE and/or --hw key=value.
+    if let Some(path) = opt("--hw-config") {
+        hw = crate::config::parse::from_file(path)?;
+    }
+    for (i, a) in rest.iter().enumerate() {
+        if *a == "--hw" {
+            let kv = rest
+                .get(i + 1)
+                .ok_or_else(|| anyhow!("--hw expects key=value"))?;
+            let (k, v) =
+                kv.split_once('=').ok_or_else(|| anyhow!("--hw expects key=value"))?;
+            crate::config::parse::apply(&mut hw, k, v)?;
+        }
+    }
+
+    match cmd {
+        "help" | "--help" | "-h" => Ok(HELP.to_string()),
+        "hw" => Ok(tables::table1(&hw)),
+        "tables" => Ok(tables::all_tables(&hw, &sim)),
+        "table" => {
+            let which: u32 = rest
+                .first()
+                .ok_or_else(|| anyhow!("usage: npuperf table <1..8>"))?
+                .parse()?;
+            Ok(match which {
+                1 => tables::table1(&hw),
+                2 => tables::table2(&hw, &sim),
+                3 => tables::table3(&hw, &sim),
+                4 => tables::table4(&hw, &sim),
+                5 => tables::table5(&hw, &sim),
+                6 => tables::table6(&hw, &sim),
+                7 => tables::table7(&hw, &sim),
+                8 => tables::table8(&hw, &sim),
+                _ => bail!("table must be 1..8"),
+            })
+        }
+        "figures" => Ok([
+            figures::fig1(),
+            figures::fig2(&hw),
+            figures::fig3(32),
+            figures::fig4(&hw, &sim),
+            figures::fig5(&hw, &sim),
+            figures::fig6(&hw, &sim),
+            figures::fig7(&hw, &sim),
+            figures::fig8(&hw, &sim),
+        ]
+        .join("\n\n")),
+        "masks" => {
+            let n = rest.first().and_then(|s| s.parse().ok()).unwrap_or(32);
+            Ok(figures::fig3(n))
+        }
+        "simulate" => {
+            let op: OperatorKind = rest
+                .first()
+                .ok_or_else(|| anyhow!("usage: npuperf simulate <op> <N>"))?
+                .parse()
+                .map_err(|e: String| anyhow!(e))?;
+            let n: usize = rest
+                .get(1)
+                .ok_or_else(|| anyhow!("usage: npuperf simulate <op> <N>"))?
+                .parse()?;
+            let d_state = rest
+                .iter()
+                .position(|a| *a == "--d-state")
+                .and_then(|i| rest.get(i + 1))
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(16);
+            let spec = WorkloadSpec::new(op, n).with_d_state(d_state);
+            let g = ops::lower(&spec, &hw, &sim);
+            let r = npu::run(&g, &hw, &sim);
+            let [dpu, dma, shave] = r.utilization();
+            Ok(format!(
+                "{spec}\n  latency      {:.3} ms\n  throughput   {:.0} ops/s\n  \
+                 utilization  DPU {:.1}% / DMA {:.1}% / SHAVE {:.1}%  -> {}\n  \
+                 stall        {:.1}%\n  cache eff    {:.1}%\n  reuse        {:.3} ms\n  \
+                 achieved     {:.1} GOP/s over {} DMA bytes\n  graph        {} prims",
+                r.latency_ms(),
+                r.throughput_ops_s(),
+                dpu * 100.0,
+                dma * 100.0,
+                shave * 100.0,
+                r.bottleneck(),
+                r.stall.stall_frac() * 100.0,
+                r.cache.efficiency() * 100.0,
+                r.cache.reuse_ns / 1e6,
+                r.achieved_gops(),
+                r.dma_bytes,
+                r.prim_count.iter().sum::<u64>(),
+            ))
+        }
+        "roofline" => {
+            let c = calibrate(&hw, &sim);
+            let _ = Roofline::new(c);
+            Ok(format!(
+                "Effective ceilings (calibrated on the simulator, paper §IV-A):\n  \
+                 pi_eff   {:.0} GOP/s  ({:.1}% of {:.0} nominal; paper: 500 = 5%)\n  \
+                 beta_eff {:.2} GB/s   ({:.1}% of {:.0} nominal; paper: 3.2 = 5%)\n  \
+                 I_crit   {:.0} Ops/Byte (paper: 156)\n\n{}",
+                c.pi_eff_gops,
+                100.0 * c.compute_derate(),
+                c.pi_nominal_gops,
+                c.beta_eff_gbps,
+                100.0 * c.bandwidth_derate(),
+                c.beta_nominal_gbps,
+                c.i_crit(),
+                figures::fig7(&hw, &sim)
+            ))
+        }
+        "rank" => {
+            let n: usize = rest
+                .first()
+                .ok_or_else(|| anyhow!("usage: npuperf rank <N>"))?
+                .parse()?;
+            let router = coordinator::Router::standard();
+            let mut out = format!("Cost-model operator ranking at N={n}:\n");
+            for (i, (op, ms)) in router.rank_operators(n, &hw, &sim).iter().enumerate() {
+                out += &format!("  {}. {:<12} {:.3} ms\n", i + 1, op.paper_name(), ms);
+            }
+            Ok(out)
+        }
+        "chunking" => {
+            let n: usize = rest
+                .first()
+                .ok_or_else(|| anyhow!("usage: npuperf chunking <N>"))?
+                .parse()?;
+            let mut out = format!("Chunked-prefill sweep for N={n} (d=64):\n");
+            for c in [256usize, 512, 1024, 2048, 4096, 8192] {
+                if c > n.max(256) {
+                    continue;
+                }
+                let p = chunking::plan(n, c, 64, &hw);
+                out += &format!(
+                    "  C={:<5} chunks={:<3} peak={:<9} lat={:.2} ms{}\n",
+                    p.chunk,
+                    p.chunks,
+                    crate::util::fmt::bytes(p.peak_bytes),
+                    p.latency_ms,
+                    if p.overflows { "  [scratchpad overflow]" } else { "" }
+                );
+            }
+            let best = chunking::optimal_chunk(n, 64, &hw);
+            out += &format!(
+                "optimal chunk: {} ({}x peak-memory reduction vs monolithic; paper: 2048, 8x)\n",
+                best.chunk,
+                chunking::peak_memory_reduction(n, best.chunk, 64).round()
+            );
+            Ok(out)
+        }
+        "decode" => {
+            let op: OperatorKind = rest
+                .first()
+                .ok_or_else(|| anyhow!("usage: npuperf decode <op> <N>"))?
+                .parse()
+                .map_err(|e: String| anyhow!(e))?;
+            let n: usize = rest
+                .get(1)
+                .ok_or_else(|| anyhow!("usage: npuperf decode <op> <N>"))?
+                .parse()?;
+            let spec = WorkloadSpec::new(op, n);
+            let g = ops::decode::lower_step(&spec, &hw, &sim);
+            let r = npu::run(&g, &hw, &sim);
+            Ok(format!(
+                "{} decode step at retained context N={n}:\n  \
+                 per-token latency {:.3} ms -> {:.0} tokens/s sustained\n  \
+                 bottleneck {} ({} prims)",
+                op.paper_name(),
+                r.latency_ms(),
+                ops::decode::tokens_per_second(&spec, &hw, &sim),
+                r.bottleneck(),
+                g.len(),
+            ))
+        }
+        "trace" => {
+            let op: OperatorKind = rest
+                .first()
+                .ok_or_else(|| anyhow!("usage: npuperf trace <op> <N> [--out F]"))?
+                .parse()
+                .map_err(|e: String| anyhow!(e))?;
+            let n: usize = rest
+                .get(1)
+                .ok_or_else(|| anyhow!("usage: npuperf trace <op> <N> [--out F]"))?
+                .parse()?;
+            let out = opt("--out").unwrap_or("trace.json").to_string();
+            let spec = WorkloadSpec::new(op, n);
+            let g = ops::lower(&spec, &hw, &sim);
+            let trace = npu::simulate(&g, &hw, &sim);
+            let json = npu::trace_dump::to_chrome_trace(&g, &trace);
+            std::fs::write(&out, &json)?;
+            Ok(format!(
+                "wrote {} events ({} bytes) to {out} — open in chrome://tracing or Perfetto",
+                g.len(),
+                json.len()
+            ))
+        }
+        "energy" => {
+            let n: usize =
+                rest.first().and_then(|s| s.parse().ok()).unwrap_or(4096);
+            let m = crate::model::EnergyModel::default();
+            let mut out = format!(
+                "Energy per inference at N={n} (35 W envelope, LPDDR5X DRAM):\n"
+            );
+            for op in OperatorKind::ALL {
+                let spec = WorkloadSpec::new(op, n);
+                let g = ops::lower(&spec, &hw, &sim);
+                let r = npu::run(&g, &hw, &sim);
+                let e = m.evaluate(&r);
+                out += &format!(
+                    "  {:<12} {:>10.3} mJ  avg {:>5.1} W  {:>8.1} GOP/J  \
+                     (dpu {:.1}% shave {:.1}% dma {:.1}% dram {:.1}% idle {:.1}%)\n",
+                    op.paper_name(),
+                    e.total_mj(),
+                    m.average_power_w(&r),
+                    e.gops_per_joule(r.logical_ops),
+                    100.0 * e.dpu_j / e.total_j(),
+                    100.0 * e.shave_j / e.total_j(),
+                    100.0 * e.dma_j / e.total_j(),
+                    100.0 * e.dram_j / e.total_j(),
+                    100.0 * e.idle_j / e.total_j(),
+                );
+            }
+            Ok(out)
+        }
+        "plan-model" => {
+            let n: usize =
+                rest.first().and_then(|s| s.parse().ok()).unwrap_or(4096);
+            Ok(crate::model::llm::feasibility_report(n, &hw, &sim))
+        }
+        "validate" => {
+            let dir = rest.first().map(|s| s.to_string()).unwrap_or_else(|| "artifacts".into());
+            let mut rt = crate::runtime::HloRuntime::new(&dir)?;
+            let names: Vec<String> =
+                rt.manifest().entries.iter().map(|e| e.name.clone()).collect();
+            let mut out = format!("Validating {} artifacts on {}:\n", names.len(), rt.platform());
+            let mut worst = 0.0f32;
+            for name in names {
+                let diff = rt.validate(&name)?;
+                worst = worst.max(diff);
+                out += &format!("  {name:<28} max|Δ| = {diff:.2e}\n");
+            }
+            out += &format!("worst deviation: {worst:.2e}\n");
+            Ok(out)
+        }
+        "serve" => {
+            let dir = rest.first().map(|s| s.to_string()).unwrap_or_else(|| "artifacts".into());
+            let coord = Coordinator::new(CoordinatorConfig {
+                artifact_dir: Some(dir.into()),
+                ..CoordinatorConfig::default()
+            })?;
+            let mut reqs = Vec::new();
+            for (i, op) in OperatorKind::ALL.iter().enumerate() {
+                for n in [128usize, 256, 512, 2048] {
+                    reqs.push(Request {
+                        spec: WorkloadSpec::new(*op, n),
+                        session: i as u64 * 100 + n as u64,
+                        inputs: None,
+                    });
+                }
+            }
+            let total = reqs.len();
+            let t0 = std::time::Instant::now();
+            let responses = coord.submit_all(reqs)?;
+            let wall = t0.elapsed().as_secs_f64();
+            let pjrt = responses
+                .iter()
+                .filter(|r| r.backend == coordinator::BackendKind::Pjrt)
+                .count();
+            Ok(format!(
+                "served {total} requests in {wall:.2}s ({:.1} req/s) — {pjrt} on PJRT, {} simulated\n\n{}",
+                total as f64 / wall,
+                total - pjrt,
+                coord.metrics_snapshot()?
+            ))
+        }
+        other => bail!("unknown command {other:?}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "npuperf — NPU causal-operator performance modeling (paper reproduction)
+commands:
+  tables | table <1..8>     paper tables, ours vs published values
+  figures | masks [N]       paper figures 3-8
+  simulate <op> <N> [--d-state D] [--offload] [--no-double-buffer]
+  decode <op> <N>           one autoregressive decode step + tokens/s
+  trace <op> <N> [--out F]  export Chrome/Perfetto trace of the schedule
+  energy [N]                per-operator energy model (35 W envelope)
+  roofline                  effective-ceiling calibration + fig 7
+  rank <N>                  cost-model operator ranking
+  chunking <N>              chunked-prefill plan sweep
+  plan-model [N]            whole-LLM deployment feasibility per operator
+  validate [dir]            golden-validate AOT artifacts via PJRT
+  serve [dir]               demo serving run over the artifact inventory
+  hw                        hardware spec (table 1)
+global flags: --hw-config FILE | --hw key=value (repeatable) — what-if hardware";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_cmd(args: &[&str]) -> Result<String> {
+        run(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn help_lists_commands() {
+        let out = run_cmd(&["help"]).unwrap();
+        assert!(out.contains("simulate"));
+        assert!(out.contains("roofline"));
+    }
+
+    #[test]
+    fn simulate_parses_and_reports() {
+        let out = run_cmd(&["simulate", "toeplitz", "1024"]).unwrap();
+        assert!(out.contains("latency"));
+        assert!(out.contains("Toeplitz"));
+    }
+
+    #[test]
+    fn simulate_flags() {
+        let base = run_cmd(&["simulate", "fourier", "2048"]).unwrap();
+        let off = run_cmd(&["simulate", "fourier", "2048", "--offload"]).unwrap();
+        assert_ne!(base, off, "offload must change the report");
+    }
+
+    #[test]
+    fn rank_orders_operators() {
+        let out = run_cmd(&["rank", "4096"]).unwrap();
+        assert!(out.contains("1. Toeplitz") || out.contains("1. Linear"));
+    }
+
+    #[test]
+    fn chunking_reports_optimum() {
+        let out = run_cmd(&["chunking", "16384"]).unwrap();
+        assert!(out.contains("optimal chunk: 2048"), "{out}");
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run_cmd(&["bogus"]).is_err());
+    }
+
+    #[test]
+    fn bad_operator_errors() {
+        assert!(run_cmd(&["simulate", "nope", "128"]).is_err());
+    }
+}

@@ -1,0 +1,153 @@
+//! NPU hardware model parameters — paper Table I plus the microarchitectural
+//! cost constants the event-driven simulator charges.
+//!
+//! The defaults describe the paper's testbed: a 10 TOPS @ 35 W NPU with a
+//! 128×128 INT8 systolic DPU, 8 SHAVE vector cores @ 1.4 GHz, a 4 MB
+//! software-managed scratchpad and a 64 GB/s DMA engine into 32 GB LPDDR5X.
+//!
+//! Overhead constants (issue/dispatch, DMA descriptor setup, buffer
+//! allocation penalties, systolic fill/drain) are what produce the paper's
+//! *effective* ceilings (§IV-A: ~5 % of nominal); they are calibrated by
+//! `model::calibrate` microbenchmarks, not hard-coded into the roofline.
+
+/// Hardware description + cost model constants.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NpuConfig {
+    // ---- Table I headline numbers -------------------------------------
+    /// Systolic PE array edge (128 ⇒ 128×128 MACs).
+    pub pe_array: usize,
+    /// DPU clock in GHz. 0.305 GHz × 128×128 MACs × 2 ops ≈ 10 TOPS INT8.
+    pub dpu_clock_ghz: f64,
+    /// SHAVE core count.
+    pub shave_cores: usize,
+    /// SHAVE clock in GHz.
+    pub shave_clock_ghz: f64,
+    /// Effective f32 SIMD lanes per SHAVE core (4 of 8 issue slots sustain
+    /// element-wise streams once load/store overhead is charged).
+    pub shave_lanes: usize,
+    /// Software-managed scratchpad ("persistent state storage"), bytes.
+    pub scratchpad_bytes: u64,
+    /// Nominal DMA bandwidth, GB/s.
+    pub dma_bw_gbps: f64,
+    /// Global LPDDR5X capacity, bytes (bounds the KV cache in `state`).
+    pub dram_bytes: u64,
+
+    // ---- Microarchitectural overheads (effective-ceiling drivers) -----
+    /// Systolic array fill latency per tile stream, cycles.
+    pub dpu_fill_cycles: u64,
+    /// Systolic array drain latency per tile stream, cycles.
+    pub dpu_drain_cycles: u64,
+    /// DSP descriptor-issue overhead charged per DPU primitive, ns.
+    pub dpu_issue_ns: f64,
+    /// FP16 throughput relative to INT8 (paper benchmarks at 16-bit).
+    pub fp16_rate: f64,
+    /// SHAVE op dispatch overhead, ns.
+    pub shave_issue_ns: f64,
+    /// Cycles per element for transcendental ops (exp in softmax).
+    pub shave_exp_cycles: f64,
+    /// Cycles per element for simple elementwise ops (mul/add/scale).
+    pub shave_simple_cycles: f64,
+    /// Row length a SHAVE core reduces in one pass; longer softmax rows
+    /// need hierarchical merge passes with scratchpad re-traversals (this
+    /// is what turns Retentive SHAVE-bound past N = 1024, Table II).
+    pub shave_reduce_span: usize,
+    /// DMA descriptor setup per transfer, ns.
+    pub dma_setup_ns: f64,
+    /// Extra penalty when the destination buffer is freshly allocated
+    /// (the §V "allocation/deallocation of large buffers" overhead).
+    pub dma_alloc_ns: f64,
+    /// Host CPU memcpy bandwidth for the §V concat-offload ablation, GB/s.
+    pub cpu_memcpy_gbps: f64,
+    /// Host CPU op issue overhead, ns.
+    pub cpu_issue_ns: f64,
+}
+
+impl Default for NpuConfig {
+    fn default() -> Self {
+        Self {
+            pe_array: 128,
+            dpu_clock_ghz: 0.305,
+            shave_cores: 8,
+            shave_clock_ghz: 1.4,
+            shave_lanes: 4,
+            scratchpad_bytes: 4 * 1024 * 1024,
+            dma_bw_gbps: 64.0,
+            dram_bytes: 32 * 1024 * 1024 * 1024,
+            dpu_fill_cycles: 128,
+            dpu_drain_cycles: 128,
+            dpu_issue_ns: 5_000.0,
+            fp16_rate: 0.5,
+            shave_issue_ns: 1_000.0,
+            shave_exp_cycles: 12.0,
+            shave_simple_cycles: 2.0,
+            shave_reduce_span: 512,
+            dma_setup_ns: 1_500.0,
+            dma_alloc_ns: 20_000.0,
+            cpu_memcpy_gbps: 8.0,
+            cpu_issue_ns: 1_000.0,
+        }
+    }
+}
+
+impl NpuConfig {
+    /// Nominal INT8 compute peak, GOP/s (Table I: ~10 TOPS).
+    pub fn peak_int8_gops(&self) -> f64 {
+        (self.pe_array * self.pe_array) as f64 * 2.0 * self.dpu_clock_ghz
+    }
+
+    /// Nominal FP16 compute peak, GOP/s.
+    pub fn peak_fp16_gops(&self) -> f64 {
+        self.peak_int8_gops() * self.fp16_rate
+    }
+
+    /// Nominal DMA bandwidth, bytes/ns.
+    pub fn dma_bytes_per_ns(&self) -> f64 {
+        self.dma_bw_gbps // GB/s == bytes/ns
+    }
+
+    /// Aggregate SHAVE element rate for simple ops, elements/ns.
+    pub fn shave_simple_elems_per_ns(&self) -> f64 {
+        (self.shave_cores * self.shave_lanes) as f64 * self.shave_clock_ghz
+            / self.shave_simple_cycles
+    }
+
+    /// Aggregate SHAVE element rate for exp-class ops, elements/ns.
+    pub fn shave_exp_elems_per_ns(&self) -> f64 {
+        (self.shave_cores * self.shave_lanes) as f64 * self.shave_clock_ghz
+            / self.shave_exp_cycles
+    }
+
+    /// DPU cycle time in ns.
+    pub fn dpu_cycle_ns(&self) -> f64 {
+        1.0 / self.dpu_clock_ghz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_table1() {
+        let hw = NpuConfig::default();
+        // 10 TOPS @ INT8 within 2%.
+        let peak = hw.peak_int8_gops();
+        assert!((peak - 10_000.0).abs() / 10_000.0 < 0.02, "peak={peak}");
+        assert_eq!(hw.scratchpad_bytes, 4 * 1024 * 1024);
+        assert_eq!(hw.shave_cores, 8);
+        assert_eq!(hw.dma_bw_gbps, 64.0);
+    }
+
+    #[test]
+    fn fp16_is_half_int8() {
+        let hw = NpuConfig::default();
+        assert!((hw.peak_fp16_gops() - hw.peak_int8_gops() / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shave_rates_positive_and_ordered() {
+        let hw = NpuConfig::default();
+        assert!(hw.shave_exp_elems_per_ns() < hw.shave_simple_elems_per_ns());
+        assert!(hw.shave_exp_elems_per_ns() > 0.0);
+    }
+}

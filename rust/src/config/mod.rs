@@ -1,0 +1,11 @@
+//! Configuration: hardware spec (paper Table I), simulator knobs, and
+//! workload descriptions.
+
+pub mod hw;
+pub mod parse;
+pub mod sim;
+pub mod workload;
+
+pub use hw::NpuConfig;
+pub use sim::SimConfig;
+pub use workload::{OperatorKind, WorkloadSpec};

@@ -1,0 +1,129 @@
+//! Key=value config parsing for hardware what-if studies.
+//!
+//! `npuperf ... --hw-config FILE` (or `--hw key=value` pairs) overrides
+//! [`NpuConfig`] fields so the §V co-design questions — "what if the
+//! scratchpad were 8 MB?", "what if DMA setup were halved?" — become one
+//! command-line flag instead of a recompile. Lines are `key = value`,
+//! `#` comments allowed.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::hw::NpuConfig;
+
+/// Apply one `key=value` override to a config.
+pub fn apply(hw: &mut NpuConfig, key: &str, value: &str) -> Result<()> {
+    let f = || -> Result<f64> {
+        value.trim().parse::<f64>().map_err(|e| anyhow!("bad value for {key}: {e}"))
+    };
+    let u = || -> Result<u64> {
+        let v = value.trim();
+        // Accept unit suffixes for byte quantities: k/m/g (binary).
+        let (num, mult) = match v.to_ascii_lowercase() {
+            ref s if s.ends_with('g') => (&v[..v.len() - 1], 1u64 << 30),
+            ref s if s.ends_with('m') => (&v[..v.len() - 1], 1u64 << 20),
+            ref s if s.ends_with('k') => (&v[..v.len() - 1], 1u64 << 10),
+            _ => (v, 1),
+        };
+        Ok(num
+            .trim()
+            .parse::<u64>()
+            .map_err(|e| anyhow!("bad value for {key}: {e}"))?
+            * mult)
+    };
+    match key.trim() {
+        "pe_array" => hw.pe_array = u()? as usize,
+        "dpu_clock_ghz" => hw.dpu_clock_ghz = f()?,
+        "shave_cores" => hw.shave_cores = u()? as usize,
+        "shave_clock_ghz" => hw.shave_clock_ghz = f()?,
+        "shave_lanes" => hw.shave_lanes = u()? as usize,
+        "scratchpad_bytes" => hw.scratchpad_bytes = u()?,
+        "dma_bw_gbps" => hw.dma_bw_gbps = f()?,
+        "dram_bytes" => hw.dram_bytes = u()?,
+        "dpu_fill_cycles" => hw.dpu_fill_cycles = u()?,
+        "dpu_drain_cycles" => hw.dpu_drain_cycles = u()?,
+        "dpu_issue_ns" => hw.dpu_issue_ns = f()?,
+        "fp16_rate" => hw.fp16_rate = f()?,
+        "shave_issue_ns" => hw.shave_issue_ns = f()?,
+        "shave_exp_cycles" => hw.shave_exp_cycles = f()?,
+        "shave_simple_cycles" => hw.shave_simple_cycles = f()?,
+        "shave_reduce_span" => hw.shave_reduce_span = u()? as usize,
+        "dma_setup_ns" => hw.dma_setup_ns = f()?,
+        "dma_alloc_ns" => hw.dma_alloc_ns = f()?,
+        "cpu_memcpy_gbps" => hw.cpu_memcpy_gbps = f()?,
+        "cpu_issue_ns" => hw.cpu_issue_ns = f()?,
+        other => bail!("unknown hw config key {other:?}"),
+    }
+    Ok(())
+}
+
+/// Parse a whole config file of `key = value` lines over the defaults.
+pub fn from_file(path: &str) -> Result<NpuConfig> {
+    let text = std::fs::read_to_string(path)?;
+    let mut hw = NpuConfig::default();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        apply(&mut hw, k, v).map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+    }
+    Ok(hw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apply_overrides_fields() {
+        let mut hw = NpuConfig::default();
+        apply(&mut hw, "dma_bw_gbps", "128").unwrap();
+        apply(&mut hw, "scratchpad_bytes", "8m").unwrap();
+        apply(&mut hw, "shave_cores", "16").unwrap();
+        assert_eq!(hw.dma_bw_gbps, 128.0);
+        assert_eq!(hw.scratchpad_bytes, 8 << 20);
+        assert_eq!(hw.shave_cores, 16);
+    }
+
+    #[test]
+    fn unit_suffixes() {
+        let mut hw = NpuConfig::default();
+        apply(&mut hw, "scratchpad_bytes", "512k").unwrap();
+        assert_eq!(hw.scratchpad_bytes, 512 << 10);
+        apply(&mut hw, "dram_bytes", "16g").unwrap();
+        assert_eq!(hw.dram_bytes, 16 << 30);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut hw = NpuConfig::default();
+        assert!(apply(&mut hw, "warp_count", "32").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_with_comments() {
+        let dir = std::env::temp_dir().join(format!("npuperf-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("hw.cfg");
+        std::fs::write(&p, "# bigger NPU\nscratchpad_bytes = 8m\ndma_bw_gbps = 128 # fast\n\n")
+            .unwrap();
+        let hw = from_file(p.to_str().unwrap()).unwrap();
+        assert_eq!(hw.scratchpad_bytes, 8 << 20);
+        assert_eq!(hw.dma_bw_gbps, 128.0);
+        // Unspecified fields keep defaults.
+        assert_eq!(hw.shave_cores, 8);
+    }
+
+    #[test]
+    fn malformed_line_errors_with_lineno() {
+        let dir = std::env::temp_dir().join(format!("npuperf-cfg2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.cfg");
+        std::fs::write(&p, "scratchpad_bytes 4m\n").unwrap();
+        let err = from_file(p.to_str().unwrap()).unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+    }
+}

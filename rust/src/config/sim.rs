@@ -1,0 +1,70 @@
+//! Simulator knobs that are policy (not hardware): tiling, buffering, and
+//! the §V ablation switches.
+
+/// Policy configuration for lowering + simulation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimConfig {
+    /// Matmul tile edge; matches the PE array (128).
+    pub tile: usize,
+    /// Double-buffer DMA streams (prefetch next tile while computing).
+    pub double_buffer: bool,
+    /// Chunk size for chunkwise lowerings (linear/retentive); §V finds the
+    /// 4 MB scratchpad optimum at 2048-token prefill chunks and we default
+    /// the *operator* chunk to one tile row.
+    pub chunk: usize,
+    /// §V ablation: offload tensor-concat traffic to the host CPU instead
+    /// of the NPU DMA engine (paper: −32 % Fourier latency).
+    pub offload_concat_to_cpu: bool,
+    /// Precision in bytes per element (paper benchmarks 16-bit ⇒ 2).
+    pub elem_bytes: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            tile: 128,
+            double_buffer: true,
+            chunk: 128,
+            offload_concat_to_cpu: false,
+            elem_bytes: 2,
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn with_offload(mut self, on: bool) -> Self {
+        self.offload_concat_to_cpu = on;
+        self
+    }
+
+    pub fn with_double_buffer(mut self, on: bool) -> Self {
+        self.double_buffer = on;
+        self
+    }
+
+    pub fn with_chunk(mut self, chunk: usize) -> Self {
+        self.chunk = chunk;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_setup() {
+        let c = SimConfig::default();
+        assert_eq!(c.tile, 128);
+        assert_eq!(c.elem_bytes, 2, "paper benchmarks at 16-bit precision");
+        assert!(!c.offload_concat_to_cpu);
+    }
+
+    #[test]
+    fn builders_compose() {
+        let c = SimConfig::default().with_offload(true).with_chunk(256);
+        assert!(c.offload_concat_to_cpu);
+        assert_eq!(c.chunk, 256);
+        assert!(c.double_buffer);
+    }
+}

@@ -1,0 +1,156 @@
+//! Workload descriptions: which causal operator, at what shape.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// The five causal inference operators the paper characterizes (§II-C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OperatorKind {
+    /// Full Causal Mask attention — the quadratic baseline.
+    Causal,
+    /// Retentive decay attention (DRA) — chunkwise-recurrent lowering.
+    Retentive,
+    /// Band-limited Toeplitz structured attention.
+    Toeplitz,
+    /// Causal linear attention with low-rank phi.
+    Linear,
+    /// Fourier structured attention (frequency-domain product).
+    Fourier,
+}
+
+impl OperatorKind {
+    pub const ALL: [OperatorKind; 5] = [
+        OperatorKind::Causal,
+        OperatorKind::Retentive,
+        OperatorKind::Toeplitz,
+        OperatorKind::Linear,
+        OperatorKind::Fourier,
+    ];
+
+    /// Lower-case name, matching artifact file prefixes.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OperatorKind::Causal => "causal",
+            OperatorKind::Retentive => "retentive",
+            OperatorKind::Toeplitz => "toeplitz",
+            OperatorKind::Linear => "linear",
+            OperatorKind::Fourier => "fourier",
+        }
+    }
+
+    /// Display name used in the paper's tables.
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            OperatorKind::Causal => "Full Causal",
+            OperatorKind::Retentive => "Retentive",
+            OperatorKind::Toeplitz => "Toeplitz",
+            OperatorKind::Linear => "Linear",
+            OperatorKind::Fourier => "Fourier",
+        }
+    }
+}
+
+impl fmt::Display for OperatorKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for OperatorKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "causal" | "full" | "full-causal" => Ok(OperatorKind::Causal),
+            "retentive" | "dra" => Ok(OperatorKind::Retentive),
+            "toeplitz" | "tsa" => Ok(OperatorKind::Toeplitz),
+            "linear" | "cla" => Ok(OperatorKind::Linear),
+            "fourier" | "fsa" => Ok(OperatorKind::Fourier),
+            other => Err(format!(
+                "unknown operator {other:?}; expected one of \
+                 causal|retentive|toeplitz|linear|fourier"
+            )),
+        }
+    }
+}
+
+/// One microbenchmark subject: an operator at a concrete shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct WorkloadSpec {
+    pub op: OperatorKind,
+    /// Context length N.
+    pub n: usize,
+    /// Head dimension d_h (paper default 64).
+    pub d_head: usize,
+    /// State dimension d_state (paper default 16; §III-E sweeps to 128).
+    pub d_state: usize,
+}
+
+impl WorkloadSpec {
+    pub fn new(op: OperatorKind, n: usize) -> Self {
+        Self { op, n, d_head: 64, d_state: 16 }
+    }
+
+    pub fn with_d_state(mut self, d_state: usize) -> Self {
+        self.d_state = d_state;
+        self
+    }
+
+    pub fn with_d_head(mut self, d_head: usize) -> Self {
+        self.d_head = d_head;
+        self
+    }
+
+    /// Artifact name for the PJRT runtime (`<op>_n<N>_d<d_head>`).
+    pub fn artifact_name(&self) -> String {
+        format!("{}_n{}_d{}", self.op.name(), self.n, self.d_head)
+    }
+}
+
+impl fmt::Display for WorkloadSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} N={} d_h={} d_state={}",
+            self.op.paper_name(),
+            self.n,
+            self.d_head,
+            self.d_state
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_aliases() {
+        assert_eq!("causal".parse::<OperatorKind>().unwrap(), OperatorKind::Causal);
+        assert_eq!("FSA".parse::<OperatorKind>().unwrap(), OperatorKind::Fourier);
+        assert_eq!("dra".parse::<OperatorKind>().unwrap(), OperatorKind::Retentive);
+        assert_eq!("TSA".parse::<OperatorKind>().unwrap(), OperatorKind::Toeplitz);
+        assert_eq!("cla".parse::<OperatorKind>().unwrap(), OperatorKind::Linear);
+        assert!("bogus".parse::<OperatorKind>().is_err());
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for op in OperatorKind::ALL {
+            assert_eq!(op.name().parse::<OperatorKind>().unwrap(), op);
+        }
+    }
+
+    #[test]
+    fn artifact_name_matches_manifest_convention() {
+        let w = WorkloadSpec::new(OperatorKind::Linear, 256);
+        assert_eq!(w.artifact_name(), "linear_n256_d64");
+    }
+
+    #[test]
+    fn builders() {
+        let w = WorkloadSpec::new(OperatorKind::Fourier, 4096).with_d_state(128);
+        assert_eq!(w.d_state, 128);
+        assert_eq!(w.d_head, 64);
+    }
+}

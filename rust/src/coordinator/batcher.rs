@@ -1,0 +1,236 @@
+//! Dynamic batcher: groups pending requests by workload signature
+//! (operator, context, dims) so the executor runs cache-hot executables
+//! and the simulator amortizes lowering.
+//!
+//! Policy: a signature's batch is released when it reaches `max_batch` or
+//! its oldest entry has waited `max_wait_ns` (measured on a caller-supplied
+//! clock so tests are deterministic).
+
+use std::collections::HashMap;
+
+use crate::config::WorkloadSpec;
+
+/// A group of request ids sharing one workload signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    pub spec: WorkloadSpec,
+    pub request_ids: Vec<u64>,
+}
+
+#[derive(Debug)]
+struct Pending {
+    ids: Vec<u64>,
+    oldest_ns: u64,
+}
+
+/// Signature-keyed dynamic batcher.
+#[derive(Debug)]
+pub struct Batcher {
+    max_batch: usize,
+    max_wait_ns: u64,
+    pending: HashMap<WorkloadSpec, Pending>,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_wait_ns: u64) -> Self {
+        assert!(max_batch > 0);
+        Self { max_batch, max_wait_ns, pending: HashMap::new() }
+    }
+
+    /// Number of queued (unreleased) requests.
+    pub fn queued(&self) -> usize {
+        self.pending.values().map(|p| p.ids.len()).sum()
+    }
+
+    /// Enqueue a request; returns a batch immediately if it filled one.
+    pub fn push(&mut self, id: u64, spec: WorkloadSpec, now_ns: u64) -> Option<Batch> {
+        let entry = self
+            .pending
+            .entry(spec)
+            .or_insert_with(|| Pending { ids: Vec::new(), oldest_ns: now_ns });
+        if entry.ids.is_empty() {
+            entry.oldest_ns = now_ns;
+        }
+        entry.ids.push(id);
+        if entry.ids.len() >= self.max_batch {
+            let p = self.pending.remove(&spec).expect("just inserted");
+            return Some(Batch { spec, request_ids: p.ids });
+        }
+        None
+    }
+
+    /// Release every batch whose oldest entry exceeded the wait budget.
+    /// Deterministic order: sorted by signature.
+    pub fn poll_expired(&mut self, now_ns: u64) -> Vec<Batch> {
+        let mut due: Vec<WorkloadSpec> = self
+            .pending
+            .iter()
+            .filter(|(_, p)| now_ns.saturating_sub(p.oldest_ns) >= self.max_wait_ns)
+            .map(|(s, _)| *s)
+            .collect();
+        due.sort_by_key(|s| (s.op, s.n, s.d_head, s.d_state));
+        due.into_iter()
+            .map(|spec| {
+                let p = self.pending.remove(&spec).expect("present");
+                Batch { spec, request_ids: p.ids }
+            })
+            .collect()
+    }
+
+    /// Flush everything regardless of age (shutdown / test helper).
+    pub fn flush(&mut self) -> Vec<Batch> {
+        let mut specs: Vec<WorkloadSpec> = self.pending.keys().copied().collect();
+        specs.sort_by_key(|s| (s.op, s.n, s.d_head, s.d_state));
+        specs
+            .into_iter()
+            .map(|spec| {
+                let p = self.pending.remove(&spec).expect("present");
+                Batch { spec, request_ids: p.ids }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OperatorKind;
+    use crate::util::check::{forall, Rng};
+
+    fn spec(op: OperatorKind, n: usize) -> WorkloadSpec {
+        WorkloadSpec::new(op, n)
+    }
+
+    #[test]
+    fn fills_batch_at_max() {
+        let mut b = Batcher::new(3, 1_000_000);
+        assert!(b.push(1, spec(OperatorKind::Causal, 128), 0).is_none());
+        assert!(b.push(2, spec(OperatorKind::Causal, 128), 10).is_none());
+        let batch = b.push(3, spec(OperatorKind::Causal, 128), 20).unwrap();
+        assert_eq!(batch.request_ids, vec![1, 2, 3]);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn different_signatures_do_not_mix() {
+        let mut b = Batcher::new(2, 1_000_000);
+        b.push(1, spec(OperatorKind::Causal, 128), 0);
+        assert!(b.push(2, spec(OperatorKind::Linear, 128), 0).is_none());
+        assert!(b.push(3, spec(OperatorKind::Causal, 256), 0).is_none());
+        assert_eq!(b.queued(), 3);
+    }
+
+    #[test]
+    fn expiry_releases_old_batches() {
+        let mut b = Batcher::new(10, 100);
+        b.push(1, spec(OperatorKind::Toeplitz, 128), 0);
+        b.push(2, spec(OperatorKind::Toeplitz, 128), 50);
+        assert!(b.poll_expired(99).is_empty());
+        let out = b.poll_expired(100);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].request_ids, vec![1, 2]);
+    }
+
+    #[test]
+    fn expiry_timer_resets_after_release() {
+        let mut b = Batcher::new(10, 100);
+        b.push(1, spec(OperatorKind::Linear, 128), 0);
+        assert_eq!(b.poll_expired(150).len(), 1);
+        b.push(2, spec(OperatorKind::Linear, 128), 160);
+        assert!(b.poll_expired(200).is_empty(), "new batch must not inherit age");
+        assert_eq!(b.poll_expired(260).len(), 1);
+    }
+
+    #[test]
+    fn flush_returns_all_sorted() {
+        let mut b = Batcher::new(10, u64::MAX);
+        b.push(1, spec(OperatorKind::Fourier, 128), 0);
+        b.push(2, spec(OperatorKind::Causal, 128), 0);
+        let out = b.flush();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].spec.op, OperatorKind::Causal, "deterministic order");
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn property_no_request_lost_or_duplicated() {
+        forall(
+            "batcher conservation",
+            30,
+            |rng: &mut Rng| {
+                let n = rng.range(1, 60) as usize;
+                let ops = [OperatorKind::Causal, OperatorKind::Linear, OperatorKind::Toeplitz];
+                (0..n)
+                    .map(|i| {
+                        (
+                            i as u64,
+                            spec(*rng.choose(&ops), *rng.choose(&[128usize, 256])),
+                            rng.range(0, 1000),
+                        )
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |events| {
+                let mut b = Batcher::new(4, 100);
+                let mut seen = Vec::new();
+                let mut t = 0;
+                for &(id, s, dt) in events {
+                    t += dt;
+                    if let Some(batch) = b.push(id, s, t) {
+                        seen.extend(batch.request_ids);
+                    }
+                    for batch in b.poll_expired(t) {
+                        seen.extend(batch.request_ids);
+                    }
+                }
+                for batch in b.flush() {
+                    seen.extend(batch.request_ids);
+                }
+                seen.sort();
+                let want: Vec<u64> = (0..events.len() as u64).collect();
+                if seen == want {
+                    Ok(())
+                } else {
+                    Err(format!("ids {seen:?} != {want:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn property_batches_are_signature_pure() {
+        forall(
+            "batch purity",
+            20,
+            |rng: &mut Rng| {
+                (0..40)
+                    .map(|i| {
+                        let op = *rng.choose(&[OperatorKind::Causal, OperatorKind::Retentive]);
+                        (i as u64, spec(op, *rng.choose(&[128usize, 256, 512])))
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |reqs| {
+                let mut b = Batcher::new(3, u64::MAX);
+                let mut specs_by_id: std::collections::HashMap<u64, WorkloadSpec> =
+                    Default::default();
+                let mut batches = Vec::new();
+                for &(id, s) in reqs {
+                    specs_by_id.insert(id, s);
+                    if let Some(batch) = b.push(id, s, 0) {
+                        batches.push(batch);
+                    }
+                }
+                batches.extend(b.flush());
+                for batch in &batches {
+                    for id in &batch.request_ids {
+                        if specs_by_id[id] != batch.spec {
+                            return Err(format!("request {id} in wrong batch"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

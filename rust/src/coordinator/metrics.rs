@@ -1,0 +1,122 @@
+//! Serving metrics: per-operator latency summaries + throughput counters.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::config::OperatorKind;
+use crate::util::stats::Summary;
+
+/// Registry of per-operator serving metrics.
+#[derive(Debug)]
+pub struct Metrics {
+    start: Instant,
+    latency_ns: HashMap<OperatorKind, Summary>,
+    served: HashMap<OperatorKind, u64>,
+    pub batches: u64,
+    pub pjrt_requests: u64,
+    pub simulated_requests: u64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            start: Instant::now(),
+            latency_ns: HashMap::new(),
+            served: HashMap::new(),
+            batches: 0,
+            pjrt_requests: 0,
+            simulated_requests: 0,
+        }
+    }
+
+    pub fn record(&mut self, op: OperatorKind, latency_ns: f64) {
+        self.latency_ns.entry(op).or_default().push(latency_ns);
+        *self.served.entry(op).or_insert(0) += 1;
+    }
+
+    pub fn served(&self, op: OperatorKind) -> u64 {
+        self.served.get(&op).copied().unwrap_or(0)
+    }
+
+    pub fn total_served(&self) -> u64 {
+        self.served.values().sum()
+    }
+
+    pub fn latency(&self, op: OperatorKind) -> Option<&Summary> {
+        self.latency_ns.get(&op)
+    }
+
+    /// Requests per second since construction.
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.total_served() as f64 / secs
+        }
+    }
+
+    /// Human-readable snapshot (one line per operator).
+    pub fn snapshot(&self) -> String {
+        let mut out = String::new();
+        let mut ops: Vec<_> = self.latency_ns.keys().copied().collect();
+        ops.sort();
+        for op in ops {
+            let s = &self.latency_ns[&op];
+            out += &format!(
+                "{:<10} served={:<5} mean={:.3} ms  p50={:.3} ms  p99={:.3} ms\n",
+                op.name(),
+                self.served(op),
+                s.mean() / 1e6,
+                s.median() / 1e6,
+                s.percentile(99.0) / 1e6,
+            );
+        }
+        out += &format!(
+            "batches={} pjrt={} simulated={} total={}\n",
+            self.batches, self.pjrt_requests, self.simulated_requests, self.total_served()
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut m = Metrics::new();
+        m.record(OperatorKind::Causal, 1e6);
+        m.record(OperatorKind::Causal, 3e6);
+        m.record(OperatorKind::Linear, 5e5);
+        assert_eq!(m.served(OperatorKind::Causal), 2);
+        assert_eq!(m.total_served(), 3);
+        let s = m.latency(OperatorKind::Causal).unwrap();
+        assert_eq!(s.mean(), 2e6);
+    }
+
+    #[test]
+    fn snapshot_mentions_all_ops() {
+        let mut m = Metrics::new();
+        m.record(OperatorKind::Toeplitz, 1e5);
+        m.record(OperatorKind::Fourier, 2e5);
+        let snap = m.snapshot();
+        assert!(snap.contains("toeplitz"));
+        assert!(snap.contains("fourier"));
+        assert!(snap.contains("total=2"));
+    }
+
+    #[test]
+    fn empty_metrics_are_sane() {
+        let m = Metrics::new();
+        assert_eq!(m.total_served(), 0);
+        assert!(m.latency(OperatorKind::Causal).is_none());
+    }
+}

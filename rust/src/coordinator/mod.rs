@@ -1,0 +1,28 @@
+//! L3 coordinator: the serving layer that drives operators end-to-end.
+//!
+//! The paper's contribution is a characterization + performance model, so
+//! L3 is the *consumer* of that model: a request router + dynamic batcher
+//! that serves causal-operator invocations, backed by
+//!
+//! - the **PJRT runtime** (real numerics) for contexts with AOT artifacts,
+//! - the **NPU simulator** (performance) for the long-context regime,
+//!
+//! plus the §V co-design machinery: a chunked-prefill scheduler bounded by
+//! the 4 MB scratchpad and a KV/recurrent-state manager implementing the
+//! memory-state tradeoff of Fig 1.
+
+pub mod batcher;
+pub mod chunking;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod state;
+pub mod workload_gen;
+
+pub use batcher::{Batch, Batcher};
+pub use chunking::{optimal_chunk, ChunkPlan};
+pub use metrics::Metrics;
+pub use router::{BackendKind, Router};
+pub use server::{Coordinator, CoordinatorConfig, Request, Response};
+pub use state::{SessionKind, StateManager};
+pub use workload_gen::{generate, GenRequest, Profile};

@@ -1,0 +1,126 @@
+//! Request router: pick the backend for a workload.
+//!
+//! Contexts with a compiled AOT artifact run on the **PJRT runtime** (real
+//! numerics); longer contexts run on the **NPU simulator** (the paper's
+//! microbenchmark regime, 1024-8192, where compiling interpret-mode Pallas
+//! HLO is neither needed nor meaningful on CPU). The router also exposes
+//! the cost-model advice the §V co-design discussion calls for: given a
+//! context length, which operator family is expected to be fastest.
+
+use crate::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+use crate::{npu, ops};
+
+/// Execution backend for one request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Real execution through the PJRT CPU client.
+    Pjrt,
+    /// Cycle-approximate NPU simulation.
+    Simulate,
+}
+
+/// Routing policy over the artifact inventory.
+#[derive(Clone, Debug)]
+pub struct Router {
+    /// Context lengths with compiled operator artifacts (sorted).
+    artifact_contexts: Vec<usize>,
+    artifact_d_head: usize,
+}
+
+impl Router {
+    pub fn new(mut artifact_contexts: Vec<usize>, artifact_d_head: usize) -> Self {
+        artifact_contexts.sort_unstable();
+        Self { artifact_contexts, artifact_d_head }
+    }
+
+    /// Router for the standard `make artifacts` inventory.
+    pub fn standard() -> Self {
+        Self::new(vec![128, 256, 512], 64)
+    }
+
+    /// Simulation-only router (no artifacts available).
+    pub fn simulate_only() -> Self {
+        Self::new(Vec::new(), 0)
+    }
+
+    pub fn route(&self, spec: &WorkloadSpec) -> BackendKind {
+        if self.artifact_contexts.binary_search(&spec.n).is_ok()
+            && spec.d_head == self.artifact_d_head
+            && spec.d_state == 16
+        {
+            BackendKind::Pjrt
+        } else {
+            BackendKind::Simulate
+        }
+    }
+
+    /// Cost-model advice (§V co-design): simulate every operator at `n` and
+    /// rank by latency. Returns (operator, predicted ms) sorted fastest
+    /// first.
+    pub fn rank_operators(
+        &self,
+        n: usize,
+        hw: &NpuConfig,
+        sim: &SimConfig,
+    ) -> Vec<(OperatorKind, f64)> {
+        let mut ranked: Vec<(OperatorKind, f64)> = OperatorKind::ALL
+            .iter()
+            .map(|&op| {
+                let spec = WorkloadSpec::new(op, n);
+                let g = ops::lower(&spec, hw, sim);
+                let r = npu::run(&g, hw, sim);
+                (op, r.latency_ms())
+            })
+            .collect();
+        ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        ranked
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_route_to_pjrt() {
+        let r = Router::standard();
+        let spec = WorkloadSpec::new(OperatorKind::Causal, 256);
+        assert_eq!(r.route(&spec), BackendKind::Pjrt);
+    }
+
+    #[test]
+    fn long_context_routes_to_simulator() {
+        let r = Router::standard();
+        for n in [1024, 4096, 8192] {
+            let spec = WorkloadSpec::new(OperatorKind::Causal, n);
+            assert_eq!(r.route(&spec), BackendKind::Simulate, "N={n}");
+        }
+    }
+
+    #[test]
+    fn nonstandard_dims_route_to_simulator() {
+        let r = Router::standard();
+        let spec = WorkloadSpec::new(OperatorKind::Linear, 256).with_d_state(128);
+        assert_eq!(r.route(&spec), BackendKind::Simulate);
+        let spec = WorkloadSpec::new(OperatorKind::Linear, 256).with_d_head(32);
+        assert_eq!(r.route(&spec), BackendKind::Simulate);
+    }
+
+    #[test]
+    fn simulate_only_never_routes_pjrt() {
+        let r = Router::simulate_only();
+        let spec = WorkloadSpec::new(OperatorKind::Toeplitz, 128);
+        assert_eq!(r.route(&spec), BackendKind::Simulate);
+    }
+
+    #[test]
+    fn ranking_prefers_structured_operators_at_long_context() {
+        // Paper conclusion: Toeplitz/Linear win the long-context regime.
+        let r = Router::standard();
+        let ranked = r.rank_operators(4096, &NpuConfig::default(), &SimConfig::default());
+        let top2: Vec<OperatorKind> = ranked[..2].iter().map(|x| x.0).collect();
+        assert!(top2.contains(&OperatorKind::Toeplitz));
+        assert!(top2.contains(&OperatorKind::Linear));
+        assert_eq!(ranked.last().unwrap().0, OperatorKind::Fourier, "worst scaler");
+    }
+}

@@ -1,0 +1,386 @@
+//! The coordinator itself: request intake → dynamic batching → routed
+//! dispatch (PJRT executor thread or NPU simulator) → metrics.
+//!
+//! Synchronous request API over a background serving thread: callers get a
+//! [`Response`] per request; the serving loop owns the batcher, router,
+//! state manager and metrics. The PJRT runtime (when artifacts are
+//! available) is confined to its own executor thread — the coordinator
+//! only holds the cloneable channel handle.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{NpuConfig, SimConfig, WorkloadSpec};
+use crate::npu::{self, ExecReport};
+use crate::ops;
+use crate::runtime::executor::{Executor, ExecutorHandle};
+use crate::runtime::Tensor;
+
+use super::batcher::Batcher;
+use super::metrics::Metrics;
+use super::router::{BackendKind, Router};
+use super::state::StateManager;
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub spec: WorkloadSpec,
+    /// Session carrying KV / recurrent state (opened on first use).
+    pub session: u64,
+    /// q/k/v tensors for PJRT-backed execution; `None` ⇒ simulate only.
+    pub inputs: Option<Vec<Tensor>>,
+}
+
+/// Outcome of one request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub spec: WorkloadSpec,
+    pub backend: BackendKind,
+    /// Real outputs (PJRT path only).
+    pub outputs: Option<Vec<Tensor>>,
+    /// Wall-clock time inside the backend, ns.
+    pub backend_ns: f64,
+    /// Full simulator report (simulate path only).
+    pub sim_report: Option<ExecReport>,
+    /// Batch size this request was served in.
+    pub batch_size: usize,
+}
+
+/// Coordinator construction parameters.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub hw: NpuConfig,
+    pub sim: SimConfig,
+    /// Artifact directory; `None` ⇒ simulation-only deployment.
+    pub artifact_dir: Option<std::path::PathBuf>,
+    /// Pre-compile every artifact at startup so first requests do not pay
+    /// PJRT compile latency (§Perf: compiles dominated cold-start serving).
+    pub warmup: bool,
+    pub max_batch: usize,
+    pub max_wait_ns: u64,
+    /// Global state budget (defaults to Table I's 32 GB).
+    pub state_budget_bytes: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        let hw = NpuConfig::default();
+        Self {
+            state_budget_bytes: hw.dram_bytes,
+            hw,
+            sim: SimConfig::default(),
+            artifact_dir: None,
+            warmup: false,
+            max_batch: 8,
+            max_wait_ns: 2_000_000, // 2 ms batching window
+        }
+    }
+}
+
+struct Job {
+    request: Request,
+    reply: mpsc::Sender<Result<Response>>,
+    enqueued: Instant,
+}
+
+enum Ctl {
+    Submit(Job),
+    Snapshot(mpsc::Sender<String>),
+    Shutdown,
+}
+
+/// The L3 coordinator.
+pub struct Coordinator {
+    tx: mpsc::Sender<Ctl>,
+    join: Option<JoinHandle<()>>,
+    /// Keeps the executor thread alive for the coordinator's lifetime.
+    _executor: Option<Executor>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig) -> Result<Self> {
+        let (executor, exec_handle, router) = match &cfg.artifact_dir {
+            Some(dir) => {
+                let executor = Executor::spawn(dir.clone())?;
+                let handle = executor.handle();
+                if cfg.warmup {
+                    let manifest = crate::runtime::Manifest::load(dir)?;
+                    for entry in &manifest.entries {
+                        handle.warmup(&entry.name)?;
+                    }
+                }
+                (Some(executor), Some(handle), Router::standard())
+            }
+            None => (None, None, Router::simulate_only()),
+        };
+        let (tx, rx) = mpsc::channel::<Ctl>();
+        let join = std::thread::Builder::new()
+            .name("coordinator".into())
+            .spawn(move || serve_loop(cfg, rx, exec_handle, router))?;
+        Ok(Self { tx, join: Some(join), _executor: executor })
+    }
+
+    /// Submit a request and wait for its response.
+    pub fn submit(&self, request: Request) -> Result<Response> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Ctl::Submit(Job { request, reply, enqueued: Instant::now() }))
+            .map_err(|_| anyhow!("coordinator stopped"))?;
+        rx.recv().map_err(|_| anyhow!("coordinator dropped reply"))?
+    }
+
+    /// Submit many requests concurrently; preserves input order.
+    pub fn submit_all(&self, requests: Vec<Request>) -> Result<Vec<Response>> {
+        let mut rxs = Vec::with_capacity(requests.len());
+        for request in requests {
+            let (reply, rx) = mpsc::channel();
+            self.tx
+                .send(Ctl::Submit(Job { request, reply, enqueued: Instant::now() }))
+                .map_err(|_| anyhow!("coordinator stopped"))?;
+            rxs.push(rx);
+        }
+        rxs.into_iter()
+            .map(|rx| rx.recv().map_err(|_| anyhow!("coordinator dropped reply"))?)
+            .collect()
+    }
+
+    /// Metrics snapshot (formatted).
+    pub fn metrics_snapshot(&self) -> Result<String> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Ctl::Snapshot(tx)).map_err(|_| anyhow!("coordinator stopped"))?;
+        rx.recv().map_err(|_| anyhow!("coordinator dropped reply"))
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Ctl::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn serve_loop(
+    cfg: CoordinatorConfig,
+    rx: mpsc::Receiver<Ctl>,
+    exec: Option<ExecutorHandle>,
+    router: Router,
+) {
+    let mut batcher = Batcher::new(cfg.max_batch, cfg.max_wait_ns);
+    let mut metrics = Metrics::new();
+    let mut state = StateManager::new(cfg.state_budget_bytes);
+    let mut jobs: std::collections::HashMap<u64, Job> = Default::default();
+    let mut next_id: u64 = 0;
+    let t0 = Instant::now();
+
+    let dispatch = |batch: super::batcher::Batch,
+                    jobs: &mut std::collections::HashMap<u64, Job>,
+                    metrics: &mut Metrics,
+                    state: &mut StateManager| {
+        metrics.batches += 1;
+        let backend = router.route(&batch.spec);
+        let size = batch.request_ids.len();
+        // Simulate once per batch signature; PJRT executes each item.
+        let sim_report = if backend == BackendKind::Simulate {
+            let g = ops::lower(&batch.spec, &cfg.hw, &cfg.sim);
+            Some(npu::run(&g, &cfg.hw, &cfg.sim))
+        } else {
+            None
+        };
+        for id in batch.request_ids {
+            let Some(job) = jobs.remove(&id) else { continue };
+            let spec = job.request.spec;
+            state.open(job.request.session, spec.op, spec.d_head, spec.d_state);
+            state.append(job.request.session, spec.n);
+            let result = match backend {
+                BackendKind::Pjrt => {
+                    let inputs = job.request.inputs.clone().unwrap_or_else(|| {
+                        // Deterministic zeros when the caller only wants timing.
+                        let shape = vec![spec.n, spec.d_head];
+                        vec![
+                            Tensor::new(shape.clone(), vec![0.1; spec.n * spec.d_head]).unwrap();
+                            3
+                        ]
+                    });
+                    match exec.as_ref().expect("router gated on artifacts").execute(
+                        &spec.artifact_name(),
+                        inputs,
+                    ) {
+                        Ok(out) => {
+                            metrics.pjrt_requests += 1;
+                            Ok(Response {
+                                spec,
+                                backend,
+                                backend_ns: out.exec_ns,
+                                outputs: Some(out.outputs),
+                                sim_report: None,
+                                batch_size: size,
+                            })
+                        }
+                        Err(e) => Err(e),
+                    }
+                }
+                BackendKind::Simulate => {
+                    let report = sim_report.clone().expect("computed above");
+                    metrics.simulated_requests += 1;
+                    Ok(Response {
+                        spec,
+                        backend,
+                        backend_ns: report.span_ns,
+                        outputs: None,
+                        sim_report: Some(report),
+                        batch_size: size,
+                    })
+                }
+            };
+            metrics.record(spec.op, job.enqueued.elapsed().as_nanos() as f64);
+            let _ = job.reply.send(result);
+        }
+    };
+
+    loop {
+        // Wait up to the batching window for the next control message.
+        let msg = rx.recv_timeout(std::time::Duration::from_nanos(cfg.max_wait_ns));
+        let now_ns = t0.elapsed().as_nanos() as u64;
+        match msg {
+            Ok(Ctl::Submit(job)) => {
+                let id = next_id;
+                next_id += 1;
+                let spec = job.request.spec;
+                jobs.insert(id, job);
+                if let Some(batch) = batcher.push(id, spec, now_ns) {
+                    dispatch(batch, &mut jobs, &mut metrics, &mut state);
+                }
+            }
+            Ok(Ctl::Snapshot(tx)) => {
+                let mut snap = metrics.snapshot();
+                snap += &format!(
+                    "sessions={} state_bytes={} evictions={}\n",
+                    state.len(),
+                    state.total_bytes(),
+                    state.evictions
+                );
+                let _ = tx.send(snap);
+            }
+            Ok(Ctl::Shutdown) => {
+                for batch in batcher.flush() {
+                    dispatch(batch, &mut jobs, &mut metrics, &mut state);
+                }
+                break;
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+        for batch in batcher.poll_expired(t0.elapsed().as_nanos() as u64) {
+            dispatch(batch, &mut jobs, &mut metrics, &mut state);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OperatorKind;
+
+    fn sim_only() -> Coordinator {
+        Coordinator::new(CoordinatorConfig {
+            max_wait_ns: 100_000, // short window for fast tests
+            ..CoordinatorConfig::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn simulated_request_roundtrip() {
+        let c = sim_only();
+        let r = c
+            .submit(Request {
+                spec: WorkloadSpec::new(OperatorKind::Toeplitz, 1024),
+                session: 1,
+                inputs: None,
+            })
+            .unwrap();
+        assert_eq!(r.backend, BackendKind::Simulate);
+        assert!(r.sim_report.is_some());
+        assert!(r.backend_ns > 0.0);
+    }
+
+    #[test]
+    fn batch_groups_same_signature() {
+        // Wide batching window so all 8 same-signature requests coalesce
+        // regardless of scheduler jitter.
+        let c = Coordinator::new(CoordinatorConfig {
+            max_wait_ns: 200_000_000,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let reqs: Vec<Request> = (0..8)
+            .map(|i| Request {
+                spec: WorkloadSpec::new(OperatorKind::Linear, 2048),
+                session: i,
+                inputs: None,
+            })
+            .collect();
+        let responses = c.submit_all(reqs).unwrap();
+        assert_eq!(responses.len(), 8);
+        assert!(
+            responses.iter().any(|r| r.batch_size > 1),
+            "same-signature requests should coalesce: sizes {:?}",
+            responses.iter().map(|r| r.batch_size).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn mixed_signatures_complete() {
+        let c = sim_only();
+        let mut reqs = Vec::new();
+        for (i, op) in OperatorKind::ALL.iter().enumerate() {
+            reqs.push(Request {
+                spec: WorkloadSpec::new(*op, 1024),
+                session: i as u64,
+                inputs: None,
+            });
+        }
+        let responses = c.submit_all(reqs).unwrap();
+        assert_eq!(responses.len(), 5);
+        for (r, op) in responses.iter().zip(OperatorKind::ALL) {
+            assert_eq!(r.spec.op, op, "responses preserve submission order");
+        }
+    }
+
+    #[test]
+    fn metrics_snapshot_counts_requests() {
+        let c = sim_only();
+        for _ in 0..3 {
+            c.submit(Request {
+                spec: WorkloadSpec::new(OperatorKind::Causal, 1024),
+                session: 1,
+                inputs: None,
+            })
+            .unwrap();
+        }
+        let snap = c.metrics_snapshot().unwrap();
+        assert!(snap.contains("causal"), "{snap}");
+        assert!(snap.contains("total=3"), "{snap}");
+        assert!(snap.contains("sessions=1"), "{snap}");
+    }
+
+    #[test]
+    fn structured_ops_serve_faster_than_quadratic_in_sim() {
+        let c = sim_only();
+        let lat = |op| {
+            c.submit(Request {
+                spec: WorkloadSpec::new(op, 4096),
+                session: 99,
+                inputs: None,
+            })
+            .unwrap()
+            .backend_ns
+        };
+        assert!(lat(OperatorKind::Toeplitz) < lat(OperatorKind::Causal) / 10.0);
+    }
+}

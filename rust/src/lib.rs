@@ -1,0 +1,11 @@
+//! npuperf — reproduction of "Context-Driven Performance Modeling for
+//! Causal Inference Operators on Neural Processing Units".
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod model;
+pub mod npu;
+pub mod ops;
+pub mod report;
+pub mod runtime;
+pub mod util;

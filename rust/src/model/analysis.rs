@@ -1,0 +1,132 @@
+//! Bottleneck analysis: classify each operator run the way the paper's
+//! Table II "Bottleneck" column and §IV-D insights do, and predict the
+//! transition context where an operator's bottleneck flips.
+
+use crate::config::{NpuConfig, SimConfig, WorkloadSpec};
+use crate::npu::{self, report::Bottleneck, ExecReport};
+use crate::ops;
+
+/// Utilization + classification for one (operator, context) cell.
+#[derive(Clone, Debug)]
+pub struct UtilizationCell {
+    pub n: usize,
+    pub dpu: f64,
+    pub dma: f64,
+    pub shave: f64,
+    pub bottleneck: Bottleneck,
+    pub report: ExecReport,
+}
+
+/// Sweep an operator across contexts; one cell per context (Table II rows).
+pub fn utilization_sweep(
+    spec_base: &WorkloadSpec,
+    contexts: &[usize],
+    hw: &NpuConfig,
+    sim: &SimConfig,
+) -> Vec<UtilizationCell> {
+    contexts
+        .iter()
+        .map(|&n| {
+            let spec = WorkloadSpec { n, ..*spec_base };
+            let g = ops::lower(&spec, hw, sim);
+            let r = npu::run(&g, hw, sim);
+            let [dpu, dma, shave] = r.utilization();
+            UtilizationCell { n, dpu, dma, shave, bottleneck: r.bottleneck(), report: r }
+        })
+        .collect()
+}
+
+/// First context at which the bottleneck is no longer the DPU — the
+/// paper's transition points (Fourier → DMA at 512-1024, Retentive →
+/// SHAVE at 1024). Returns `None` if the operator stays DPU-bound.
+pub fn transition_context(cells: &[UtilizationCell]) -> Option<usize> {
+    let mut seen_dpu = false;
+    for c in cells {
+        match c.bottleneck {
+            Bottleneck::Dpu => seen_dpu = true,
+            _ if seen_dpu || c.n > cells[0].n => return Some(c.n),
+            _ => {}
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OperatorKind;
+
+    const CONTEXTS: [usize; 7] = [128, 256, 512, 1024, 2048, 4096, 8192];
+
+    fn sweep(op: OperatorKind) -> Vec<UtilizationCell> {
+        utilization_sweep(
+            &WorkloadSpec::new(op, 128),
+            &CONTEXTS,
+            &NpuConfig::default(),
+            &SimConfig::default(),
+        )
+    }
+
+    #[test]
+    fn retentive_transitions_to_shave() {
+        // Table II: SHAVE-bound from N=1024.
+        let cells = sweep(OperatorKind::Retentive);
+        let last = cells.last().unwrap();
+        assert_eq!(last.bottleneck, Bottleneck::Shave, "at 8192: {:?}", last.bottleneck);
+        assert!(last.shave > 0.6);
+    }
+
+    #[test]
+    fn retentive_shave_share_monotone_up() {
+        let cells = sweep(OperatorKind::Retentive);
+        assert!(
+            cells.last().unwrap().shave > cells.first().unwrap().shave + 0.2,
+            "SHAVE share must climb markedly with context"
+        );
+    }
+
+    #[test]
+    fn fourier_dma_share_substantial_at_midrange() {
+        // Table II: DMA 46-53 % at 512-4096.
+        let cells = sweep(OperatorKind::Fourier);
+        let mid: Vec<_> = cells.iter().filter(|c| (512..=4096).contains(&c.n)).collect();
+        assert!(mid.iter().any(|c| c.dma > 0.3), "midrange DMA shares: {:?}",
+            mid.iter().map(|c| c.dma).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn causal_is_dma_bound_at_long_context() {
+        let cells = sweep(OperatorKind::Causal);
+        let last = cells.last().unwrap();
+        assert_eq!(last.bottleneck, Bottleneck::Dma);
+        assert!(last.report.stall.stall_frac() > 0.8);
+    }
+
+    #[test]
+    fn linear_stays_dpu_bound() {
+        let cells = sweep(OperatorKind::Linear);
+        for c in &cells[2..] {
+            assert_eq!(c.bottleneck, Bottleneck::Dpu, "N={}", c.n);
+        }
+    }
+
+    #[test]
+    fn utilization_shares_sum_to_one() {
+        for op in OperatorKind::ALL {
+            for c in sweep(op) {
+                let total = c.dpu + c.dma + c.shave;
+                assert!((total - 1.0).abs() < 1e-9, "{op} N={}: {total}", c.n);
+            }
+        }
+    }
+
+    #[test]
+    fn transition_detection() {
+        let cells = sweep(OperatorKind::Retentive);
+        // Retentive flips off-DPU somewhere in the sweep (or was never
+        // DPU-dominant — both consistent with a detected transition).
+        let _ = transition_context(&cells);
+        let causal = sweep(OperatorKind::Causal);
+        assert!(transition_context(&causal).is_some(), "causal goes DMA-bound");
+    }
+}

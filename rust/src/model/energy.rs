@@ -1,0 +1,143 @@
+//! Energy model — the edge constraint behind the whole paper (§I: "strict
+//! power budgets", Table I: 10 TOPS @ 35 W).
+//!
+//! Per-engine energy intensities are derived from the 35 W envelope split
+//! across the engines at full utilization, plus DRAM access energy at
+//! LPDDR5X-class pJ/byte. Energy per inference = Σ busy-time × engine
+//! power + DMA bytes × byte energy + idle leakage over the span. The
+//! interesting output is **J/inference and inferences/J per operator** —
+//! on a battery, Toeplitz vs Causal is not a 190× latency gap but also a
+//! ~100× energy gap.
+
+use crate::npu::ExecReport;
+
+/// Engine power split of the 35 W envelope (active power, W).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    pub dpu_w: f64,
+    pub shave_w: f64,
+    pub dma_w: f64,
+    /// Idle/leakage floor while the operator runs, W.
+    pub idle_w: f64,
+    /// DRAM access energy, pJ/byte (LPDDR5X-class, ~12 pJ/bit).
+    pub dram_pj_per_byte: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        // 35 W TDP: systolic array dominates, vector cores next, DMA small;
+        // ~4 W idle floor for the always-on fabric.
+        Self { dpu_w: 20.0, shave_w: 7.0, dma_w: 4.0, idle_w: 4.0, dram_pj_per_byte: 100.0 }
+    }
+}
+
+/// Energy breakdown of one simulated run.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyReport {
+    pub dpu_j: f64,
+    pub shave_j: f64,
+    pub dma_j: f64,
+    pub dram_j: f64,
+    pub idle_j: f64,
+}
+
+impl EnergyReport {
+    pub fn total_j(&self) -> f64 {
+        self.dpu_j + self.shave_j + self.dma_j + self.dram_j + self.idle_j
+    }
+
+    /// Millijoules per operator invocation.
+    pub fn total_mj(&self) -> f64 {
+        self.total_j() * 1e3
+    }
+
+    /// Energy efficiency: logical ops per joule needs the report's ops.
+    pub fn gops_per_joule(&self, logical_ops: u64) -> f64 {
+        logical_ops as f64 / 1e9 / self.total_j()
+    }
+}
+
+impl EnergyModel {
+    /// Evaluate the model on a simulated run.
+    pub fn evaluate(&self, report: &ExecReport) -> EnergyReport {
+        let s = 1e-9; // ns -> s
+        EnergyReport {
+            dpu_j: report.busy_ns[0] * s * self.dpu_w,
+            shave_j: report.busy_ns[1] * s * self.shave_w,
+            dma_j: report.busy_ns[2] * s * self.dma_w,
+            dram_j: report.dma_bytes as f64 * self.dram_pj_per_byte * 1e-12,
+            idle_j: report.span_ns * s * self.idle_w,
+        }
+    }
+
+    /// Average power over the run (must stay under the 35 W envelope).
+    pub fn average_power_w(&self, report: &ExecReport) -> f64 {
+        let e = self.evaluate(report);
+        e.total_j() / (report.span_ns * 1e-9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+    use crate::{npu, ops};
+
+    fn run(op: OperatorKind, n: usize) -> ExecReport {
+        let hw = NpuConfig::default();
+        let sim = SimConfig::default();
+        let g = ops::lower(&WorkloadSpec::new(op, n), &hw, &sim);
+        npu::run(&g, &hw, &sim)
+    }
+
+    #[test]
+    fn average_power_within_envelope() {
+        let m = EnergyModel::default();
+        for op in OperatorKind::ALL {
+            let p = m.average_power_w(&run(op, 4096));
+            assert!(
+                (3.0..36.0).contains(&p),
+                "{op}: avg power {p:.1} W outside [idle, TDP]"
+            );
+        }
+    }
+
+    #[test]
+    fn structured_operators_are_energy_proportional() {
+        // Toeplitz at 8192 must cost orders of magnitude less energy than
+        // causal — latency × power both favor it.
+        let m = EnergyModel::default();
+        let causal = m.evaluate(&run(OperatorKind::Causal, 8192)).total_j();
+        let toe = m.evaluate(&run(OperatorKind::Toeplitz, 8192)).total_j();
+        assert!(causal / toe > 40.0, "causal {causal:.4} J vs toeplitz {toe:.6} J");
+    }
+
+    #[test]
+    fn dram_energy_visible_for_spilling_operator() {
+        let m = EnergyModel::default();
+        let e = m.evaluate(&run(OperatorKind::Causal, 8192));
+        assert!(e.dram_j > 0.02 * e.total_j(), "spill traffic must show up in energy");
+    }
+
+    #[test]
+    fn efficiency_metric_orders_operators() {
+        let m = EnergyModel::default();
+        let eff = |op| {
+            let r = run(op, 4096);
+            m.evaluate(&r).gops_per_joule(r.logical_ops)
+        };
+        assert!(eff(OperatorKind::Toeplitz) > eff(OperatorKind::Causal));
+    }
+
+    #[test]
+    fn hw_envelope_is_consistent_with_table1() {
+        let hw = NpuConfig::default();
+        let m = EnergyModel::default();
+        // peak compute power ~= dpu+shave+dma+idle == 35 W envelope
+        let tdp = m.dpu_w + m.shave_w + m.dma_w + m.idle_w;
+        assert!((tdp - 35.0).abs() < 1.0);
+        // and the headline efficiency: ~10 TOPS / 35 W ≈ 0.29 TOPS/W INT8.
+        let tops_per_w = hw.peak_int8_gops() / 1000.0 / tdp;
+        assert!((0.2..0.4).contains(&tops_per_w));
+    }
+}

@@ -1,0 +1,228 @@
+//! Model-level deployment planner: from operator microbenchmarks to a
+//! whole LLM on the NPU — the question the paper's §I actually motivates
+//! ("can this 100K-token workload run on-device?").
+//!
+//! A model is L transformer layers × H heads of a causal operator plus an
+//! MLP. Per-layer cost = H single-head operator graphs (simulated once,
+//! heads are identical) + the MLP matmuls + projections; the planner
+//! composes prefill latency, sustained decode tokens/s, persistent-state
+//! footprint and energy, and renders a feasibility verdict against the
+//! Table-I memory budget.
+
+use crate::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+use crate::coordinator::state::SessionKind;
+use crate::npu;
+use crate::ops::{self, decode, GraphBuilder, PrimOp};
+
+use super::energy::EnergyModel;
+
+/// A transformer model description.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelSpec {
+    pub layers: usize,
+    pub heads: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub d_state: usize,
+    pub op: OperatorKind,
+}
+
+impl ModelSpec {
+    /// A ~100M-parameter reference config (the scale of the repo's E2E).
+    pub fn reference(op: OperatorKind) -> Self {
+        Self { layers: 12, heads: 12, d_model: 768, d_ff: 3072, d_state: 16, op }
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.heads
+    }
+
+    /// Parameter count (attention + MLP + embeddings excluded).
+    pub fn params(&self) -> u64 {
+        let d = self.d_model as u64;
+        let ff = self.d_ff as u64;
+        self.layers as u64 * (4 * d * d + 2 * d * ff)
+    }
+}
+
+/// Deployment plan for (model, context).
+#[derive(Clone, Debug)]
+pub struct DeployPlan {
+    pub spec: ModelSpec,
+    pub n: usize,
+    /// Full prefill latency, ms.
+    pub prefill_ms: f64,
+    /// Sustained decode rate at this retained context, tokens/s.
+    pub decode_tps: f64,
+    /// Persistent inference state (KV cache or recurrent state), bytes.
+    pub state_bytes: u64,
+    /// Weights footprint at 16-bit, bytes.
+    pub weight_bytes: u64,
+    /// Prefill energy, J.
+    pub prefill_j: f64,
+    /// Fits the global memory budget?
+    pub fits_memory: bool,
+}
+
+/// MLP + projection cost for one layer over `rows` tokens (DPU matmuls +
+/// gelu on SHAVE), as a standalone graph.
+fn mlp_graph(rows: usize, d_model: usize, d_ff: usize) -> ops::OpGraph {
+    let mut b = GraphBuilder::new(format!("mlp r={rows}"));
+    // QKV + output projections.
+    let p1 = b.push_simple(PrimOp::MatMul { m: rows, n: 4 * d_model, k: d_model }, vec![]);
+    let up = b.push_simple(PrimOp::MatMul { m: rows, n: d_ff, k: d_model }, vec![p1]);
+    let act = b.push_simple(
+        PrimOp::EltWise { kind: ops::EltKind::Exp, elems: rows * d_ff },
+        vec![up],
+    );
+    let down = b.push_simple(PrimOp::MatMul { m: rows, n: d_model, k: d_ff }, vec![act]);
+    let _ln = b.push_simple(
+        PrimOp::EltWise { kind: ops::EltKind::Simple, elems: 4 * rows * d_model },
+        vec![down],
+    );
+    b.finish()
+}
+
+/// Build the plan by composing simulated pieces.
+pub fn plan(spec: &ModelSpec, n: usize, hw: &NpuConfig, sim: &SimConfig) -> DeployPlan {
+    let w = WorkloadSpec::new(spec.op, n)
+        .with_d_head(spec.d_head())
+        .with_d_state(spec.d_state);
+
+    // Prefill: per layer = H identical head graphs (serial on one NPU) +
+    // the MLP block.
+    let head = npu::run(&ops::lower(&w, hw, sim), hw, sim);
+    let mlp = npu::run(&mlp_graph(n, spec.d_model, spec.d_ff), hw, sim);
+    let layer_ns = head.span_ns * spec.heads as f64 + mlp.span_ns;
+    let prefill_ns = layer_ns * spec.layers as f64;
+
+    // Decode: one step per layer = H head steps + MLP over a single row.
+    let head_step = npu::run(&decode::lower_step(&w, hw, sim), hw, sim);
+    let mlp_step = npu::run(&mlp_graph(1, spec.d_model, spec.d_ff), hw, sim);
+    let step_ns =
+        (head_step.span_ns * spec.heads as f64 + mlp_step.span_ns) * spec.layers as f64;
+
+    // Persistent state per Fig 1, summed over layers & heads.
+    let per_head_state = match SessionKind::for_operator(spec.op) {
+        SessionKind::KvCache => {
+            let retained = if spec.op == OperatorKind::Toeplitz { n.min(128) } else { n };
+            2 * retained as u64 * spec.d_head() as u64 * sim.elem_bytes
+        }
+        SessionKind::RecurrentState => (spec.d_head() * spec.d_state) as u64 * 4,
+    };
+    let state_bytes = per_head_state * (spec.heads * spec.layers) as u64;
+    let weight_bytes = spec.params() * sim.elem_bytes;
+
+    let energy = EnergyModel::default();
+    let prefill_j = (energy.evaluate(&head).total_j() * spec.heads as f64
+        + energy.evaluate(&mlp).total_j())
+        * spec.layers as f64;
+
+    DeployPlan {
+        spec: *spec,
+        n,
+        prefill_ms: prefill_ns / 1e6,
+        decode_tps: 1e9 / step_ns,
+        state_bytes,
+        weight_bytes,
+        prefill_j,
+        fits_memory: state_bytes + weight_bytes <= hw.dram_bytes,
+    }
+}
+
+/// Human-readable feasibility report across operators at one context.
+pub fn feasibility_report(n: usize, hw: &NpuConfig, sim: &SimConfig) -> String {
+    let mut out = format!(
+        "Deployment plan: 12x768 reference model (~{}M params) at N={n}\n\
+         {:<12} {:>12} {:>12} {:>12} {:>12} {:>10}\n",
+        ModelSpec::reference(OperatorKind::Causal).params() / 1_000_000,
+        "operator",
+        "prefill ms",
+        "decode t/s",
+        "state",
+        "energy J",
+        "fits?"
+    );
+    for op in OperatorKind::ALL {
+        let p = plan(&ModelSpec::reference(op), n, hw, sim);
+        out += &format!(
+            "{:<12} {:>12.1} {:>12.0} {:>12} {:>12.2} {:>10}\n",
+            op.paper_name(),
+            p.prefill_ms,
+            p.decode_tps,
+            crate::util::fmt::bytes(p.state_bytes),
+            p.prefill_j,
+            if p.fits_memory { "yes" } else { "NO" }
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> (NpuConfig, SimConfig) {
+        (NpuConfig::default(), SimConfig::default())
+    }
+
+    #[test]
+    fn reference_model_is_about_100m_params() {
+        let m = ModelSpec::reference(OperatorKind::Causal);
+        assert!((80..130).contains(&(m.params() / 1_000_000)), "{}", m.params());
+        assert_eq!(m.d_head(), 64);
+    }
+
+    #[test]
+    fn kv_state_grows_recurrent_does_not() {
+        let (hw, sim) = cfg();
+        let kv4 = plan(&ModelSpec::reference(OperatorKind::Causal), 4096, &hw, &sim);
+        let kv16 = plan(&ModelSpec::reference(OperatorKind::Causal), 16_384, &hw, &sim);
+        assert_eq!(kv16.state_bytes, 4 * kv4.state_bytes);
+        let ssm4 = plan(&ModelSpec::reference(OperatorKind::Linear), 4096, &hw, &sim);
+        let ssm16 = plan(&ModelSpec::reference(OperatorKind::Linear), 16_384, &hw, &sim);
+        assert_eq!(ssm4.state_bytes, ssm16.state_bytes);
+    }
+
+    #[test]
+    fn paper_intro_claim_kv_cache_exceeds_scratchpad_30x() {
+        // §I: "at just 16K tokens the KV cache consumes over 768 MB — more
+        // than 30x the capacity of leading NPUs". Our 12-layer reference is
+        // smaller than Llama, but the per-scratchpad ratio is the claim.
+        let (hw, sim) = cfg();
+        let p = plan(&ModelSpec::reference(OperatorKind::Causal), 16_384, &hw, &sim);
+        assert!(
+            p.state_bytes > 30 * hw.scratchpad_bytes,
+            "KV {} vs scratchpad {}",
+            p.state_bytes,
+            hw.scratchpad_bytes
+        );
+    }
+
+    #[test]
+    fn structured_operator_decodes_faster_at_long_context() {
+        let (hw, sim) = cfg();
+        let causal = plan(&ModelSpec::reference(OperatorKind::Causal), 16_384, &hw, &sim);
+        let toe = plan(&ModelSpec::reference(OperatorKind::Toeplitz), 16_384, &hw, &sim);
+        assert!(toe.decode_tps > 5.0 * causal.decode_tps);
+        assert!(toe.prefill_ms < causal.prefill_ms);
+    }
+
+    #[test]
+    fn report_renders_all_operators() {
+        let (hw, sim) = cfg();
+        let r = feasibility_report(2048, &hw, &sim);
+        for op in OperatorKind::ALL {
+            assert!(r.contains(op.paper_name()));
+        }
+    }
+
+    #[test]
+    fn prefill_energy_positive_and_bounded() {
+        let (hw, sim) = cfg();
+        let p = plan(&ModelSpec::reference(OperatorKind::Linear), 4096, &hw, &sim);
+        assert!(p.prefill_j > 0.0);
+        // Energy must be consistent with power envelope x time.
+        assert!(p.prefill_j < 40.0 * p.prefill_ms / 1e3);
+    }
+}

@@ -1,0 +1,18 @@
+//! Performance modeling: roofline with *effective* ceilings (paper §IV).
+//!
+//! - [`calibrate`] — microbenchmarks *on the simulator* that establish the
+//!   effective compute ceiling π_eff and bandwidth ceiling β_eff, the way
+//!   the paper derives its "5 % of nominal" numbers from measurements.
+//! - [`roofline`] — the roofline model itself: bounds, inflection point,
+//!   per-operator placement.
+//! - [`analysis`] — bottleneck classification and the §IV-D insight checks.
+
+pub mod analysis;
+pub mod calibrate;
+pub mod energy;
+pub mod llm;
+pub mod roofline;
+
+pub use calibrate::{calibrate, Ceilings};
+pub use energy::{EnergyModel, EnergyReport};
+pub use roofline::{Roofline, RooflinePoint};

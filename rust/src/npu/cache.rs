@@ -1,0 +1,167 @@
+//! Cache-efficiency and state-reuse instrumentation (paper Table V).
+//!
+//! - **Cache efficiency** = scratchpad hits / total operand accesses, at
+//!   tile granularity, as tagged by the lowering's scratchpad allocator.
+//!   Quadratic attention's spilled score matrix produces a long miss tail
+//!   (7.7 % for Full Causal at N = 8192); structured operators keep their
+//!   working set resident (84-88 %).
+//! - **Reuse latency** = size-weighted mean time between a buffer's first
+//!   write and its last read: how long produced bytes sit before being
+//!   consumed. Phase-separated quadratic attention parks 128 MB of scores
+//!   for ~half the run; streaming operators re-consume within ~1-2 ms.
+
+use crate::ops::OpGraph;
+
+use super::engine::{ps_to_ns, SimTrace};
+
+/// Aggregated cache metrics for one simulated operator run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// Size-weighted mean produce→last-consume distance, ns.
+    pub reuse_ns: f64,
+}
+
+impl CacheStats {
+    /// Hit fraction in [0, 1]; 0 when there were no accesses.
+    pub fn efficiency(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Derive the stats from a lowered graph + its simulation trace.
+    pub fn from_trace(graph: &OpGraph, trace: &SimTrace) -> Self {
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        // Per buffer: (first_write_end_ps, last_read_end_ps, bytes).
+        let mut first_write: Vec<Option<u64>> = Vec::new();
+        let mut last_read: Vec<Option<u64>> = Vec::new();
+        let mut buf_bytes: Vec<u64> = Vec::new();
+        let ensure = |v: &mut Vec<Option<u64>>, w: &mut Vec<u64>, id: usize| {
+            if v.len() <= id {
+                v.resize(id + 1, None);
+                w.resize(id + 1, 0);
+            }
+        };
+
+        for node in &graph.nodes {
+            let t = trace.timings[node.id];
+            for acc in &node.reads {
+                if acc.hit {
+                    hits += acc.count as u64;
+                } else {
+                    misses += acc.count as u64;
+                }
+                ensure(&mut last_read, &mut buf_bytes, acc.buffer);
+                let slot = &mut last_read[acc.buffer];
+                *slot = Some(slot.map_or(t.end_ps, |p| p.max(t.end_ps)));
+                buf_bytes[acc.buffer] =
+                    buf_bytes[acc.buffer].max(acc.bytes * acc.count as u64);
+            }
+            for acc in &node.writes {
+                ensure(&mut first_write, &mut buf_bytes, acc.buffer);
+                let slot = &mut first_write[acc.buffer];
+                if slot.is_none() {
+                    *slot = Some(t.end_ps);
+                }
+                buf_bytes[acc.buffer] =
+                    buf_bytes[acc.buffer].max(acc.bytes * acc.count as u64);
+            }
+        }
+
+        let n = first_write.len().max(last_read.len());
+        first_write.resize(n, None);
+        last_read.resize(n, None);
+        buf_bytes.resize(n, 0);
+        let mut weighted = 0.0f64;
+        let mut weight = 0.0f64;
+        for id in 0..n {
+            if let (Some(w), Some(r)) = (first_write[id], last_read[id]) {
+                if r > w {
+                    let bytes = buf_bytes[id] as f64;
+                    weighted += ps_to_ns(r - w) * bytes;
+                    weight += bytes;
+                }
+            }
+        }
+        let reuse_ns = if weight > 0.0 { weighted / weight } else { 0.0 };
+        CacheStats { hits, misses, reuse_ns }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{NpuConfig, SimConfig};
+    use crate::npu::engine::simulate;
+    use crate::ops::{BufferAccess, EltKind, GraphBuilder, PrimOp, TransferDir};
+
+    fn acc(buffer: usize, bytes: u64, hit: bool) -> BufferAccess {
+        BufferAccess::new(buffer, bytes, hit)
+    }
+
+    #[test]
+    fn efficiency_counts_tagged_accesses() {
+        let mut b = GraphBuilder::new("c");
+        let buf = b.buffer();
+        let w = b.push(
+            PrimOp::Transfer { bytes: 64, dir: TransferDir::Pull, fresh_alloc: true },
+            vec![],
+            vec![],
+            vec![acc(buf, 64, false)],
+        );
+        b.push(
+            PrimOp::EltWise { kind: EltKind::Simple, elems: 16 },
+            vec![w],
+            vec![acc(buf, 64, true), acc(buf, 64, true), acc(buf, 64, false)],
+            vec![],
+        );
+        let g = b.finish();
+        let trace = simulate(&g, &NpuConfig::default(), &SimConfig::default());
+        let stats = CacheStats::from_trace(&g, &trace);
+        assert_eq!(stats.hits, 2);
+        assert_eq!(stats.misses, 1);
+        assert!((stats.efficiency() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reuse_measures_write_to_last_read_gap() {
+        let mut b = GraphBuilder::new("r");
+        let buf = b.buffer();
+        let w = b.push(
+            PrimOp::Transfer { bytes: 1 << 20, dir: TransferDir::Push, fresh_alloc: true },
+            vec![],
+            vec![],
+            vec![acc(buf, 1 << 20, false)],
+        );
+        // A long unrelated op delays the read.
+        let delay = b.push_simple(PrimOp::MatMul { m: 512, n: 512, k: 512 }, vec![w]);
+        b.push(
+            PrimOp::EltWise { kind: EltKind::Simple, elems: 4 },
+            vec![delay],
+            vec![acc(buf, 1 << 20, false)],
+            vec![],
+        );
+        let g = b.finish();
+        let trace = simulate(&g, &NpuConfig::default(), &SimConfig::default());
+        let stats = CacheStats::from_trace(&g, &trace);
+        let gap_ns =
+            ps_to_ns(trace.timings[2].end_ps - trace.timings[0].end_ps);
+        assert!((stats.reuse_ns - gap_ns).abs() < 1.0);
+        assert!(stats.reuse_ns > 0.0);
+    }
+
+    #[test]
+    fn empty_graph_zeroes() {
+        let g = GraphBuilder::new("e").finish();
+        let trace = SimTrace::default();
+        let stats = CacheStats::from_trace(&g, &trace);
+        assert_eq!(stats, CacheStats::default());
+        assert_eq!(stats.efficiency(), 0.0);
+    }
+}

@@ -1,0 +1,313 @@
+//! Event-driven execution of an [`OpGraph`] over the NPU's engines.
+//!
+//! Each engine (DPU, SHAVE, DMA, CPU) executes one primitive at a time;
+//! primitives become *ready* when all dependencies complete. Times are kept
+//! in integer picoseconds for determinism. The scheduler is
+//! earliest-ready-first with node-id tie-breaking — the static, in-order
+//! dispatch a real NPU command list gives you.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::config::{NpuConfig, SimConfig};
+use crate::ops::{Engine, OpGraph};
+
+use super::cost::CostModel;
+
+/// Per-node schedule produced by the simulator (all times in ps).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NodeTiming {
+    /// All dependencies completed.
+    pub ready_ps: u64,
+    /// Engine began executing the primitive.
+    pub start_ps: u64,
+    /// Primitive completed.
+    pub end_ps: u64,
+}
+
+/// Full simulation trace: node timings + per-engine aggregates (ps).
+#[derive(Clone, Debug, Default)]
+pub struct SimTrace {
+    pub timings: Vec<NodeTiming>,
+    /// Makespan of the graph.
+    pub span_ps: u64,
+    /// Busy time per engine, indexed by [`engine_index`].
+    pub busy_ps: [u64; 4],
+    /// Pull-stall time per engine: idle gaps where the engine's next
+    /// primitive existed but its operands were not yet ready.
+    pub stall_ps: [u64; 4],
+    /// Number of primitives per engine.
+    pub count: [u64; 4],
+}
+
+pub fn engine_index(e: Engine) -> usize {
+    match e {
+        Engine::Dpu => 0,
+        Engine::Shave => 1,
+        Engine::Dma => 2,
+        Engine::Cpu => 3,
+    }
+}
+
+fn to_ps(ns: f64) -> u64 {
+    (ns * 1000.0).round() as u64
+}
+
+pub fn ps_to_ns(ps: u64) -> f64 {
+    ps as f64 / 1000.0
+}
+
+/// Simulate `graph` on the configured hardware; panics on malformed DAGs
+/// (builders always emit valid topological order — enforced by
+/// `OpGraph::validate` in tests).
+pub fn simulate(graph: &OpGraph, hw: &NpuConfig, sim: &SimConfig) -> SimTrace {
+    let cost = CostModel::new(hw, sim);
+    let n = graph.nodes.len();
+    let mut indegree: Vec<u32> = vec![0; n];
+    let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for node in &graph.nodes {
+        indegree[node.id] = node.deps.len() as u32;
+        for &d in &node.deps {
+            dependents[d].push(node.id as u32);
+        }
+    }
+
+    // Pre-compute durations once (ps).
+    let durations: Vec<u64> =
+        graph.nodes.iter().map(|nd| to_ps(cost.duration_ns(&nd.prim))).collect();
+
+    let mut timings = vec![NodeTiming::default(); n];
+    // Ready queues per engine: min-heap on (ready_ps, node_id).
+    let mut ready: [BinaryHeap<Reverse<(u64, u32)>>; 4] = Default::default();
+    // Completion events: min-heap on (end_ps, node_id).
+    let mut running: BinaryHeap<Reverse<(u64, u32)>> = BinaryHeap::new();
+    let mut engine_free: [u64; 4] = [0; 4];
+    let mut engine_busy: [u64; 4] = [0; 4];
+    let mut engine_stall: [u64; 4] = [0; 4];
+    let mut engine_count: [u64; 4] = [0; 4];
+    let mut engine_idle: [bool; 4] = [true; 4];
+
+    for node in &graph.nodes {
+        if node.deps.is_empty() {
+            timings[node.id].ready_ps = 0;
+            let e = engine_index(node.prim.engine());
+            ready[e].push(Reverse((0, node.id as u32)));
+        }
+    }
+
+    let mut now: u64 = 0;
+    let mut span: u64 = 0;
+    let mut done = 0usize;
+
+    // Try to start work on every idle engine at time `now`.
+    macro_rules! dispatch {
+        () => {
+            for e in 0..4 {
+                if !engine_idle[e] {
+                    continue;
+                }
+                if let Some(&Reverse((ready_ps, id))) = ready[e].peek() {
+                    if ready_ps <= now {
+                        ready[e].pop();
+                        let id = id as usize;
+                        // Pull stall: engine sat idle from max(free, ready-
+                        // announce) waiting for this op's data.
+                        let waited = now.saturating_sub(engine_free[e].max(ready_ps));
+                        let gap = now.saturating_sub(engine_free[e]);
+                        // Idle-waiting-on-data = the whole gap if data arrived
+                        // after the engine freed, else zero.
+                        let stall =
+                            if ready_ps > engine_free[e] { gap } else { waited };
+                        engine_stall[e] += stall;
+                        let dur = durations[id];
+                        timings[id].start_ps = now;
+                        timings[id].end_ps = now + dur;
+                        engine_busy[e] += dur;
+                        engine_count[e] += 1;
+                        engine_free[e] = now + dur;
+                        engine_idle[e] = false;
+                        running.push(Reverse((now + dur, id as u32)));
+                    }
+                }
+            }
+        };
+    }
+
+    dispatch!();
+    while done < n {
+        let Some(&Reverse((t, _))) = running.peek() else {
+            // No running ops but not done: ready ops exist with ready_ps in
+            // the future — advance to the earliest.
+            let next = ready
+                .iter()
+                .filter_map(|q| q.peek().map(|&Reverse((r, _))| r))
+                .min()
+                .expect("deadlock: no running and no ready ops");
+            now = next;
+            dispatch!();
+            continue;
+        };
+        now = t;
+        // Complete everything ending at `now`.
+        while let Some(&Reverse((t2, id))) = running.peek() {
+            if t2 != now {
+                break;
+            }
+            running.pop();
+            let id = id as usize;
+            done += 1;
+            span = span.max(timings[id].end_ps);
+            let e = engine_index(graph.nodes[id].prim.engine());
+            engine_idle[e] = true;
+            for &dep in &dependents[id] {
+                let dep = dep as usize;
+                indegree[dep] -= 1;
+                if indegree[dep] == 0 {
+                    let ready_at = graph.nodes[dep]
+                        .deps
+                        .iter()
+                        .map(|&d| timings[d].end_ps)
+                        .max()
+                        .unwrap_or(0);
+                    timings[dep].ready_ps = ready_at;
+                    let eng = engine_index(graph.nodes[dep].prim.engine());
+                    ready[eng].push(Reverse((ready_at, dep as u32)));
+                }
+            }
+        }
+        dispatch!();
+    }
+
+    SimTrace {
+        timings,
+        span_ps: span,
+        busy_ps: engine_busy,
+        stall_ps: engine_stall,
+        count: engine_count,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{EltKind, GraphBuilder, PrimOp, TransferDir};
+
+    fn hw() -> NpuConfig {
+        NpuConfig::default()
+    }
+
+    fn sim_cfg() -> SimConfig {
+        SimConfig::default()
+    }
+
+    fn transfer(bytes: u64) -> PrimOp {
+        PrimOp::Transfer { bytes, dir: TransferDir::Pull, fresh_alloc: false }
+    }
+
+    #[test]
+    fn single_node_span_equals_duration() {
+        let mut b = GraphBuilder::new("one");
+        b.push_simple(PrimOp::MatMul { m: 128, n: 128, k: 128 }, vec![]);
+        let g = b.finish();
+        let trace = simulate(&g, &hw(), &sim_cfg());
+        let cost = CostModel::new(&hw(), &sim_cfg());
+        assert_eq!(trace.span_ps, to_ps(cost.matmul_ns(128, 128, 128)));
+        assert_eq!(trace.busy_ps[0], trace.span_ps);
+        assert_eq!(trace.count[0], 1);
+    }
+
+    #[test]
+    fn chain_serializes_and_charges_stall() {
+        // transfer -> matmul: DPU must wait for DMA; that wait is DPU stall.
+        let mut b = GraphBuilder::new("chain");
+        let t = b.push_simple(transfer(1 << 20), vec![]);
+        b.push_simple(PrimOp::MatMul { m: 128, n: 128, k: 128 }, vec![t]);
+        let g = b.finish();
+        let trace = simulate(&g, &hw(), &sim_cfg());
+        let dma_end = trace.timings[0].end_ps;
+        assert_eq!(trace.timings[1].start_ps, dma_end);
+        assert_eq!(trace.stall_ps[0], dma_end, "DPU stalled for the whole pull");
+        assert_eq!(trace.span_ps, trace.timings[1].end_ps);
+    }
+
+    #[test]
+    fn independent_ops_on_different_engines_overlap() {
+        let mut b = GraphBuilder::new("overlap");
+        b.push_simple(PrimOp::MatMul { m: 128, n: 128, k: 128 }, vec![]);
+        b.push_simple(PrimOp::EltWise { kind: EltKind::Simple, elems: 10_000 }, vec![]);
+        b.push_simple(transfer(1 << 20), vec![]);
+        let g = b.finish();
+        let trace = simulate(&g, &hw(), &sim_cfg());
+        let serial: u64 = trace.busy_ps.iter().sum();
+        assert!(trace.span_ps < serial, "3 engines must overlap");
+        assert_eq!(trace.span_ps, trace.busy_ps.iter().copied().max().unwrap());
+    }
+
+    #[test]
+    fn same_engine_ops_serialize() {
+        let mut b = GraphBuilder::new("serial");
+        b.push_simple(PrimOp::MatMul { m: 128, n: 128, k: 128 }, vec![]);
+        b.push_simple(PrimOp::MatMul { m: 128, n: 128, k: 128 }, vec![]);
+        let g = b.finish();
+        let trace = simulate(&g, &hw(), &sim_cfg());
+        assert_eq!(trace.span_ps, trace.busy_ps[0]);
+        assert_eq!(trace.timings[1].start_ps, trace.timings[0].end_ps);
+        // Back-to-back on one engine: no pull stall.
+        assert_eq!(trace.stall_ps[0], 0);
+    }
+
+    #[test]
+    fn diamond_dependency_joins() {
+        let mut b = GraphBuilder::new("diamond");
+        let t = b.push_simple(transfer(1024), vec![]);
+        let m1 = b.push_simple(PrimOp::MatMul { m: 128, n: 128, k: 64 }, vec![t]);
+        let s1 = b.push_simple(
+            PrimOp::EltWise { kind: EltKind::Simple, elems: 128 * 128 },
+            vec![t],
+        );
+        b.push_simple(PrimOp::MatMul { m: 128, n: 64, k: 128 }, vec![m1, s1]);
+        let g = b.finish();
+        g.validate().unwrap();
+        let trace = simulate(&g, &hw(), &sim_cfg());
+        let join_start = trace.timings[3].start_ps;
+        assert!(join_start >= trace.timings[1].end_ps);
+        assert!(join_start >= trace.timings[2].end_ps);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut b = GraphBuilder::new("det");
+        let mut prev = Vec::new();
+        for i in 0..50 {
+            let deps = if i >= 2 && i % 3 == 0 { vec![i - 2] } else { vec![] };
+            prev.push(b.push_simple(
+                PrimOp::EltWise { kind: EltKind::Simple, elems: 100 * (i + 1) },
+                deps,
+            ));
+        }
+        let g = b.finish();
+        let a = simulate(&g, &hw(), &sim_cfg());
+        let c = simulate(&g, &hw(), &sim_cfg());
+        assert_eq!(a.span_ps, c.span_ps);
+        for (x, y) in a.timings.iter().zip(&c.timings) {
+            assert_eq!(x.start_ps, y.start_ps);
+            assert_eq!(x.end_ps, y.end_ps);
+        }
+    }
+
+    #[test]
+    fn busy_never_exceeds_span_per_engine() {
+        let mut b = GraphBuilder::new("cap");
+        let mut last = None;
+        for _ in 0..20 {
+            let deps = last.map(|l| vec![l]).unwrap_or_default();
+            last = Some(b.push_simple(transfer(64 * 1024), deps));
+        }
+        let g = b.finish();
+        let trace = simulate(&g, &hw(), &sim_cfg());
+        for e in 0..4 {
+            assert!(trace.busy_ps[e] <= trace.span_ps);
+        }
+        assert_eq!(trace.busy_ps[2], trace.span_ps, "pure DMA chain");
+    }
+}

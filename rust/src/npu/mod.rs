@@ -1,0 +1,32 @@
+//! Cycle-approximate, event-driven NPU simulator.
+//!
+//! This is the substrate that replaces the paper's physical Intel-AI-PC NPU
+//! (DESIGN.md §2): a [`cost`] model for each engine (DPU systolic array,
+//! SHAVE vector cores, DMA, host CPU), an event-driven [`engine`] that
+//! executes a lowered [`crate::ops::OpGraph`] with per-engine serialization
+//! and dependency tracking, a [`scratchpad`] allocator used at lowering
+//! time, and [`cache`]/[`pipeline`] instrumentation that reproduces the
+//! vendor profiler's counters (utilization %, pipeline stalls, cache
+//! efficiency, state-reuse latency).
+
+pub mod cache;
+pub mod cost;
+pub mod engine;
+pub mod pipeline;
+pub mod report;
+pub mod scratchpad;
+pub mod trace_dump;
+
+pub use cost::CostModel;
+pub use engine::{simulate, NodeTiming, SimTrace};
+pub use report::ExecReport;
+pub use scratchpad::Scratchpad;
+
+use crate::config::{NpuConfig, SimConfig};
+use crate::ops::OpGraph;
+
+/// Convenience: lower-level `simulate` + full report derivation.
+pub fn run(graph: &OpGraph, hw: &NpuConfig, sim: &SimConfig) -> ExecReport {
+    let trace = simulate(graph, hw, sim);
+    ExecReport::from_trace(graph, &trace)
+}

@@ -1,0 +1,187 @@
+//! Software-managed scratchpad allocator (paper Table I: 4 MB "persistent
+//! state storage").
+//!
+//! Used at *lowering* time: operator lowerings ask for buffer residency;
+//! what fits stays resident (subsequent accesses are cache hits), what does
+//! not must stream through DMA (explicit `Transfer` nodes + cache misses).
+//! An LRU pool supports tile-window reuse (Toeplitz's sliding K/V window).
+
+use std::collections::HashMap;
+
+use crate::ops::BufferId;
+
+/// Allocation outcome for one buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Resident in scratchpad for its whole lifetime.
+    Resident,
+    /// Streams through DRAM: every touch beyond the working tile is a miss.
+    Streamed,
+}
+
+/// Bump+LRU scratchpad model.
+#[derive(Debug)]
+pub struct Scratchpad {
+    capacity: u64,
+    used: u64,
+    resident: HashMap<BufferId, u64>,
+    /// LRU order for evictable (pool) buffers; most recent at the back.
+    lru: Vec<BufferId>,
+    /// Peak usage high-water mark (drives §V chunked-prefill analysis).
+    peak: u64,
+}
+
+impl Scratchpad {
+    pub fn new(capacity: u64) -> Self {
+        Self { capacity, used: 0, resident: HashMap::new(), lru: Vec::new(), peak: 0 }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    pub fn is_resident(&self, id: BufferId) -> bool {
+        self.resident.contains_key(&id)
+    }
+
+    /// Pin a buffer for its whole lifetime (no eviction). Returns
+    /// `Streamed` without allocating when it cannot fit.
+    pub fn pin(&mut self, id: BufferId, bytes: u64) -> Placement {
+        if bytes <= self.free_bytes() {
+            self.used += bytes;
+            self.peak = self.peak.max(self.used);
+            self.resident.insert(id, bytes);
+            Placement::Resident
+        } else {
+            Placement::Streamed
+        }
+    }
+
+    /// Allocate an evictable pool buffer, evicting LRU pool entries as
+    /// needed. Returns the evicted ids (their next touch is a miss), or
+    /// `Err(())` if the buffer can never fit (larger than what pinning
+    /// left available plus all evictables).
+    pub fn pool_alloc(&mut self, id: BufferId, bytes: u64) -> Result<Vec<BufferId>, ()> {
+        let evictable: u64 =
+            self.lru.iter().map(|b| self.resident.get(b).copied().unwrap_or(0)).sum();
+        if bytes > self.free_bytes() + evictable {
+            return Err(());
+        }
+        let mut evicted = Vec::new();
+        while bytes > self.free_bytes() {
+            let victim = self.lru.remove(0);
+            if let Some(sz) = self.resident.remove(&victim) {
+                self.used -= sz;
+                evicted.push(victim);
+            }
+        }
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        self.resident.insert(id, bytes);
+        self.lru.push(id);
+        Ok(evicted)
+    }
+
+    /// LRU touch: mark a pool buffer as recently used; returns true if the
+    /// buffer was resident (a hit).
+    pub fn touch(&mut self, id: BufferId) -> bool {
+        if !self.resident.contains_key(&id) {
+            return false;
+        }
+        if let Some(pos) = self.lru.iter().position(|&b| b == id) {
+            let b = self.lru.remove(pos);
+            self.lru.push(b);
+        }
+        true
+    }
+
+    /// Release a pinned or pooled buffer.
+    pub fn free(&mut self, id: BufferId) {
+        if let Some(sz) = self.resident.remove(&id) {
+            self.used -= sz;
+            if let Some(pos) = self.lru.iter().position(|&b| b == id) {
+                self.lru.remove(pos);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pin_until_full_then_stream() {
+        let mut sp = Scratchpad::new(100);
+        assert_eq!(sp.pin(0, 60), Placement::Resident);
+        assert_eq!(sp.pin(1, 60), Placement::Streamed);
+        assert_eq!(sp.pin(2, 40), Placement::Resident);
+        assert_eq!(sp.used(), 100);
+        assert!(sp.is_resident(0));
+        assert!(!sp.is_resident(1));
+    }
+
+    #[test]
+    fn free_releases_space() {
+        let mut sp = Scratchpad::new(100);
+        sp.pin(0, 80);
+        sp.free(0);
+        assert_eq!(sp.used(), 0);
+        assert_eq!(sp.pin(1, 80), Placement::Resident);
+    }
+
+    #[test]
+    fn pool_evicts_lru_order() {
+        let mut sp = Scratchpad::new(100);
+        sp.pool_alloc(0, 40).unwrap();
+        sp.pool_alloc(1, 40).unwrap();
+        sp.touch(0); // 1 becomes LRU
+        let evicted = sp.pool_alloc(2, 40).unwrap();
+        assert_eq!(evicted, vec![1]);
+        assert!(sp.is_resident(0) && sp.is_resident(2));
+    }
+
+    #[test]
+    fn pool_alloc_too_big_errors() {
+        let mut sp = Scratchpad::new(100);
+        sp.pin(0, 50);
+        assert!(sp.pool_alloc(1, 60).is_err());
+    }
+
+    #[test]
+    fn pool_respects_pinned_space() {
+        let mut sp = Scratchpad::new(100);
+        sp.pin(0, 50);
+        sp.pool_alloc(1, 30).unwrap();
+        let evicted = sp.pool_alloc(2, 40).unwrap();
+        assert_eq!(evicted, vec![1], "must evict pool, never pinned");
+        assert!(sp.is_resident(0));
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut sp = Scratchpad::new(100);
+        sp.pin(0, 70);
+        sp.free(0);
+        sp.pin(1, 30);
+        assert_eq!(sp.peak(), 70);
+    }
+
+    #[test]
+    fn touch_nonresident_is_miss() {
+        let mut sp = Scratchpad::new(10);
+        assert!(!sp.touch(99));
+    }
+}

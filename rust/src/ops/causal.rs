@@ -1,0 +1,240 @@
+//! Full Causal Mask attention lowering — the quadratic baseline.
+//!
+//! Mirrors the vendor kernel the paper measured: **phase-separated** and
+//! cache-naive. QK^T materializes the full N×N score matrix; when it no
+//! longer fits the scratchpad (beyond N ≈ 512 at 16-bit on the 4 MB part)
+//! every score tile is spilled to DRAM with a fresh buffer allocation and
+//! re-pulled twice (softmax pass, PV pass), and K/V are re-streamed per
+//! query block with no software cache. This is the structure behind the
+//! paper's Table V row: 96.7 % pipeline stalls, 7.7 % cache efficiency,
+//! ~120 ms state-reuse latency at N = 8192. The residency check makes the
+//! lowering scratchpad-aware, so `--hw scratchpad_bytes=...` what-if runs
+//! show when a bigger scratchpad would rescue the quadratic kernel.
+
+use crate::config::{NpuConfig, SimConfig, WorkloadSpec};
+
+use super::graph::{BufferAccess, EltKind, NodeId, OpGraph, PrimOp};
+use super::tiling::{tiles, Lowering};
+
+pub fn lower(spec: &WorkloadSpec, hw: &NpuConfig, sim: &SimConfig) -> OpGraph {
+    let n = spec.n;
+    let d = spec.d_head;
+    let t = sim.tile;
+    let tq = tiles(n, t); // query blocks
+    let tk = tiles(n, t); // key blocks (score tiles per row)
+    let eb = sim.elem_bytes;
+    let mut l = Lowering::new(format!("causal N={n} d={d}"), hw, sim);
+
+    let qkv_bytes = (n * d) as u64 * eb;
+    let tile_rows_bytes = (t * d) as u64 * eb; // one 128-row operand block
+    let score_tile_bytes = (t * t) as u64 * eb;
+
+    // Phase separation materializes scores AND probabilities: resident only
+    // when both N×N planes fit next to the staged inputs.
+    let score_plane_bytes = (n * n) as u64 * eb;
+    if 2 * score_plane_bytes + 3 * qkv_bytes <= hw.scratchpad_bytes {
+        return lower_resident(spec, hw, sim);
+    }
+
+    // Q stays resident (1/3 the footprint of K+V); K/V stream per q-block.
+    let (q_buf, q_pull, _q_res) = l.stage_input(qkv_bytes);
+    let k_buf = l.b.buffer();
+    let v_buf = l.b.buffer();
+    let score_buf = l.b.buffer(); // the spilled N×N score matrix
+    let prob_buf = l.b.buffer(); // post-softmax probabilities (also spilled)
+    let out_buf = l.b.buffer();
+
+    // ---- Phase 1: QK^T, spill scores ----------------------------------
+    let mut phase1_tail: Vec<NodeId> = Vec::new();
+    for _qi in 0..tq {
+        // Naive kernel: re-pull all of K for this query block.
+        let k_pulls = l.refill_tiles(k_buf, qkv_bytes, tk, vec![q_pull]);
+        let mut reads = vec![BufferAccess::new(q_buf, tile_rows_bytes, true)];
+        reads.extend(l.reads(k_buf, tile_rows_bytes, tk, false));
+        let mm = l.b.push(
+            PrimOp::MatMul { m: t.min(n), n, k: d },
+            k_pulls,
+            reads,
+            vec![BufferAccess::new(score_buf, (t * n) as u64 * eb, false)],
+        );
+        // Spill each score tile with a fresh allocation (§V alloc churn).
+        let spills = l.spill_tiles(score_buf, (t.min(n) * n) as u64 * eb, tk, vec![mm]);
+        phase1_tail.push(*spills.last().unwrap());
+    }
+
+    // ---- Phase 2: softmax over re-pulled scores, spill probabilities ---
+    let mut phase2_tail: Vec<NodeId> = Vec::new();
+    for _qi in 0..tq {
+        let pulls = l.refill_tiles(score_buf, (t.min(n) * n) as u64 * eb, tk, phase1_tail.clone());
+        let mut reads = l.reads(score_buf, score_tile_bytes, tk, false);
+        reads.push(BufferAccess::new(q_buf, tile_rows_bytes, true));
+        let sm = l.b.push(PrimOp::Softmax { rows: t.min(n), cols: n }, pulls, reads, vec![
+            BufferAccess::new(prob_buf, (t * n) as u64 * eb, false),
+        ]);
+        let spills = l.spill_tiles(prob_buf, (t.min(n) * n) as u64 * eb, tk, vec![sm]);
+        phase2_tail.push(*spills.last().unwrap());
+    }
+
+    // ---- Phase 3: PV with re-pulled probabilities and streamed V -------
+    for _qi in 0..tq {
+        let p_pulls = l.refill_tiles(prob_buf, (t.min(n) * n) as u64 * eb, tk, phase2_tail.clone());
+        let v_pulls = l.refill_tiles(v_buf, qkv_bytes, tk, phase2_tail.clone());
+        let mut deps = p_pulls;
+        deps.extend(v_pulls);
+        let mut reads = l.reads(prob_buf, score_tile_bytes, tk, false);
+        reads.extend(l.reads(v_buf, tile_rows_bytes, tk, false));
+        let mm = l.b.push(
+            PrimOp::MatMul { m: t.min(n), n: d, k: n },
+            deps,
+            reads,
+            vec![BufferAccess::new(out_buf, tile_rows_bytes, true)],
+        );
+        // Scale epilogue (1/sqrt(d) folded here as an elementwise pass).
+        let scale = l.b.push(
+            PrimOp::EltWise { kind: EltKind::Simple, elems: t.min(n) * d },
+            vec![mm],
+            vec![BufferAccess::new(out_buf, tile_rows_bytes, true)],
+            vec![BufferAccess::new(out_buf, tile_rows_bytes, true)],
+        );
+        l.b.push(
+            PrimOp::Transfer {
+                bytes: tile_rows_bytes,
+                dir: super::graph::TransferDir::Push,
+                fresh_alloc: false,
+            },
+            vec![scale],
+            vec![],
+            vec![],
+        );
+    }
+
+    l.finish()
+}
+
+/// Scratchpad-resident path: everything (Q/K/V + both score planes) lives
+/// on-chip; no spills, no K/V re-streaming. This is what a larger
+/// scratchpad buys the quadratic kernel.
+fn lower_resident(spec: &WorkloadSpec, hw: &NpuConfig, sim: &SimConfig) -> OpGraph {
+    let n = spec.n;
+    let d = spec.d_head;
+    let t = sim.tile;
+    let tq = tiles(n, t);
+    let tk = tiles(n, t);
+    let eb = sim.elem_bytes;
+    let mut l = Lowering::new(format!("causal-resident N={n} d={d}"), hw, sim);
+
+    let qkv_bytes = (n * d) as u64 * eb;
+    let tile_rows_bytes = (t.min(n) * d) as u64 * eb;
+    let score_tile_bytes = (t.min(n) * t.min(n)) as u64 * eb;
+
+    let (q_buf, q_pull, _) = l.stage_input(qkv_bytes);
+    let (k_buf, k_pull, _) = l.stage_input(qkv_bytes);
+    let (v_buf, v_pull, _) = l.stage_input(qkv_bytes);
+    let score_buf = l.b.buffer();
+    let out_buf = l.b.buffer();
+
+    for _qi in 0..tq {
+        let mut reads = vec![BufferAccess::new(q_buf, tile_rows_bytes, true)];
+        reads.extend(l.reads(k_buf, tile_rows_bytes, tk, true));
+        let mm = l.b.push(
+            PrimOp::MatMul { m: t.min(n), n, k: d },
+            vec![q_pull, k_pull],
+            reads,
+            vec![BufferAccess::new(score_buf, (t.min(n) * n) as u64 * eb, true)],
+        );
+        let sm = l.b.push(
+            PrimOp::Softmax { rows: t.min(n), cols: n },
+            vec![mm],
+            l.reads(score_buf, score_tile_bytes, tk, true),
+            vec![BufferAccess::new(score_buf, (t.min(n) * n) as u64 * eb, true)],
+        );
+        let mut reads = l.reads(score_buf, score_tile_bytes, tk, true);
+        reads.extend(l.reads(v_buf, tile_rows_bytes, tk, true));
+        let pv = l.b.push(
+            PrimOp::MatMul { m: t.min(n), n: d, k: n },
+            vec![sm, v_pull],
+            reads,
+            vec![BufferAccess::new(out_buf, tile_rows_bytes, true)],
+        );
+        l.b.push(
+            PrimOp::Transfer {
+                bytes: tile_rows_bytes,
+                dir: super::graph::TransferDir::Push,
+                fresh_alloc: false,
+            },
+            vec![pv],
+            vec![],
+            vec![],
+        );
+    }
+    l.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OperatorKind;
+    use crate::npu;
+
+    fn graph(n: usize) -> OpGraph {
+        let spec = WorkloadSpec::new(OperatorKind::Causal, n);
+        lower(&spec, &NpuConfig::default(), &SimConfig::default())
+    }
+
+    #[test]
+    fn graph_is_valid() {
+        graph(512).validate().unwrap();
+        graph(2048).validate().unwrap();
+    }
+
+    #[test]
+    fn node_count_scales_quadratically() {
+        let a = graph(1024).len();
+        let b = graph(2048).len();
+        let ratio = b as f64 / a as f64;
+        assert!((3.0..5.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn dma_traffic_dominated_by_score_spills() {
+        let g = graph(4096);
+        // Score matrix round trips ≈ 4·N²·e bytes; q/k/v are megabytes.
+        let n = 4096u64;
+        let score_rt = 4 * n * n * 2;
+        let traffic = g.dma_bytes();
+        assert!(
+            traffic > score_rt / 2 && traffic < score_rt * 2,
+            "traffic {traffic} vs score round-trip {score_rt}"
+        );
+    }
+
+    #[test]
+    fn simulated_latency_scales_quadratically() {
+        let hw = NpuConfig::default();
+        let sim = SimConfig::default();
+        let r1 = npu::run(&graph(1024), &hw, &sim);
+        let r2 = npu::run(&graph(2048), &hw, &sim);
+        let ratio = r2.span_ns / r1.span_ns;
+        assert!((2.8..5.5).contains(&ratio), "latency ratio {ratio}");
+    }
+
+    #[test]
+    fn cache_efficiency_is_poor() {
+        let hw = NpuConfig::default();
+        let sim = SimConfig::default();
+        let r = npu::run(&graph(4096), &hw, &sim);
+        assert!(
+            r.cache.efficiency() < 0.20,
+            "causal must be cache-hostile: {}",
+            r.cache.efficiency()
+        );
+    }
+
+    #[test]
+    fn stalls_dominate_at_long_context() {
+        let hw = NpuConfig::default();
+        let sim = SimConfig::default();
+        let r = npu::run(&graph(4096), &hw, &sim);
+        assert!(r.stall.stall_frac() > 0.7, "stall {}", r.stall.stall_frac());
+    }
+}

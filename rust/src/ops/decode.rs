@@ -1,0 +1,217 @@
+//! Decode-phase lowering: one autoregressive step (paper §II-A, Eq. 3).
+//!
+//! The prefill microbenchmarks (Tables II-VIII) process N tokens at once;
+//! on-device inference then decodes token-by-token:
+//!
+//! ```text
+//! y_t, C_t = g_theta(x_t, C_{t-1})
+//! ```
+//!
+//! For attention-class operators the step cost grows with the retained
+//! context (a 1×N score row against the KV cache, with the matvec using
+//! one row of the 128-wide systolic array — the paper's "SSMs underutilize
+//! NPU parallelism" observation cuts both ways); for recurrent-state
+//! operators the step is O(d·d_state), constant in N. This module lowers
+//! one decode step so the coordinator and benches can model sustained
+//! tokens/s vs context — the quantity that actually gates on-device chat.
+
+use crate::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+
+use super::graph::{BufferAccess, EltKind, OpGraph, PrimOp, TransferDir};
+use super::tiling::{tiles, Lowering};
+use super::toeplitz::band_for;
+
+/// Lower a single decode step at retained context `spec.n`.
+pub fn lower_step(spec: &WorkloadSpec, hw: &NpuConfig, sim: &SimConfig) -> OpGraph {
+    match spec.op {
+        OperatorKind::Causal | OperatorKind::Retentive => kv_decode(spec, hw, sim),
+        OperatorKind::Toeplitz => banded_decode(spec, hw, sim),
+        OperatorKind::Linear | OperatorKind::Fourier => recurrent_decode(spec, hw, sim),
+    }
+}
+
+/// Attention decode: q_t · K^T over the whole KV cache + softmax + probs·V.
+fn kv_decode(spec: &WorkloadSpec, hw: &NpuConfig, sim: &SimConfig) -> OpGraph {
+    let n = spec.n;
+    let d = spec.d_head;
+    let t = sim.tile;
+    let eb = sim.elem_bytes;
+    let tk = tiles(n, t);
+    let mut l = Lowering::new(format!("{}-decode N={n}", spec.op.name()), hw, sim);
+
+    let kv_tile_bytes = (t.min(n) * d) as u64 * eb;
+    let k_buf = l.b.buffer();
+    let v_buf = l.b.buffer();
+    let score_buf = l.b.buffer();
+    let out_buf = l.b.buffer();
+
+    // KV cache streams from DRAM: at long context it no longer fits the
+    // scratchpad next to everything else, and decode touches all of it.
+    let k_pulls = l.refill_tiles(k_buf, (n * d) as u64 * eb, tk, vec![]);
+    // q_t · K^T : a 1-row matvec — the systolic array runs at 1/128 of its
+    // height (the decode-phase underutilization the paper warns about).
+    let mut reads = l.reads(k_buf, kv_tile_bytes, tk, false);
+    reads.push(BufferAccess::new(score_buf, n as u64 * eb, true));
+    let mm = l.b.push(PrimOp::MatMul { m: 1, n, k: d }, k_pulls, reads, vec![
+        BufferAccess::new(score_buf, n as u64 * eb, true),
+    ]);
+    // Retentive adds the decay epilogue on the score row.
+    let pre_softmax = if spec.op == OperatorKind::Retentive {
+        l.b.push(
+            PrimOp::EltWise { kind: EltKind::Exp, elems: 2 * n },
+            vec![mm],
+            vec![BufferAccess::new(score_buf, n as u64 * eb, true)],
+            vec![BufferAccess::new(score_buf, n as u64 * eb, true)],
+        )
+    } else {
+        mm
+    };
+    let sm = l.b.push(
+        PrimOp::Softmax { rows: 1, cols: n },
+        vec![pre_softmax],
+        vec![BufferAccess::new(score_buf, n as u64 * eb, true)],
+        vec![BufferAccess::new(score_buf, n as u64 * eb, true)],
+    );
+    let v_pulls = l.refill_tiles(v_buf, (n * d) as u64 * eb, tk, vec![sm]);
+    let mut reads = l.reads(v_buf, kv_tile_bytes, tk, false);
+    reads.push(BufferAccess::new(score_buf, n as u64 * eb, true));
+    let pv = l.b.push(PrimOp::MatMul { m: 1, n: d, k: n }, v_pulls, reads, vec![
+        BufferAccess::new(out_buf, d as u64 * eb, true),
+    ]);
+    // Append k_t/v_t to the cache (the O(N·d) memory growth of Fig 1).
+    l.b.push(
+        PrimOp::Transfer { bytes: 2 * d as u64 * eb, dir: TransferDir::Push, fresh_alloc: false },
+        vec![pv],
+        vec![],
+        vec![],
+    );
+    l.finish()
+}
+
+/// Toeplitz decode: attends to its band only — constant-size window.
+fn banded_decode(spec: &WorkloadSpec, hw: &NpuConfig, sim: &SimConfig) -> OpGraph {
+    let band = band_for(spec).min(spec.n);
+    let windowed = WorkloadSpec { n: band, ..*spec };
+    let mut g = kv_decode(&windowed, hw, sim);
+    g.label = format!("toeplitz-decode N={} band={band}", spec.n);
+    g
+}
+
+/// Recurrent decode: state update + readout, independent of context.
+fn recurrent_decode(spec: &WorkloadSpec, hw: &NpuConfig, sim: &SimConfig) -> OpGraph {
+    let d = spec.d_head;
+    let r = spec.d_state;
+    let eb = sim.elem_bytes;
+    let mut l = Lowering::new(format!("{}-decode N={}", spec.op.name(), spec.n), hw, sim);
+
+    let state_bytes = (r * d) as u64 * eb;
+    let (s_buf, s_pull, _) = l.stage_input(state_bytes);
+
+    // phi(x_t) projection: 1×d · d×r.
+    let phi = l.b.push(
+        PrimOp::MatMul { m: 1, n: r, k: d },
+        vec![s_pull],
+        vec![BufferAccess::new(s_buf, (d * r) as u64 * eb, true)],
+        vec![],
+    );
+    let act = l.b.push(PrimOp::EltWise { kind: EltKind::Exp, elems: 2 * r }, vec![phi], vec![], vec![]);
+    // State update S += phi(k_t) ⊗ v_t  (outer product, r×d).
+    let upd = l.b.push(
+        PrimOp::MatMul { m: r, n: d, k: 1 },
+        vec![act],
+        vec![BufferAccess::new(s_buf, state_bytes, true)],
+        vec![BufferAccess::new(s_buf, state_bytes, true)],
+    );
+    // Readout y_t = phi(q_t) · S + normalize.
+    let read = l.b.push(
+        PrimOp::MatMul { m: 1, n: d, k: r },
+        vec![upd],
+        vec![BufferAccess::new(s_buf, state_bytes, true)],
+        vec![],
+    );
+    let norm = l.b.push(
+        PrimOp::EltWise { kind: EltKind::Simple, elems: 2 * d },
+        vec![read],
+        vec![],
+        vec![],
+    );
+    l.b.push(
+        PrimOp::Transfer { bytes: d as u64 * eb, dir: TransferDir::Push, fresh_alloc: false },
+        vec![norm],
+        vec![],
+        vec![],
+    );
+    l.finish()
+}
+
+/// Sustained decode throughput (tokens/s) at retained context `n`.
+pub fn tokens_per_second(spec: &WorkloadSpec, hw: &NpuConfig, sim: &SimConfig) -> f64 {
+    let g = lower_step(spec, hw, sim);
+    let r = crate::npu::run(&g, hw, sim);
+    1e9 / r.span_ns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::npu;
+
+    fn step(op: OperatorKind, n: usize) -> npu::ExecReport {
+        let hw = NpuConfig::default();
+        let sim = SimConfig::default();
+        let spec = WorkloadSpec::new(op, n);
+        let g = lower_step(&spec, &hw, &sim);
+        g.validate().unwrap();
+        npu::run(&g, &hw, &sim)
+    }
+
+    #[test]
+    fn kv_decode_cost_grows_with_context() {
+        let a = step(OperatorKind::Causal, 1024).span_ns;
+        let b = step(OperatorKind::Causal, 8192).span_ns;
+        assert!(b > 3.0 * a, "decode against a bigger cache must cost more: {a} vs {b}");
+    }
+
+    #[test]
+    fn recurrent_decode_is_context_independent() {
+        let a = step(OperatorKind::Linear, 1024).span_ns;
+        let b = step(OperatorKind::Linear, 65536).span_ns;
+        assert_eq!(a, b, "O(d·r) decode step is flat in N");
+    }
+
+    #[test]
+    fn banded_decode_plateaus_at_band() {
+        let a = step(OperatorKind::Toeplitz, 256).span_ns;
+        let b = step(OperatorKind::Toeplitz, 8192).span_ns;
+        // Band caps the window: beyond N=band the cost is flat.
+        let c = step(OperatorKind::Toeplitz, 16384).span_ns;
+        assert!(b <= a * 2.0, "band caps decode cost");
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn recurrent_beats_kv_decode_at_long_context() {
+        // The memory-state tradeoff pays off at decode time (paper §II-A).
+        let kv = step(OperatorKind::Causal, 16384).span_ns;
+        let ssm = step(OperatorKind::Linear, 16384).span_ns;
+        assert!(kv / ssm > 10.0, "kv {kv} vs ssm {ssm}");
+    }
+
+    #[test]
+    fn retentive_decode_pays_decay_on_shave() {
+        let causal = step(OperatorKind::Causal, 4096);
+        let ret = step(OperatorKind::Retentive, 4096);
+        assert!(ret.busy_ns[1] > causal.busy_ns[1], "decay epilogue adds SHAVE work");
+    }
+
+    #[test]
+    fn tokens_per_second_sane() {
+        let hw = NpuConfig::default();
+        let sim = SimConfig::default();
+        let tps = tokens_per_second(&WorkloadSpec::new(OperatorKind::Linear, 8192), &hw, &sim);
+        assert!(tps > 1000.0, "recurrent decode should sustain kHz: {tps}");
+        let tps_kv =
+            tokens_per_second(&WorkloadSpec::new(OperatorKind::Causal, 8192), &hw, &sim);
+        assert!(tps_kv < tps);
+    }
+}

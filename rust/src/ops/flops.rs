@@ -1,0 +1,167 @@
+//! Analytical operation / traffic / intensity accounting (paper §IV-B,
+//! Table VII).
+//!
+//! Intensity = logical ops / bytes that must cross the DMA boundary. The
+//! byte terms mirror what each *lowering* actually streams:
+//!
+//! - **Full Causal** (phase-separated, spilling): the N×N score matrix is
+//!   written and re-read (2·N²·e) on top of Q/K/V/O (8·N·d·e). At N=4096,
+//!   d=64, e=2 this gives 61.1 Ops/Byte — the paper's 61.13.
+//! - **Retentive** (decay epilogue adds a modify pass: 2.5 score-matrix
+//!   streams) → 50 Ops/Byte, matching the paper.
+//! - **Toeplitz** (band-limited): only the N×B score band streams.
+//! - **Linear** (chunked): per-step state stream 2·N·r·d·e dominates.
+//! - **Fourier**: DFT weight tiles stream (4 transforms × N²·e re+im).
+
+use crate::config::{OperatorKind, WorkloadSpec};
+
+/// Analytical profile of one operator invocation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpProfile {
+    /// Logical compute ops (MAC = 2 ops; element-wise = 1 op/elem).
+    pub ops: u64,
+    /// Bytes crossing the DMA boundary (DRAM ↔ scratchpad).
+    pub bytes: u64,
+}
+
+impl OpProfile {
+    pub fn intensity(&self) -> f64 {
+        if self.bytes == 0 {
+            0.0
+        } else {
+            self.ops as f64 / self.bytes as f64
+        }
+    }
+}
+
+/// Paper-default Toeplitz band.
+pub const TOEPLITZ_BAND: usize = 128;
+/// Chunk length for the chunked linear lowering.
+pub const LINEAR_CHUNK: usize = 128;
+
+/// Analytical profile for `spec` at `elem_bytes` precision.
+pub fn profile(spec: &WorkloadSpec, elem_bytes: u64) -> OpProfile {
+    let n = spec.n as u64;
+    let d = spec.d_head as u64;
+    let r = spec.d_state as u64;
+    let e = elem_bytes;
+    match spec.op {
+        OperatorKind::Causal => OpProfile {
+            // QK^T + PV (2 matmuls ⇒ 4·N²·d) + 4-pass softmax.
+            ops: 4 * n * n * d + 4 * n * n,
+            // Score spill round-trip + Q/K/V/O.
+            bytes: 2 * n * n * e + 8 * n * d * e,
+        },
+        OperatorKind::Retentive => OpProfile {
+            // Matmuls + decay epilogue (2 elementwise passes) + softmax.
+            ops: 4 * n * n * d + 6 * n * n,
+            // 2.5 score-matrix streams (write, decay modify, softmax read)
+            // + Q/K/V/O — the paper's 50 Ops/Byte at the default shape.
+            bytes: 5 * n * n * e / 2 + 8 * n * d * e,
+        },
+        OperatorKind::Toeplitz => {
+            let b = (TOEPLITZ_BAND as u64).min(n);
+            OpProfile {
+                // Banded QK^T + PV + decay/softmax over the band.
+                ops: 4 * n * b * d + 6 * n * b,
+                // Band scores stream once + Q/K/V/O + window overlap refetch.
+                bytes: n * b * e + 10 * n * d * e,
+            }
+        }
+        OperatorKind::Linear => {
+            let c = (LINEAR_CHUNK as u64).min(n);
+            OpProfile {
+                // phi projections + intra-chunk (N·C·(r+d)) + state path.
+                ops: 4 * n * r * d + 2 * n * c * (r + d) + 6 * n * r,
+                // Per-step state stream + Q/K/V/O.
+                bytes: 2 * n * r * d * e / (c / 8).max(1) + 8 * n * d * e,
+            }
+        }
+        OperatorKind::Fourier => {
+            // *Algorithmic* FFT accounting (the paper's convention): the
+            // useful work is 4 transforms × 5·N·log2(N) complex ops per
+            // channel + the spectrum product — NOT the 16·N²·d the DFT
+            // matmul realization burns. This is why Fourier's measured
+            // GOP/s craters (0.34 in Table VII): the NPU executes a
+            // quadratic realization of an N·log N algorithm.
+            let log_n = (usize::BITS - (spec.n.max(2) - 1).leading_zeros()) as u64;
+            OpProfile {
+                ops: 4 * 5 * n * log_n * d * 2 + 8 * (n / 2 + 1) * d,
+                // Ideal I/O: q/k/v/o + complex spectra round trip.
+                bytes: 8 * n * d * e + 4 * n * d * e,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadSpec;
+
+    fn spec(op: OperatorKind, n: usize) -> WorkloadSpec {
+        WorkloadSpec::new(op, n)
+    }
+
+    #[test]
+    fn causal_intensity_matches_paper_value() {
+        // Paper Table VII: 61.13 Ops/Byte at N=4096, d_h=64, 16-bit.
+        let p = profile(&spec(OperatorKind::Causal, 4096), 2);
+        assert!(
+            (p.intensity() - 61.13).abs() < 1.0,
+            "causal intensity {:.2}",
+            p.intensity()
+        );
+    }
+
+    #[test]
+    fn retentive_intensity_near_paper() {
+        // Paper: 50.00.
+        let p = profile(&spec(OperatorKind::Retentive, 4096), 2);
+        assert!((p.intensity() - 50.0).abs() < 2.0, "{:.2}", p.intensity());
+    }
+
+    #[test]
+    fn intensity_ordering_matches_table7() {
+        // Causal > Retentive > Toeplitz > Linear ≈ Fourier.
+        let at = |op| profile(&spec(op, 4096), 2).intensity();
+        let causal = at(OperatorKind::Causal);
+        let retentive = at(OperatorKind::Retentive);
+        let toeplitz = at(OperatorKind::Toeplitz);
+        let linear = at(OperatorKind::Linear);
+        let fourier = at(OperatorKind::Fourier);
+        assert!(causal > retentive && retentive > toeplitz);
+        assert!(toeplitz > linear.min(fourier));
+    }
+
+    #[test]
+    fn quadratic_ops_scale_quadratically() {
+        let p1 = profile(&spec(OperatorKind::Causal, 1024), 2);
+        let p2 = profile(&spec(OperatorKind::Causal, 2048), 2);
+        let ratio = p2.ops as f64 / p1.ops as f64;
+        assert!((ratio - 4.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn subquadratic_ops_scale_linearly() {
+        for op in [OperatorKind::Toeplitz, OperatorKind::Linear] {
+            let p1 = profile(&spec(op, 1024), 2);
+            let p2 = profile(&spec(op, 2048), 2);
+            let ratio = p2.ops as f64 / p1.ops as f64;
+            assert!((ratio - 2.0).abs() < 0.1, "{op:?} ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn d_state_raises_linear_cost() {
+        let lo = profile(&spec(OperatorKind::Linear, 4096).with_d_state(16), 2);
+        let hi = profile(&spec(OperatorKind::Linear, 4096).with_d_state(128), 2);
+        assert!(hi.ops > lo.ops);
+    }
+
+    #[test]
+    fn zero_bytes_guard() {
+        let p = OpProfile { ops: 10, bytes: 0 };
+        assert_eq!(p.intensity(), 0.0);
+    }
+}

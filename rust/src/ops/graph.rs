@@ -1,0 +1,310 @@
+//! The primitive-op DAG the NPU simulator executes.
+
+/// Execution engines on the heterogeneous NPU (paper Fig 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Engine {
+    /// Data Path Unit — 128×128 systolic array (matmul).
+    Dpu,
+    /// SHAVE vector cores (element-wise, softmax, activations).
+    Shave,
+    /// DMA engine (global memory ↔ scratchpad).
+    Dma,
+    /// Host CPU (only used by the §V offload ablation).
+    Cpu,
+}
+
+impl Engine {
+    pub const ALL: [Engine; 4] = [Engine::Dpu, Engine::Shave, Engine::Dma, Engine::Cpu];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Dpu => "DPU",
+            Engine::Shave => "SHAVE",
+            Engine::Dma => "DMA",
+            Engine::Cpu => "CPU",
+        }
+    }
+}
+
+/// Element-wise op class (cost class on SHAVE).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EltKind {
+    /// mul/add/scale/mask — 1 cycle/elem class.
+    Simple,
+    /// exp/log/elu — transcendental class.
+    Exp,
+}
+
+/// Transfer direction — determines whether the alloc penalty applies and
+/// how the cache model classifies the traffic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransferDir {
+    /// DRAM → scratchpad (the pipeline's "pull" stage).
+    Pull,
+    /// Scratchpad → DRAM (spill / result writeback, "push" stage).
+    Push,
+}
+
+/// Primitive operation, the unit of scheduling.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PrimOp {
+    /// Dense matmul `m×k · k×n` on the DPU.
+    MatMul { m: usize, n: usize, k: usize },
+    /// Element-wise op over `elems` elements on SHAVE.
+    EltWise { kind: EltKind, elems: usize },
+    /// Row softmax over a `rows×cols` tile on SHAVE (max/sub-exp/sum/div).
+    Softmax { rows: usize, cols: usize },
+    /// DMA transfer of `bytes`; `fresh_alloc` charges the §V
+    /// allocation/deallocation penalty.
+    Transfer { bytes: u64, dir: TransferDir, fresh_alloc: bool },
+    /// DMA-driven tensor concat (Fourier state management): modeled as a
+    /// gather of `bytes` into a freshly allocated contiguous buffer.
+    Concat { bytes: u64 },
+    /// Host-CPU byte-moving op (offload ablation).
+    HostOp { bytes: u64 },
+}
+
+impl PrimOp {
+    /// Which engine executes this primitive.
+    pub fn engine(&self) -> Engine {
+        match self {
+            PrimOp::MatMul { .. } => Engine::Dpu,
+            PrimOp::EltWise { .. } | PrimOp::Softmax { .. } => Engine::Shave,
+            PrimOp::Transfer { .. } | PrimOp::Concat { .. } => Engine::Dma,
+            PrimOp::HostOp { .. } => Engine::Cpu,
+        }
+    }
+
+    /// Logical ops performed (for achieved-GOP/s accounting): 2·m·n·k for
+    /// matmul, one op/elem for element-wise work, 0 for pure data movement.
+    pub fn logical_ops(&self) -> u64 {
+        match self {
+            PrimOp::MatMul { m, n, k } => 2 * (*m as u64) * (*n as u64) * (*k as u64),
+            PrimOp::EltWise { elems, .. } => *elems as u64,
+            PrimOp::Softmax { rows, cols } => 4 * (*rows as u64) * (*cols as u64),
+            _ => 0,
+        }
+    }
+}
+
+/// Buffer identity for cache/reuse accounting.
+pub type BufferId = usize;
+
+/// One operand access: `hit` means the scratchpad allocator found the
+/// buffer resident (no DMA needed); misses always have a companion
+/// `Transfer` node in the DAG.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BufferAccess {
+    pub buffer: BufferId,
+    /// Bytes per individual access (one tile).
+    pub bytes: u64,
+    pub hit: bool,
+    /// Run-length: how many identical tile accesses this entry stands for.
+    /// (Access lists are RLE-compressed — §Perf in EXPERIMENTS.md.)
+    pub count: u32,
+}
+
+impl BufferAccess {
+    pub fn new(buffer: BufferId, bytes: u64, hit: bool) -> Self {
+        Self { buffer, bytes, hit, count: 1 }
+    }
+
+    pub fn counted(buffer: BufferId, bytes: u64, hit: bool, count: u32) -> Self {
+        Self { buffer, bytes, hit, count }
+    }
+}
+
+pub type NodeId = usize;
+
+/// A scheduled node: primitive + dependencies + operand accesses.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub prim: PrimOp,
+    pub deps: Vec<NodeId>,
+    pub reads: Vec<BufferAccess>,
+    pub writes: Vec<BufferAccess>,
+}
+
+/// The lowered DAG for one operator invocation.
+#[derive(Clone, Debug, Default)]
+pub struct OpGraph {
+    pub nodes: Vec<Node>,
+    /// Total logical ops (numerator of achieved GOP/s).
+    pub logical_ops: u64,
+    /// Human label, e.g. "causal N=4096".
+    pub label: String,
+}
+
+impl OpGraph {
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Sum of DMA bytes moved (denominator of achieved intensity).
+    pub fn dma_bytes(&self) -> u64 {
+        self.nodes
+            .iter()
+            .map(|n| match n.prim {
+                PrimOp::Transfer { bytes, .. } | PrimOp::Concat { bytes } => bytes,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Validate DAG shape: ids are dense, deps point backwards (the
+    /// builders emit nodes in a valid topological order).
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, node) in self.nodes.iter().enumerate() {
+            if node.id != i {
+                return Err(format!("node {i} has id {}", node.id));
+            }
+            for &d in &node.deps {
+                if d >= i {
+                    return Err(format!("node {i} depends on later/self node {d}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-engine node counts (sanity in tests and reports).
+    pub fn engine_counts(&self) -> [usize; 4] {
+        let mut c = [0usize; 4];
+        for n in &self.nodes {
+            match n.prim.engine() {
+                Engine::Dpu => c[0] += 1,
+                Engine::Shave => c[1] += 1,
+                Engine::Dma => c[2] += 1,
+                Engine::Cpu => c[3] += 1,
+            }
+        }
+        c
+    }
+}
+
+/// Incremental DAG builder used by the per-operator lowerings.
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    nodes: Vec<Node>,
+    next_buffer: BufferId,
+    label: String,
+}
+
+impl GraphBuilder {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { nodes: Vec::new(), next_buffer: 0, label: label.into() }
+    }
+
+    /// Reserve a fresh buffer id.
+    pub fn buffer(&mut self) -> BufferId {
+        let id = self.next_buffer;
+        self.next_buffer += 1;
+        id
+    }
+
+    /// Append a node; `deps` must refer to already-added nodes.
+    pub fn push(
+        &mut self,
+        prim: PrimOp,
+        deps: Vec<NodeId>,
+        reads: Vec<BufferAccess>,
+        writes: Vec<BufferAccess>,
+    ) -> NodeId {
+        let id = self.nodes.len();
+        debug_assert!(deps.iter().all(|&d| d < id), "deps must precede node");
+        self.nodes.push(Node { id, prim, deps, reads, writes });
+        id
+    }
+
+    /// Append a node with no buffer metadata (pure scheduling edges).
+    pub fn push_simple(&mut self, prim: PrimOp, deps: Vec<NodeId>) -> NodeId {
+        self.push(prim, deps, Vec::new(), Vec::new())
+    }
+
+    pub fn finish(self) -> OpGraph {
+        let logical_ops = self.nodes.iter().map(|n| n.prim.logical_ops()).sum();
+        OpGraph { nodes: self.nodes, logical_ops, label: self.label }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mm(m: usize, n: usize, k: usize) -> PrimOp {
+        PrimOp::MatMul { m, n, k }
+    }
+
+    #[test]
+    fn engines_assigned_by_prim() {
+        assert_eq!(mm(1, 1, 1).engine(), Engine::Dpu);
+        assert_eq!(
+            PrimOp::Softmax { rows: 2, cols: 2 }.engine(),
+            Engine::Shave
+        );
+        assert_eq!(
+            PrimOp::Transfer { bytes: 8, dir: TransferDir::Pull, fresh_alloc: false }
+                .engine(),
+            Engine::Dma
+        );
+        assert_eq!(PrimOp::HostOp { bytes: 8 }.engine(), Engine::Cpu);
+    }
+
+    #[test]
+    fn logical_ops_matmul() {
+        assert_eq!(mm(128, 128, 128).logical_ops(), 2 * 128 * 128 * 128);
+        assert_eq!(PrimOp::Softmax { rows: 4, cols: 8 }.logical_ops(), 4 * 32);
+        assert_eq!(
+            PrimOp::Transfer { bytes: 64, dir: TransferDir::Push, fresh_alloc: true }
+                .logical_ops(),
+            0
+        );
+    }
+
+    #[test]
+    fn builder_produces_valid_topological_graph() {
+        let mut b = GraphBuilder::new("test");
+        let t0 = b.push_simple(
+            PrimOp::Transfer { bytes: 100, dir: TransferDir::Pull, fresh_alloc: true },
+            vec![],
+        );
+        let m0 = b.push_simple(mm(128, 128, 128), vec![t0]);
+        let _s0 = b.push_simple(PrimOp::Softmax { rows: 128, cols: 128 }, vec![m0]);
+        let g = b.finish();
+        assert_eq!(g.len(), 3);
+        g.validate().unwrap();
+        assert_eq!(g.logical_ops, 2 * 128 * 128 * 128 + 4 * 128 * 128);
+        assert_eq!(g.dma_bytes(), 100);
+        assert_eq!(g.engine_counts(), [1, 1, 1, 0]);
+    }
+
+    #[test]
+    fn validate_rejects_forward_dep() {
+        let g = OpGraph {
+            nodes: vec![Node {
+                id: 0,
+                prim: mm(1, 1, 1),
+                deps: vec![5],
+                reads: vec![],
+                writes: vec![],
+            }],
+            logical_ops: 0,
+            label: String::new(),
+        };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn buffer_ids_are_unique() {
+        let mut b = GraphBuilder::new("buf");
+        let ids: Vec<_> = (0..10).map(|_| b.buffer()).collect();
+        let mut dedup = ids.clone();
+        dedup.dedup();
+        assert_eq!(ids, dedup);
+    }
+}

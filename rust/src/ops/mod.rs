@@ -1,0 +1,47 @@
+//! Operator IR and lowerings.
+//!
+//! Each causal operator (paper §II-C) is lowered — exactly like the vendor
+//! NPU compiler would — into a DAG of *primitive ops* scheduled onto the
+//! NPU's engines:
+//!
+//! - [`PrimOp::MatMul`]   → DPU (systolic array)
+//! - [`PrimOp::EltWise`] / [`PrimOp::Softmax`] → SHAVE vector cores
+//! - [`PrimOp::Transfer`] / [`PrimOp::Concat`] → DMA engine
+//! - [`PrimOp::HostOp`]   → host CPU (§V concat-offload ablation)
+//!
+//! The lowering makes all data movement *explicit*: every operand that is
+//! not resident in the 4 MB scratchpad appears as a `Transfer` node, and
+//! every buffer access is tagged hit/miss by the scratchpad allocator in
+//! [`tiling`]. The event-driven simulator in [`crate::npu`] then executes
+//! the DAG and the paper's utilization/stall/cache numbers fall out.
+
+pub mod causal;
+pub mod decode;
+pub mod flops;
+pub mod fourier;
+pub mod graph;
+pub mod linear;
+pub mod masks;
+pub mod retentive;
+pub mod retentive_chunked;
+pub mod tiling;
+pub mod toeplitz;
+
+pub use graph::{
+    BufferAccess, BufferId, Engine, EltKind, GraphBuilder, Node, NodeId, OpGraph, PrimOp,
+    TransferDir,
+};
+
+use crate::config::{OperatorKind, SimConfig, WorkloadSpec};
+use crate::config::hw::NpuConfig;
+
+/// Lower a workload to its primitive-op DAG (dispatch over operator kind).
+pub fn lower(spec: &WorkloadSpec, hw: &NpuConfig, sim: &SimConfig) -> OpGraph {
+    match spec.op {
+        OperatorKind::Causal => causal::lower(spec, hw, sim),
+        OperatorKind::Retentive => retentive::lower(spec, hw, sim),
+        OperatorKind::Toeplitz => toeplitz::lower(spec, hw, sim),
+        OperatorKind::Linear => linear::lower(spec, hw, sim),
+        OperatorKind::Fourier => fourier::lower(spec, hw, sim),
+    }
+}

@@ -1,0 +1,177 @@
+//! Retentive decay attention (the paper's DRA) lowering.
+//!
+//! Fused tile-wise schedule: K/V pinned in scratchpad, each 128×128 score
+//! tile is produced on the DPU, decay-weighted (exp-class element-wise) and
+//! consumed in place — no DRAM spill, hence the paper's 0 % DMA column.
+//! The cost: every score element takes an extra exp-class SHAVE pass, and
+//! row softmax over long contexts needs hierarchical merge passes that
+//! re-traverse scratchpad tiles. That is exactly the Table II story —
+//! DPU-bound at short N, **SHAVE-bound** past N ≈ 1024 (65-76 % SHAVE).
+
+use crate::config::{NpuConfig, SimConfig, WorkloadSpec};
+
+use super::graph::{BufferAccess, EltKind, OpGraph, PrimOp, TransferDir};
+use super::tiling::{tiles, Lowering};
+
+pub fn lower(spec: &WorkloadSpec, hw: &NpuConfig, sim: &SimConfig) -> OpGraph {
+    let n = spec.n;
+    let d = spec.d_head;
+    let t = sim.tile;
+    let tq = tiles(n, t);
+    let eb = sim.elem_bytes;
+    let mut l = Lowering::new(format!("retentive N={n} d={d}"), hw, sim);
+
+    let qkv_bytes = (n * d) as u64 * eb;
+    let tile_rows_bytes = (t * d) as u64 * eb;
+    let score_tile_bytes = (t * t) as u64 * eb;
+
+    // All three operands pinned (3·N·d·e ≤ 3 MiB at N = 8192, d = 64).
+    let (q_buf, q_pull, _) = l.stage_input(qkv_bytes);
+    let (k_buf, k_pull, _) = l.stage_input(qkv_bytes);
+    let (v_buf, v_pull, _) = l.stage_input(qkv_bytes);
+    let score_buf = l.b.buffer();
+    let out_buf = l.b.buffer();
+
+    // Bytes above which a score row-block overflows the SHAVE-local
+    // working set: every re-traversal of a rewritten tile then counts as a
+    // cache miss ("partial-result churn"). 128-row blocks cross this at
+    // cols > 1024 — exactly where the paper's cache efficiency collapses.
+    const CHURN_BYTES: u64 = 256 * 1024;
+
+    let mut prev_decay: Option<super::graph::NodeId> = None;
+    for qi in 0..tq {
+        let kt = qi + 1; // causal: only k-tiles j <= i
+        let cols = kt * t.min(n);
+        let churn = (t.min(n) * cols) as u64 * eb > CHURN_BYTES;
+        let mut tile_chain = Vec::with_capacity(kt * 2);
+        for _kj in 0..kt {
+            // Score tile on the DPU: q-tile (hit) × k-tile (hit). A single
+            // staging tile ping-pongs between DPU and SHAVE: the next score
+            // tile cannot start until the previous decay pass drained it —
+            // the serialization behind the paper's 94.8 % stall row.
+            let mut deps = vec![q_pull, k_pull];
+            if let Some(p) = prev_decay {
+                deps.push(p);
+            }
+            let mm = l.b.push(
+                PrimOp::MatMul { m: t.min(n), n: t.min(n), k: d },
+                deps,
+                vec![
+                    BufferAccess::new(q_buf, tile_rows_bytes, true),
+                    BufferAccess::new(k_buf, tile_rows_bytes, true),
+                ],
+                vec![BufferAccess::new(score_buf, score_tile_bytes, true)],
+            );
+            // Decay epilogue gamma^(i-j) = exp((i-j)·ln γ): computing the
+            // exponent plane + exp + multiply is two exp-class passes.
+            let decay = l.b.push(
+                PrimOp::EltWise { kind: EltKind::Exp, elems: 2 * t.min(n) * t.min(n) },
+                vec![mm],
+                vec![BufferAccess::new(score_buf, score_tile_bytes, !churn)],
+                vec![BufferAccess::new(score_buf, score_tile_bytes, !churn)],
+            );
+            prev_decay = Some(decay);
+            tile_chain.push(decay);
+        }
+        // Row softmax across the whole (i+1)·128-wide row block: re-reads
+        // every rewritten score tile (churn misses past the threshold).
+        let sm = l.b.push(
+            PrimOp::Softmax { rows: t.min(n), cols },
+            tile_chain,
+            l.reads(score_buf, score_tile_bytes, kt, !churn),
+            vec![BufferAccess::new(score_buf, score_tile_bytes, !churn)],
+        );
+        // PV over the row block: probabilities re-read post-rewrite, V pinned.
+        let mut reads = l.reads(score_buf, score_tile_bytes, kt, !churn);
+        reads.extend(l.reads(v_buf, tile_rows_bytes, kt, true));
+        let pv = l.b.push(
+            PrimOp::MatMul { m: t.min(n), n: d, k: cols },
+            vec![sm, v_pull],
+            reads,
+            vec![BufferAccess::new(out_buf, tile_rows_bytes, true)],
+        );
+        l.b.push(
+            PrimOp::Transfer { bytes: tile_rows_bytes, dir: TransferDir::Push, fresh_alloc: false },
+            vec![pv],
+            vec![],
+            vec![],
+        );
+    }
+
+    l.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OperatorKind;
+    use crate::npu;
+    use crate::ops::Engine;
+
+    fn run(n: usize) -> npu::ExecReport {
+        let spec = WorkloadSpec::new(OperatorKind::Retentive, n);
+        let g = lower(&spec, &NpuConfig::default(), &SimConfig::default());
+        g.validate().unwrap();
+        npu::run(&g, &NpuConfig::default(), &SimConfig::default())
+    }
+
+    #[test]
+    fn dma_share_is_negligible() {
+        // Paper Table II: DMA 0.0 % for Retentive at every context.
+        let r = run(2048);
+        let [_, dma, _] = r.utilization();
+        assert!(dma < 0.05, "retentive DMA share {dma}");
+    }
+
+    #[test]
+    fn becomes_shave_bound_at_long_context() {
+        // Paper: DPU-bound ≤512, SHAVE-bound ≥1024 (65-76 % SHAVE).
+        let short = run(256);
+        let long = run(8192);
+        let [_, _, shave_short] = short.utilization();
+        let [_, _, shave_long] = long.utilization();
+        assert!(shave_long > shave_short, "SHAVE share must grow with N");
+        assert!(shave_long > 0.5, "long-context SHAVE share {shave_long}");
+    }
+
+    #[test]
+    fn latency_grows_superlinearly() {
+        let r1 = run(2048);
+        let r2 = run(4096);
+        let ratio = r2.span_ns / r1.span_ns;
+        assert!(ratio > 2.5, "quadratic-ish growth expected: {ratio}");
+    }
+
+    #[test]
+    fn faster_than_causal_at_long_context() {
+        let sim = SimConfig::default();
+        let hw = NpuConfig::default();
+        let causal = {
+            let spec = WorkloadSpec::new(OperatorKind::Causal, 4096);
+            npu::run(&super::super::causal::lower(&spec, &hw, &sim), &hw, &sim)
+        };
+        let ret = run(4096);
+        assert!(
+            ret.span_ns < causal.span_ns,
+            "fused retentive ({}) must beat spilling causal ({})",
+            ret.span_ns,
+            causal.span_ns
+        );
+    }
+
+    #[test]
+    fn high_stall_from_cross_engine_dependencies() {
+        // Table V: 94.8 % at N=8192 — DPU and SHAVE ping-pong on tiles.
+        let r = run(4096);
+        assert!(r.stall.stall_frac() > 0.4, "stall {}", r.stall.stall_frac());
+    }
+
+    #[test]
+    fn engine_mix_has_all_three() {
+        let spec = WorkloadSpec::new(OperatorKind::Retentive, 1024);
+        let g = lower(&spec, &NpuConfig::default(), &SimConfig::default());
+        let [dpu, shave, dma, _] = g.engine_counts();
+        assert!(dpu > 0 && shave > 0 && dma > 0);
+        let _ = Engine::ALL;
+    }
+}

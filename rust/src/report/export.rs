@@ -1,0 +1,42 @@
+//! CSV export for bench outputs (`target/report/*.csv`).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+/// Default output directory for bench CSVs.
+pub fn report_dir() -> PathBuf {
+    PathBuf::from("target/report")
+}
+
+/// Write a CSV with a header row; creates parent directories.
+pub fn write_csv(
+    path: impl AsRef<Path>,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path.as_ref())?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_csv_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("npuperf-csv-{}", std::process::id()));
+        let path = dir.join("t.csv");
+        write_csv(&path, &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+}

@@ -1,0 +1,324 @@
+//! Paper figures 3-8 as ASCII renderings + CSV series.
+
+use crate::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+use crate::model::{calibrate, Roofline};
+use crate::ops::masks::{self, MaskFamily};
+
+use super::{run_cell, CONTEXTS};
+
+/// Fig 1: persistent memory & layer-wise dataflow, attention vs SSM —
+/// rendered with the *actual* numbers from the state manager.
+pub fn fig1() -> String {
+    use crate::config::OperatorKind;
+    use crate::coordinator::state::StateManager;
+    let mut out = String::from(
+        "FIG 1: Memory-state tradeoff (persistent bytes vs context, one head)\n\n\
+         Attention (Llama-like): KV cache grows O(N*d)   | SSM (Mamba-like): fixed state O(d*d_state)\n",
+    );
+    for n in [1024usize, 4096, 16_384, 65_536, 131_072] {
+        let mut mm = StateManager::new(u64::MAX);
+        mm.open(0, OperatorKind::Causal, 64, 16);
+        mm.open(1, OperatorKind::Linear, 64, 16);
+        mm.append(0, n);
+        mm.append(1, n);
+        let kv = mm.session_bytes(0).unwrap();
+        let ssm = mm.session_bytes(1).unwrap();
+        let bar = (kv as f64).log2().max(0.0) as usize;
+        out += &format!(
+            "{n:>7} tokens  KV {:<12} |{}|   state {:<10} (x{:.0} smaller)\n",
+            crate::util::fmt::bytes(kv),
+            "#".repeat(bar.min(40)),
+            crate::util::fmt::bytes(ssm),
+            kv as f64 / ssm as f64,
+        );
+    }
+    out
+}
+
+/// Fig 2: the NPU dataflow architecture (static schematic).
+pub fn fig2(hw: &NpuConfig) -> String {
+    format!(
+        "FIG 2: NPU dataflow architecture\n\
+         \n\
+         +--------------------------------------------------------------+\n\
+         |  Global system memory ({:>9})            LPDDR5X           |\n\
+         +------------------------------+-------------------------------+\n\
+                                        | DMA {:>3.0} GB/s (descriptor\n\
+                                        |     setup {:.1} us, alloc {:.0} us)\n\
+         +------------------------------v-------------------------------+\n\
+         |  Scratchpad ({:>9}) -- software-managed, persistent state |\n\
+         +----+--------------------+--------------------+---------------+\n\
+              |                    |                    |\n\
+         +----v-----------+  +-----v-----------+  +-----v-------------+\n\
+         | DPU            |  | SHAVE x{:<2}       |  | DSP (control)     |\n\
+         | {}x{} PE     |  | {:.1} GHz SIMD    |  | descriptor issue  |\n\
+         | systolic array |  | softmax/eltwise |  | {:.1} us / primitive|\n\
+         | fill/drain {:>3} |  | exp {:>2} cyc/elem |  |                   |\n\
+         +----------------+  +-----------------+  +-------------------+\n\
+         \n\
+         No high-bandwidth memory for persistent state: everything beyond\n\
+         the {:>9} scratchpad rides the DMA engine (the paper's point).\n",
+        crate::util::fmt::bytes(hw.dram_bytes),
+        hw.dma_bw_gbps,
+        hw.dma_setup_ns / 1000.0,
+        hw.dma_alloc_ns / 1000.0,
+        crate::util::fmt::bytes(hw.scratchpad_bytes),
+        hw.shave_cores,
+        hw.pe_array,
+        hw.pe_array,
+        hw.shave_clock_ghz,
+        hw.dpu_issue_ns / 1000.0,
+        hw.dpu_fill_cycles,
+        hw.shave_exp_cycles,
+        crate::util::fmt::bytes(hw.scratchpad_bytes),
+    )
+}
+
+/// Fig 3: the six causal mask structures.
+pub fn fig3(n: usize) -> String {
+    let mut out = String::from("FIG 3: Causal attention mask families\n");
+    for fam in MaskFamily::ALL {
+        out += &format!(
+            "\n--- {} (density {:.0}% @ eps=0.01) ---\n{}",
+            fam.name(),
+            100.0 * masks::density(fam, n, 0.01),
+            masks::render(fam, n)
+        );
+    }
+    out
+}
+
+/// One utilization series for Fig 4: (context, dpu, dma, shave).
+pub fn fig4_series(
+    op: OperatorKind,
+    hw: &NpuConfig,
+    sim: &SimConfig,
+) -> Vec<(usize, f64, f64, f64)> {
+    CONTEXTS
+        .iter()
+        .map(|&n| {
+            let r = run_cell(op, n, hw, sim);
+            let [dpu, dma, shave] = r.utilization();
+            (n, dpu * 100.0, dma * 100.0, shave * 100.0)
+        })
+        .collect()
+}
+
+/// Fig 4: utilization shift with context (Fourier & Retentive), as
+/// stacked ASCII bars.
+pub fn fig4(hw: &NpuConfig, sim: &SimConfig) -> String {
+    let mut out = String::from(
+        "FIG 4: NPU subcomponent utilization vs context (D=DPU, M=DMA, S=SHAVE)\n",
+    );
+    for op in [OperatorKind::Fourier, OperatorKind::Retentive] {
+        out += &format!("\n{}:\n", op.paper_name());
+        for (n, dpu, dma, shave) in fig4_series(op, hw, sim) {
+            let w = 50.0;
+            let d = (dpu / 100.0 * w).round() as usize;
+            let m = (dma / 100.0 * w).round() as usize;
+            let s = (w as usize).saturating_sub(d + m);
+            out += &format!(
+                "{n:>5} |{}{}{}| D={dpu:.1} M={dma:.1} S={shave:.1}\n",
+                "D".repeat(d),
+                "M".repeat(m),
+                "S".repeat(s)
+            );
+        }
+    }
+    out
+}
+
+/// Fig 5 series: latency (ms) per operator across contexts.
+pub fn fig5_series(hw: &NpuConfig, sim: &SimConfig) -> Vec<(OperatorKind, Vec<(usize, f64)>)> {
+    [
+        OperatorKind::Fourier,
+        OperatorKind::Retentive,
+        OperatorKind::Toeplitz,
+        OperatorKind::Linear,
+    ]
+    .iter()
+    .map(|&op| {
+        let series =
+            CONTEXTS.iter().map(|&n| (n, run_cell(op, n, hw, sim).latency_ms())).collect();
+        (op, series)
+    })
+    .collect()
+}
+
+/// Fig 5: log-log latency scaling plot.
+pub fn fig5(hw: &NpuConfig, sim: &SimConfig) -> String {
+    let series = fig5_series(hw, sim);
+    let (w, h) = (64usize, 20usize);
+    let (y_min, y_max) = (0.01f64, 1000.0f64);
+    let mut grid = vec![vec![' '; w]; h];
+    let glyphs = ['F', 'R', 'T', 'L'];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for &(n, ms) in pts {
+            let xf = ((n as f64).ln() - 128f64.ln()) / (8192f64.ln() - 128f64.ln());
+            let yf = ((ms.max(y_min)).ln() - y_min.ln()) / (y_max.ln() - y_min.ln());
+            let x = (xf.clamp(0.0, 1.0) * (w - 1) as f64).round() as usize;
+            let y = h - 1 - (yf.clamp(0.0, 1.0) * (h - 1) as f64).round() as usize;
+            grid[y][x] = glyphs[si];
+        }
+    }
+    let mut out = String::from(
+        "FIG 5: Latency vs context, log-log (F=Fourier R=Retentive T=Toeplitz L=Linear)\n",
+    );
+    out += "ms (0.01 .. 1000)\n";
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out += &format!("+{}\n context 128 .. 8192 (log)\n", "-".repeat(w));
+    out
+}
+
+/// Fig 6: efficiency bars (stall, cache) + reuse line, per operator.
+pub fn fig6(hw: &NpuConfig, sim: &SimConfig) -> String {
+    let cells = [
+        (OperatorKind::Causal, 8192),
+        (OperatorKind::Retentive, 8192),
+        (OperatorKind::Fourier, 4096),
+        (OperatorKind::Linear, 8192),
+        (OperatorKind::Toeplitz, 4096),
+    ];
+    let mut out = String::from("FIG 6: Efficiency metrics at long context\n");
+    for (op, n) in cells {
+        let r = run_cell(op, n, hw, sim);
+        let stall = r.stall.stall_frac();
+        let cache = r.cache.efficiency();
+        out += &format!(
+            "{:<12} stall |{:<25}| {:>5.1}%   cache |{:<25}| {:>5.1}%   reuse {:>8.2} ms\n",
+            op.paper_name(),
+            "#".repeat((stall * 25.0).round() as usize),
+            stall * 100.0,
+            "#".repeat((cache * 25.0).round() as usize),
+            cache * 100.0,
+            r.cache.reuse_ns / 1e6
+        );
+    }
+    out
+}
+
+/// Fig 7: the roofline plot.
+pub fn fig7(hw: &NpuConfig, sim: &SimConfig) -> String {
+    let roofline = Roofline::new(calibrate(hw, sim));
+    let points: Vec<_> = [
+        OperatorKind::Causal,
+        OperatorKind::Retentive,
+        OperatorKind::Toeplitz,
+        OperatorKind::Linear,
+        OperatorKind::Fourier,
+    ]
+    .iter()
+    .map(|&op| {
+        let spec = WorkloadSpec::new(op, 4096);
+        let r = run_cell(op, 4096, hw, sim);
+        roofline.place(&spec, &r, sim.elem_bytes)
+    })
+    .collect();
+    format!("FIG 7: Roofline (N=4096)\n{}", roofline.ascii_plot(&points, 64, 18))
+}
+
+/// Fig 8: utilization breakdown bars at N = 4096.
+pub fn fig8(hw: &NpuConfig, sim: &SimConfig) -> String {
+    let ceilings = calibrate(hw, sim);
+    let roofline = Roofline::new(ceilings);
+    let mut out = String::from("FIG 8: Hardware utilization breakdown at N=4096\n");
+    for op in [
+        OperatorKind::Causal,
+        OperatorKind::Retentive,
+        OperatorKind::Toeplitz,
+        OperatorKind::Linear,
+        OperatorKind::Fourier,
+    ] {
+        let spec = WorkloadSpec::new(op, 4096);
+        let r = run_cell(op, 4096, hw, sim);
+        let point = roofline.place(&spec, &r, sim.elem_bytes);
+        let cutil = point.measured_gops / ceilings.pi_eff_gops;
+        let bar = |v: f64| "#".repeat((v.clamp(0.0, 1.0) * 30.0).round() as usize);
+        out += &format!(
+            "{:<12} stall {:>5.1}% |{:<30}|\n             cache {:>5.1}% |{:<30}|\n             cutil {:>5.1}% |{:<30}|\n",
+            op.paper_name(),
+            r.stall.stall_frac() * 100.0,
+            bar(r.stall.stall_frac()),
+            r.cache.efficiency() * 100.0,
+            bar(r.cache.efficiency()),
+            cutil * 100.0,
+            bar(cutil),
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> (NpuConfig, SimConfig) {
+        (NpuConfig::default(), SimConfig::default())
+    }
+
+    #[test]
+    fn fig1_shows_memory_separation() {
+        let f = fig1();
+        assert!(f.contains("KV"));
+        assert!(f.contains("131072 tokens") || f.contains("131072"));
+        assert!(f.contains("smaller"));
+    }
+
+    #[test]
+    fn fig2_reflects_hw_config() {
+        let hw = NpuConfig::default();
+        let f = fig2(&hw);
+        assert!(f.contains("128x128 PE"));
+        assert!(f.contains("SHAVE x8"));
+        assert!(f.contains("4.00 MiB"));
+    }
+
+    #[test]
+    fn fig3_renders_six_masks() {
+        let f = fig3(16);
+        for fam in MaskFamily::ALL {
+            assert!(f.contains(fam.name()), "missing {}", fam.name());
+        }
+    }
+
+    #[test]
+    fn fig4_series_covers_contexts() {
+        let (hw, sim) = cfg();
+        let s = fig4_series(OperatorKind::Retentive, &hw, &sim);
+        assert_eq!(s.len(), CONTEXTS.len());
+        for (_, d, m, sh) in s {
+            assert!((d + m + sh - 100.0).abs() < 0.5, "shares sum to 100");
+        }
+    }
+
+    #[test]
+    fn fig5_plot_contains_all_series() {
+        let (hw, sim) = cfg();
+        let f = fig5(&hw, &sim);
+        for g in ['F', 'R', 'T', 'L'] {
+            assert!(f.contains(g), "missing series {g}");
+        }
+    }
+
+    #[test]
+    fn fig6_and_fig8_render_all_operators() {
+        let (hw, sim) = cfg();
+        for f in [fig6(&hw, &sim), fig8(&hw, &sim)] {
+            for op in OperatorKind::ALL {
+                assert!(f.contains(op.paper_name()), "missing {op}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig7_contains_roofline_legend() {
+        let (hw, sim) = cfg();
+        let f = fig7(&hw, &sim);
+        assert!(f.contains("I_crit"));
+        assert!(f.contains("% of roof"));
+    }
+}

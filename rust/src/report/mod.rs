@@ -1,0 +1,40 @@
+//! Reproduction of every table and figure in the paper's evaluation.
+//!
+//! [`tables`] renders Tables I-VIII in the paper's format, with the paper's
+//! published values printed alongside our simulated values so deviations
+//! are visible at a glance. [`figures`] regenerates Figs 3-8 as ASCII
+//! plots + CSV series. [`export`] writes the CSV files the benches emit.
+
+pub mod export;
+pub mod figures;
+pub mod tables;
+
+use crate::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+use crate::npu::{self, ExecReport};
+use crate::ops;
+
+/// The context sweep used throughout the paper's evaluation.
+pub const CONTEXTS: [usize; 7] = [128, 256, 512, 1024, 2048, 4096, 8192];
+
+/// Run one (operator, context) cell on the simulator.
+pub fn run_cell(op: OperatorKind, n: usize, hw: &NpuConfig, sim: &SimConfig) -> ExecReport {
+    let spec = WorkloadSpec::new(op, n);
+    let g = ops::lower(&spec, hw, sim);
+    npu::run(&g, hw, sim)
+}
+
+/// Run a full operator × context grid (reused by several tables/figures).
+pub fn run_grid(
+    ops_list: &[OperatorKind],
+    contexts: &[usize],
+    hw: &NpuConfig,
+    sim: &SimConfig,
+) -> Vec<(OperatorKind, usize, ExecReport)> {
+    let mut out = Vec::new();
+    for &op in ops_list {
+        for &n in contexts {
+            out.push((op, n, run_cell(op, n, hw, sim)));
+        }
+    }
+    out
+}

@@ -1,0 +1,398 @@
+//! Paper tables I-VIII, rendered with our simulated values next to the
+//! paper's published numbers ("paper" columns) so the reproduction quality
+//! is visible cell by cell.
+
+use crate::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+use crate::model::{calibrate, Roofline};
+use crate::util::fmt;
+
+use super::run_cell;
+
+/// Table I: hardware specification (ours = the simulator defaults).
+pub fn table1(hw: &NpuConfig) -> String {
+    let rows = vec![
+        vec!["CPU".into(), "16 cores (8P + 8E)".into(), "Control Logic".into()],
+        vec![
+            "NPU".into(),
+            format!("{:.0} TOPS @ 35W", hw.peak_int8_gops() / 1000.0),
+            "Systolic Array Acceleration".into(),
+        ],
+        vec![
+            "DPU (PE Array)".into(),
+            format!("{}x{} INT8", hw.pe_array, hw.pe_array),
+            "Matrix Multiplication".into(),
+        ],
+        vec![
+            "Scratchpad".into(),
+            fmt::bytes(hw.scratchpad_bytes),
+            "Persistent State Storage".into(),
+        ],
+        vec![
+            "DMA Bandwidth".into(),
+            format!("{:.0} GB/s", hw.dma_bw_gbps),
+            "Data Movement".into(),
+        ],
+        vec![
+            "SHAVE Cores".into(),
+            format!("{} @ {} GHz", hw.shave_cores, hw.shave_clock_ghz),
+            "Element-Wise Operations".into(),
+        ],
+        vec!["Memory".into(), fmt::bytes(hw.dram_bytes), "Global Buffer".into()],
+    ];
+    format!(
+        "TABLE I: Hardware Specifications\n{}",
+        fmt::table(&["Component", "Specification", "Relevance"], &rows)
+    )
+}
+
+/// Paper Table II reference: (context, dpu, dma, shave) per operator.
+pub const PAPER_TABLE2_FOURIER: [(usize, f64, f64, f64); 7] = [
+    (128, 56.4, 23.1, 20.5),
+    (256, 60.8, 25.3, 13.9),
+    (512, 47.2, 46.9, 5.9),
+    (1024, 46.6, 48.9, 4.5),
+    (2048, 46.2, 52.5, 1.2),
+    (4096, 48.4, 51.3, 0.3),
+    (8192, 61.1, 38.9, 0.0),
+];
+pub const PAPER_TABLE2_RETENTIVE: [(usize, f64, f64, f64); 7] = [
+    (128, 68.4, 0.0, 31.6),
+    (256, 64.9, 0.0, 35.1),
+    (512, 61.9, 0.0, 38.1),
+    (1024, 34.9, 0.0, 65.1),
+    (2048, 24.6, 0.0, 75.4),
+    (4096, 28.1, 0.0, 71.9),
+    (8192, 23.6, 0.0, 76.4),
+];
+
+/// Table II: device utilization breakdown for Fourier & Retentive.
+pub fn table2(hw: &NpuConfig, sim: &SimConfig) -> String {
+    let mut rows = Vec::new();
+    for (op, paper) in [
+        (OperatorKind::Fourier, &PAPER_TABLE2_FOURIER),
+        (OperatorKind::Retentive, &PAPER_TABLE2_RETENTIVE),
+    ] {
+        for &(n, p_dpu, p_dma, p_shave) in paper.iter() {
+            let r = run_cell(op, n, hw, sim);
+            let [dpu, dma, shave] = r.utilization();
+            rows.push(vec![
+                op.paper_name().to_string(),
+                n.to_string(),
+                fmt::pct(dpu),
+                fmt::pct(dma),
+                fmt::pct(shave),
+                r.bottleneck().to_string(),
+                format!("{p_dpu}/{p_dma}/{p_shave}"),
+            ]);
+        }
+    }
+    format!(
+        "TABLE II: Device Utilization Breakdown (%)\n{}",
+        fmt::table(
+            &["Model", "Context", "DPU %", "DMA %", "SHAVE %", "Bottleneck", "paper D/M/S"],
+            &rows
+        )
+    )
+}
+
+/// Paper Table III reference latencies (ms): [fourier, retentive, toeplitz, linear].
+pub const PAPER_TABLE3: [(usize, [f64; 4]); 7] = [
+    (128, [0.39, 0.19, 0.06, 0.09]),
+    (256, [0.79, 0.37, 0.08, 0.13]),
+    (512, [2.54, 0.97, 0.11, 0.24]),
+    (1024, [6.50, 2.52, 0.18, 0.44]),
+    (2048, [15.24, 10.04, 0.35, 0.72]),
+    (4096, [45.69, 39.52, 0.59, 1.52]),
+    (8192, [347.79, 85.41, 1.01, 3.16]),
+];
+
+/// Table III: latency scaling of the four sub-quadratic operators.
+pub fn table3(hw: &NpuConfig, sim: &SimConfig) -> String {
+    let ops = [
+        OperatorKind::Fourier,
+        OperatorKind::Retentive,
+        OperatorKind::Toeplitz,
+        OperatorKind::Linear,
+    ];
+    let mut rows = Vec::new();
+    for &(n, paper) in PAPER_TABLE3.iter() {
+        let mut row = vec![n.to_string()];
+        for (i, &op) in ops.iter().enumerate() {
+            let r = run_cell(op, n, hw, sim);
+            row.push(format!("{:.2} ({:.2})", r.latency_ms(), paper[i]));
+        }
+        rows.push(row);
+    }
+    format!(
+        "TABLE III: Latency scaling (ms), ours (paper)\n{}",
+        fmt::table(&["Context", "Fourier", "Retentive", "Toeplitz", "Linear"], &rows)
+    )
+}
+
+/// Paper Table IV reference: (op, lat512, lat8192, thr512, thr8192).
+pub const PAPER_TABLE4: [(&str, f64, f64, f64, f64); 5] = [
+    ("Full Causal", 4.21, 251.41, 237.0, 4.0),
+    ("Retentive", 3.10, 45.10, 322.0, 22.0),
+    ("Fourier", 1.59, 170.50, 631.0, 6.0),
+    ("Linear", 0.30, 3.81, 3333.0, 263.0),
+    ("Toeplitz", 0.75, 5.10, 1330.0, 196.0),
+];
+
+/// Table IV: latency + throughput at N = 512 and 8192.
+pub fn table4(hw: &NpuConfig, sim: &SimConfig) -> String {
+    let ops = [
+        OperatorKind::Causal,
+        OperatorKind::Retentive,
+        OperatorKind::Fourier,
+        OperatorKind::Linear,
+        OperatorKind::Toeplitz,
+    ];
+    let mut rows = Vec::new();
+    for (i, &op) in ops.iter().enumerate() {
+        let r512 = run_cell(op, 512, hw, sim);
+        let r8192 = run_cell(op, 8192, hw, sim);
+        let p = PAPER_TABLE4[i];
+        rows.push(vec![
+            op.paper_name().to_string(),
+            format!("{:.2} ({:.2})", r512.latency_ms(), p.1),
+            format!("{:.2} ({:.2})", r8192.latency_ms(), p.2),
+            format!("{:.0} ({:.0})", r512.throughput_ops_s(), p.3),
+            format!("{:.0} ({:.0})", r8192.throughput_ops_s(), p.4),
+        ]);
+    }
+    format!(
+        "TABLE IV: Latency and throughput at N=512 / N=8192, ours (paper)\n{}",
+        fmt::table(
+            &["Operator", "Lat 512 ms", "Lat 8192 ms", "Thr 512 ops/s", "Thr 8192 ops/s"],
+            &rows
+        )
+    )
+}
+
+/// Paper Table V reference: (op, context, stall %, cache %, reuse ms).
+pub const PAPER_TABLE5: [(&str, usize, f64, f64, f64); 5] = [
+    ("Full Causal", 8192, 96.7, 7.7, 119.92),
+    ("Retentive", 8192, 94.8, 28.1, 25.62),
+    ("Fourier", 4096, 95.2, 28.6, 24.94),
+    ("Linear", 8192, 55.2, 83.8, 1.94),
+    ("Toeplitz", 4096, 36.4, 87.9, 1.38),
+];
+
+/// Table V: efficiency metrics at long contexts.
+pub fn table5(hw: &NpuConfig, sim: &SimConfig) -> String {
+    let cells = [
+        (OperatorKind::Causal, 8192),
+        (OperatorKind::Retentive, 8192),
+        (OperatorKind::Fourier, 4096),
+        (OperatorKind::Linear, 8192),
+        (OperatorKind::Toeplitz, 4096),
+    ];
+    let mut rows = Vec::new();
+    for (i, &(op, n)) in cells.iter().enumerate() {
+        let r = run_cell(op, n, hw, sim);
+        let p = PAPER_TABLE5[i];
+        rows.push(vec![
+            op.paper_name().to_string(),
+            n.to_string(),
+            format!("{} ({})", fmt::pct(r.stall.stall_frac()), p.2),
+            format!("{} ({})", fmt::pct(r.cache.efficiency()), p.3),
+            format!("{:.2} ({})", r.cache.reuse_ns / 1e6, p.4),
+        ]);
+    }
+    format!(
+        "TABLE V: Efficiency metrics at long contexts, ours (paper)\n{}",
+        fmt::table(&["Operator", "Context", "Stall %", "Cache Eff %", "Reuse ms"], &rows)
+    )
+}
+
+/// Paper Table VI reference: (op, ms @ d_state 16, ms @ d_state 128).
+pub const PAPER_TABLE6: [(&str, f64, f64); 3] =
+    [("Linear", 2.39, 3.37), ("Toeplitz", 0.65, 2.73), ("Fourier", 15.50, 56.82)];
+
+/// Table VI: d_state sweep at N = 4096.
+pub fn table6(hw: &NpuConfig, sim: &SimConfig) -> String {
+    let ops = [OperatorKind::Linear, OperatorKind::Toeplitz, OperatorKind::Fourier];
+    let mut rows = Vec::new();
+    for (i, &op) in ops.iter().enumerate() {
+        let lo = {
+            let spec = WorkloadSpec::new(op, 4096);
+            let g = crate::ops::lower(&spec, hw, sim);
+            crate::npu::run(&g, hw, sim)
+        };
+        let hi = {
+            let spec = WorkloadSpec::new(op, 4096).with_d_state(128);
+            let g = crate::ops::lower(&spec, hw, sim);
+            crate::npu::run(&g, hw, sim)
+        };
+        let p = PAPER_TABLE6[i];
+        rows.push(vec![
+            op.paper_name().to_string(),
+            format!("{:.2} ({:.2})", lo.latency_ms(), p.1),
+            format!("{:.2} ({:.2})", hi.latency_ms(), p.2),
+            format!("{:.2}x ({:.2}x)", hi.latency_ms() / lo.latency_ms(), p.2 / p.1),
+        ]);
+    }
+    format!(
+        "TABLE VI: d_state impact at N=4096, ours (paper)\n{}",
+        fmt::table(&["Operator", "d_state=16 ms", "d_state=128 ms", "growth"], &rows)
+    )
+}
+
+/// Paper Table VII reference: (op, intensity, measured GOP/s).
+pub const PAPER_TABLE7: [(&str, f64, f64); 5] = [
+    ("Full Causal", 61.13, 21.4),
+    ("Retentive", 50.00, 53.5),
+    ("Toeplitz", 25.00, 12.2),
+    ("Linear", 16.00, 14.0),
+    ("Fourier", 15.00, 0.34),
+];
+
+/// Table VII: operational intensity + measured performance at N = 4096.
+pub fn table7(hw: &NpuConfig, sim: &SimConfig) -> String {
+    let ceilings = calibrate(hw, sim);
+    let roofline = Roofline::new(ceilings);
+    let ops = [
+        OperatorKind::Causal,
+        OperatorKind::Retentive,
+        OperatorKind::Toeplitz,
+        OperatorKind::Linear,
+        OperatorKind::Fourier,
+    ];
+    let mut rows = Vec::new();
+    for (i, &op) in ops.iter().enumerate() {
+        let spec = WorkloadSpec::new(op, 4096);
+        let r = run_cell(op, 4096, hw, sim);
+        let point = roofline.place(&spec, &r, sim.elem_bytes);
+        let p = PAPER_TABLE7[i];
+        rows.push(vec![
+            op.paper_name().to_string(),
+            format!("{:.2} ({:.2})", point.intensity, p.1),
+            format!("{:.1} ({:.2})", point.measured_gops, p.2),
+            format!("{:.1}", point.bound_gops),
+        ]);
+    }
+    format!(
+        "TABLE VII: Intensity & measured GOP/s at N=4096, ours (paper)\n\
+         calibrated: pi_eff={:.0} GOP/s (paper 500), beta_eff={:.2} GB/s (paper 3.2), \
+         I_crit={:.0} (paper 156)\n{}",
+        ceilings.pi_eff_gops,
+        ceilings.beta_eff_gbps,
+        ceilings.i_crit(),
+        fmt::table(
+            &["Operator", "Intensity Op/B", "Measured GOP/s", "Bound GOP/s"],
+            &rows
+        )
+    )
+}
+
+/// Paper Table VIII reference: (op, stall %, cache %, compute util %).
+pub const PAPER_TABLE8: [(&str, f64, f64, f64); 5] = [
+    ("Full Causal", 96.7, 7.7, 4.3),
+    ("Retentive", 94.8, 28.1, 33.4),
+    ("Toeplitz", 36.4, 87.9, 15.2),
+    ("Linear", 55.2, 83.8, 27.3),
+    ("Fourier", 95.2, 28.6, 0.7),
+];
+
+/// Table VIII: hardware utilization metrics at N = 4096.
+pub fn table8(hw: &NpuConfig, sim: &SimConfig) -> String {
+    let ceilings = calibrate(hw, sim);
+    let roofline = Roofline::new(ceilings);
+    let ops = [
+        OperatorKind::Causal,
+        OperatorKind::Retentive,
+        OperatorKind::Toeplitz,
+        OperatorKind::Linear,
+        OperatorKind::Fourier,
+    ];
+    let mut rows = Vec::new();
+    for (i, &op) in ops.iter().enumerate() {
+        let spec = WorkloadSpec::new(op, 4096);
+        let r = run_cell(op, 4096, hw, sim);
+        let point = roofline.place(&spec, &r, sim.elem_bytes);
+        // Compute utilization vs the effective compute ceiling pi_eff.
+        // (The paper divides by each operator's memory-side *bound*; our
+        // fused lowerings move less DRAM traffic than the paper's kernels,
+        // so several operators exceed those bounds — see EXPERIMENTS.md.)
+        let util = point.measured_gops / ceilings.pi_eff_gops;
+        let p = PAPER_TABLE8[i];
+        rows.push(vec![
+            op.paper_name().to_string(),
+            format!("{} ({})", fmt::pct(r.stall.stall_frac()), p.1),
+            format!("{} ({})", fmt::pct(r.cache.efficiency()), p.2),
+            format!("{} ({})", fmt::pct(util), p.3),
+        ]);
+    }
+    format!(
+        "TABLE VIII: Hardware utilization at N=4096, ours (paper)\n{}",
+        fmt::table(&["Operator", "Stall %", "Cache Eff %", "Compute Util %"], &rows)
+    )
+}
+
+/// All tables in order (the `npuperf tables` command).
+pub fn all_tables(hw: &NpuConfig, sim: &SimConfig) -> String {
+    [
+        table1(hw),
+        table2(hw, sim),
+        table3(hw, sim),
+        table4(hw, sim),
+        table5(hw, sim),
+        table6(hw, sim),
+        table7(hw, sim),
+        table8(hw, sim),
+    ]
+    .join("\n\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::CONTEXTS;
+
+    fn cfg() -> (NpuConfig, SimConfig) {
+        (NpuConfig::default(), SimConfig::default())
+    }
+
+    #[test]
+    fn table1_mentions_key_specs() {
+        let t = table1(&NpuConfig::default());
+        assert!(t.contains("128x128 INT8"));
+        assert!(t.contains("4.00 MiB"));
+        assert!(t.contains("64 GB/s"));
+    }
+
+    #[test]
+    fn table3_has_all_contexts() {
+        let (hw, sim) = cfg();
+        let t = table3(&hw, &sim);
+        for n in CONTEXTS {
+            assert!(t.contains(&format!("| {n} ")) || t.contains(&format!("{n} |")), "{n}");
+        }
+    }
+
+    #[test]
+    fn table4_throughput_is_reciprocal() {
+        let (hw, sim) = cfg();
+        let t = table4(&hw, &sim);
+        assert!(t.contains("Full Causal"));
+        assert!(t.contains("(251.41)"), "paper reference column present");
+    }
+
+    #[test]
+    fn table7_reports_calibration() {
+        let (hw, sim) = cfg();
+        let t = table7(&hw, &sim);
+        assert!(t.contains("pi_eff"));
+        assert!(t.contains("(61.13)"), "paper causal intensity");
+    }
+
+    #[test]
+    fn all_tables_renders_everything() {
+        let (hw, sim) = cfg();
+        let t = all_tables(&hw, &sim);
+        for tag in ["TABLE I:", "TABLE II:", "TABLE III:", "TABLE IV:", "TABLE V:",
+                    "TABLE VI:", "TABLE VII:", "TABLE VIII:"] {
+            assert!(t.contains(tag), "missing {tag}");
+        }
+    }
+}

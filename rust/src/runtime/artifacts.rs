@@ -1,0 +1,268 @@
+//! Artifact registry: the manifest and golden I/O files written by
+//! `python/compile/aot.py`.
+//!
+//! Formats (line-oriented text, one artifact per `.hlo.txt`):
+//!
+//! ```text
+//! manifest.txt: <name> kind=<operator|block> op=<op> n=<N> d=<D>
+//!               inputs=<s0;s1;...> outputs=<s0;...>   (shapes "d0,d1")
+//! golden.txt:   artifact <name>
+//!               inputs <k>    then k× (tensor <rank> <dims...> / values)
+//!               outputs <m>   then m× tensors
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A dense f32 tensor (host-side).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let want: usize = shape.iter().product();
+        if want != data.len() {
+            bail!("shape {shape:?} wants {want} elements, got {}", data.len());
+        }
+        Ok(Self { shape, data })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Max |a-b| against another tensor (validation metric).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+/// One manifest row.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: String,
+    pub op: String,
+    pub n: usize,
+    pub d: usize,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+/// Parsed `manifest.txt` + directory handle.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+    by_name: HashMap<String, usize>,
+}
+
+fn parse_shapes(s: &str) -> Result<Vec<Vec<usize>>> {
+    s.split(';')
+        .filter(|p| !p.is_empty())
+        .map(|p| {
+            p.split(',')
+                .map(|d| d.parse::<usize>().map_err(|e| anyhow!("bad dim {d:?}: {e}")))
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut fields = line.split_whitespace();
+            let name = fields
+                .next()
+                .ok_or_else(|| anyhow!("manifest line {}: empty", lineno + 1))?
+                .to_string();
+            let mut kv: HashMap<&str, &str> = HashMap::new();
+            for f in fields {
+                if let Some((k, v)) = f.split_once('=') {
+                    kv.insert(k, v);
+                }
+            }
+            let get = |k: &str| {
+                kv.get(k)
+                    .copied()
+                    .ok_or_else(|| anyhow!("manifest line {}: missing {k}=", lineno + 1))
+            };
+            entries.push(ArtifactEntry {
+                name,
+                kind: get("kind")?.to_string(),
+                op: get("op")?.to_string(),
+                n: get("n")?.parse()?,
+                d: get("d")?.parse()?,
+                input_shapes: parse_shapes(get("inputs")?)?,
+                output_shapes: parse_shapes(get("outputs")?)?,
+            });
+        }
+        let by_name =
+            entries.iter().enumerate().map(|(i, e)| (e.name.clone(), i)).collect();
+        Ok(Self { dir, entries, by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.by_name.get(name).map(|&i| &self.entries[i])
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    pub fn golden_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.golden.txt"))
+    }
+
+    /// Entries of a given kind ("operator" / "block").
+    pub fn of_kind<'a>(&'a self, kind: &'a str) -> impl Iterator<Item = &'a ArtifactEntry> + 'a {
+        self.entries.iter().filter(move |e| e.kind == kind)
+    }
+}
+
+/// Golden inputs/outputs for one artifact.
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub name: String,
+    pub inputs: Vec<Tensor>,
+    pub outputs: Vec<Tensor>,
+}
+
+impl Golden {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading golden {:?}", path.as_ref()))?;
+        let mut lines = text.lines();
+        let header = lines.next().ok_or_else(|| anyhow!("empty golden file"))?;
+        let name = header
+            .strip_prefix("artifact ")
+            .ok_or_else(|| anyhow!("bad golden header {header:?}"))?
+            .to_string();
+
+        let read_block = |lines: &mut std::str::Lines<'_>, tag: &str| -> Result<Vec<Tensor>> {
+            let hdr = lines.next().ok_or_else(|| anyhow!("missing {tag} header"))?;
+            let count: usize = hdr
+                .strip_prefix(tag)
+                .and_then(|s| s.trim().parse().ok())
+                .ok_or_else(|| anyhow!("bad {tag} header {hdr:?}"))?;
+            let mut tensors = Vec::with_capacity(count);
+            for _ in 0..count {
+                let meta = lines.next().ok_or_else(|| anyhow!("missing tensor header"))?;
+                let mut parts = meta.split_whitespace();
+                if parts.next() != Some("tensor") {
+                    bail!("bad tensor header {meta:?}");
+                }
+                let rank: usize =
+                    parts.next().ok_or_else(|| anyhow!("missing rank"))?.parse()?;
+                let shape: Vec<usize> = (0..rank)
+                    .map(|_| {
+                        parts
+                            .next()
+                            .ok_or_else(|| anyhow!("missing dim"))
+                            .and_then(|d| d.parse().map_err(|e| anyhow!("bad dim: {e}")))
+                    })
+                    .collect::<Result<_>>()?;
+                let values = lines.next().ok_or_else(|| anyhow!("missing values line"))?;
+                let data: Vec<f32> = values
+                    .split_whitespace()
+                    .map(|v| v.parse::<f32>().map_err(|e| anyhow!("bad value {v:?}: {e}")))
+                    .collect::<Result<_>>()?;
+                tensors.push(Tensor::new(shape, data)?);
+            }
+            Ok(tensors)
+        };
+
+        let inputs = read_block(&mut lines, "inputs")?;
+        let outputs = read_block(&mut lines, "outputs")?;
+        Ok(Self { name, inputs, outputs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tmp(content: &str, name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("npuperf-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+        path
+    }
+
+    #[test]
+    fn tensor_shape_validation() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn tensor_max_abs_diff() {
+        let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::new(vec![3], vec![1.0, 2.5, 3.0]).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+
+    #[test]
+    fn manifest_parses_rows() {
+        let dir = std::env::temp_dir().join(format!("npuperf-man-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "causal_n128_d64 kind=operator op=causal n=128 d=64 \
+             inputs=128,64;128,64;128,64 outputs=128,64\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.get("causal_n128_d64").unwrap();
+        assert_eq!(e.n, 128);
+        assert_eq!(e.input_shapes.len(), 3);
+        assert_eq!(e.output_shapes[0], vec![128, 64]);
+        assert_eq!(m.of_kind("operator").count(), 1);
+        assert_eq!(m.of_kind("block").count(), 0);
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        assert!(Manifest::load("/nonexistent/nowhere").is_err());
+    }
+
+    #[test]
+    fn golden_roundtrip() {
+        let path = write_tmp(
+            "artifact demo\ninputs 1\ntensor 2 2 2\n1 2 3 4\noutputs 1\ntensor 1 2\n5 6\n",
+            "demo.golden.txt",
+        );
+        let g = Golden::load(&path).unwrap();
+        assert_eq!(g.name, "demo");
+        assert_eq!(g.inputs[0].shape, vec![2, 2]);
+        assert_eq!(g.inputs[0].data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(g.outputs[0].data, vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn golden_rejects_malformed() {
+        let path = write_tmp("not a golden\n", "bad.golden.txt");
+        assert!(Golden::load(&path).is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! Thin wrapper over the `xla` crate: HLO text → compile → execute.
+//!
+//! One [`HloRuntime`] owns the PJRT CPU client and a name→executable cache.
+//! PJRT handles are raw pointers (`!Send`), so the runtime is confined to
+//! one thread; [`super::executor`] provides the channel-based handle the
+//! multi-threaded coordinator uses.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::{Manifest, Tensor};
+
+/// PJRT-backed executor for AOT artifacts.
+pub struct HloRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl HloRuntime {
+    /// Create a CPU PJRT client over the artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.hlo_path(name);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.cache.contains_key(name)
+    }
+
+    /// Execute an artifact on host tensors; returns outputs + wall time.
+    ///
+    /// aot.py lowers with `return_tuple=True`, so the root is always a
+    /// tuple; it is decomposed into one `Tensor` per output.
+    pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<(Vec<Tensor>, f64)> {
+        self.load(name)?;
+        let entry = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?;
+        if entry.input_shapes.len() != inputs.len() {
+            anyhow::bail!(
+                "{name}: expected {} inputs, got {}",
+                entry.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshaping input to {dims:?}: {e}"))
+            })
+            .collect::<Result<_>>()?;
+
+        let exe = self.cache.get(name).expect("loaded above");
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let elapsed_ns = t0.elapsed().as_nanos() as f64;
+
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e}"))?;
+        let parts = root.to_tuple().map_err(|e| anyhow!("decomposing tuple: {e}"))?;
+        let outputs: Vec<Tensor> = parts
+            .into_iter()
+            .zip(&entry.output_shapes)
+            .map(|(lit, shape)| {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("reading output values: {e}"))?;
+                Tensor::new(shape.clone(), data).context("output shape mismatch")
+            })
+            .collect::<Result<_>>()?;
+        Ok((outputs, elapsed_ns))
+    }
+
+    /// Validate an artifact against its golden I/O; returns max |Δ|.
+    pub fn validate(&mut self, name: &str) -> Result<f32> {
+        let golden = super::artifacts::Golden::load(self.manifest.golden_path(name))?;
+        let (outputs, _) = self.execute(name, &golden.inputs)?;
+        let mut max_diff = 0.0f32;
+        for (got, want) in outputs.iter().zip(&golden.outputs) {
+            max_diff = max_diff.max(got.max_abs_diff(want));
+        }
+        Ok(max_diff)
+    }
+}

@@ -1,0 +1,125 @@
+//! Channel-based executor: confines the (!Send) PJRT runtime to a
+//! dedicated worker thread and hands out a cloneable [`ExecutorHandle`]
+//! that the multi-threaded coordinator can call from anywhere.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::artifacts::Tensor;
+use super::client::HloRuntime;
+
+/// Result of one executed request.
+#[derive(Clone, Debug)]
+pub struct ExecOutcome {
+    pub outputs: Vec<Tensor>,
+    /// Device-side execute wall time, ns.
+    pub exec_ns: f64,
+}
+
+enum Cmd {
+    Execute { name: String, inputs: Vec<Tensor>, reply: mpsc::Sender<Result<ExecOutcome>> },
+    Warmup { name: String, reply: mpsc::Sender<Result<()>> },
+    Validate { name: String, reply: mpsc::Sender<Result<f32>> },
+    Shutdown,
+}
+
+/// Cloneable handle to the executor thread.
+#[derive(Clone)]
+pub struct ExecutorHandle {
+    tx: mpsc::Sender<Cmd>,
+}
+
+/// Owner of the executor thread; dropping it shuts the worker down.
+pub struct Executor {
+    handle: ExecutorHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Executor {
+    /// Spawn the worker over `artifact_dir`. Fails fast if the runtime
+    /// cannot be constructed (missing artifacts, PJRT failure).
+    pub fn spawn(artifact_dir: impl Into<PathBuf>) -> Result<Executor> {
+        let dir = artifact_dir.into();
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || {
+                let mut rt = match HloRuntime::new(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Execute { name, inputs, reply } => {
+                            let res = rt.execute(&name, &inputs).map(|(outputs, exec_ns)| {
+                                ExecOutcome { outputs, exec_ns }
+                            });
+                            let _ = reply.send(res);
+                        }
+                        Cmd::Warmup { name, reply } => {
+                            let _ = reply.send(rt.load(&name));
+                        }
+                        Cmd::Validate { name, reply } => {
+                            let _ = reply.send(rt.validate(&name));
+                        }
+                        Cmd::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died during startup"))??;
+        Ok(Executor { handle: ExecutorHandle { tx }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> ExecutorHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Cmd::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl ExecutorHandle {
+    pub fn execute(&self, name: &str, inputs: Vec<Tensor>) -> Result<ExecOutcome> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Execute { name: name.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("executor thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+
+    /// Pre-compile an artifact (hides compile latency from first request).
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Warmup { name: name.to_string(), reply })
+            .map_err(|_| anyhow!("executor thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+
+    /// Golden-validate an artifact; returns max |Δ| vs the oracle.
+    pub fn validate(&self, name: &str) -> Result<f32> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Validate { name: name.to_string(), reply })
+            .map_err(|_| anyhow!("executor thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+}

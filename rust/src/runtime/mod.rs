@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts`) and executes them on the request path.
+//!
+//! Python never runs here: the interchange format is HLO *text* (jax ≥ 0.5
+//! emits 64-bit-id protos that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids — see DESIGN.md and python/compile/aot.py).
+
+pub mod artifacts;
+pub mod client;
+pub mod executor;
+
+pub use artifacts::{Golden, Manifest, Tensor};
+pub use client::HloRuntime;
+pub use executor::{ExecOutcome, ExecutorHandle};

@@ -1,0 +1,141 @@
+//! Minimal deterministic property-testing harness.
+//!
+//! `proptest` is not in the offline crate set, so this module provides the
+//! small subset the test suite needs: a seedable xorshift PRNG and a
+//! `forall` driver that runs a property over generated cases and reports
+//! the failing seed for reproduction.
+
+/// Xorshift64* PRNG — deterministic, seedable, no external deps.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // 0 is a fixed point of xorshift; nudge it.
+        Self { state: seed.max(1).wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1 }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in `[0, bound)`; `bound` must be > 0.
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        self.next_u64() % bound
+    }
+
+    /// Uniform in the inclusive range `[lo, hi]`.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Pick one element of a non-empty slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panics with the offending seed
+/// on the first failure so the case can be replayed exactly.
+pub fn forall<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E37_79B9);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed on case {case} (seed {seed:#x}):\n  \
+                 input: {input:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_seeds_differ() {
+        let (mut a, mut b) = (Rng::new(1), Rng::new(2));
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut rng = Rng::new(7);
+        for _ in 0..1000 {
+            assert!(rng.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn range_inclusive() {
+        let mut rng = Rng::new(9);
+        let mut saw_lo = false;
+        let mut saw_hi = false;
+        for _ in 0..2000 {
+            let x = rng.range(3, 5);
+            assert!((3..=5).contains(&x));
+            saw_lo |= x == 3;
+            saw_hi |= x == 5;
+        }
+        assert!(saw_lo && saw_hi, "range endpoints should both occur");
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut rng = Rng::new(11);
+        for _ in 0..1000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("trivial", 50, |r| r.range(0, 100), |&x| {
+            if x <= 100 { Ok(()) } else { Err("out of range".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `failing`")]
+    fn forall_reports_failure() {
+        forall("failing", 50, |r| r.range(0, 100), |&x| {
+            if x < 5 { Ok(()) } else { Err(format!("{x} >= 5")) }
+        });
+    }
+}

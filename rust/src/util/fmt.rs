@@ -1,0 +1,103 @@
+//! Formatting helpers for paper-style tables and units.
+
+/// Format nanoseconds as milliseconds with two decimals (paper tables).
+pub fn ms(ns: f64) -> String {
+    format!("{:.2}", ns / 1e6)
+}
+
+/// Format a byte count using binary units.
+pub fn bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Percentage with one decimal, as in the paper's utilization tables.
+pub fn pct(frac: f64) -> String {
+    format!("{:.1}", frac * 100.0)
+}
+
+/// Render an ASCII table with a header row: column widths auto-fit.
+pub fn table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let sep: String = widths
+        .iter()
+        .map(|w| format!("+{}", "-".repeat(w + 2)))
+        .collect::<String>()
+        + "+";
+    let render_row = |cells: &[String]| -> String {
+        let mut line = String::new();
+        for (i, w) in widths.iter().enumerate() {
+            let empty = String::new();
+            let cell = cells.get(i).unwrap_or(&empty);
+            line += &format!("| {cell:>w$} ", w = w);
+        }
+        line + "|"
+    };
+    let mut out = String::new();
+    out += &sep;
+    out += "\n";
+    out += &render_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    out += "\n";
+    out += &sep;
+    out += "\n";
+    for row in rows {
+        out += &render_row(row);
+        out += "\n";
+    }
+    out += &sep;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ms_two_decimals() {
+        assert_eq!(ms(4_210_000.0), "4.21");
+        assert_eq!(ms(251_410_000.0), "251.41");
+    }
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(4 * 1024 * 1024), "4.00 MiB");
+    }
+
+    #[test]
+    fn pct_one_decimal() {
+        assert_eq!(pct(0.967), "96.7");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = table(
+            &["Op", "Latency"],
+            &[
+                vec!["Causal".into(), "251.41".into()],
+                vec!["Linear".into(), "3.81".into()],
+            ],
+        );
+        assert!(t.contains("| Causal"));
+        assert!(t.contains("| Latency |"));
+        // All lines same width.
+        let widths: Vec<usize> = t.lines().map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+}

@@ -1,0 +1,10 @@
+//! Small shared utilities: deterministic RNG + property-check harness,
+//! statistics, and formatting helpers.
+//!
+//! The offline crate set has no `proptest`/`criterion`, so [`check`]
+//! provides a minimal forall-style harness and [`stats`] the measurement
+//! machinery the benches need.
+
+pub mod check;
+pub mod fmt;
+pub mod stats;

@@ -1,0 +1,159 @@
+//! Integration: the L3 coordinator over both backends — batching, routing,
+//! state management and metrics — including real PJRT execution when the
+//! artifacts are present.
+
+use npuperf::config::{OperatorKind, WorkloadSpec};
+use npuperf::coordinator::{
+    BackendKind, Coordinator, CoordinatorConfig, Request,
+};
+use npuperf::runtime::{Golden, Manifest};
+
+fn artifact_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+#[test]
+fn simulation_only_coordinator_serves_full_grid() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        max_wait_ns: 100_000,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let mut reqs = Vec::new();
+    for (i, op) in OperatorKind::ALL.iter().enumerate() {
+        for n in [512usize, 2048, 8192] {
+            reqs.push(Request {
+                spec: WorkloadSpec::new(*op, n),
+                session: i as u64,
+                inputs: None,
+            });
+        }
+    }
+    let responses = coord.submit_all(reqs).unwrap();
+    assert_eq!(responses.len(), 15);
+    assert!(responses.iter().all(|r| r.backend == BackendKind::Simulate));
+    assert!(responses.iter().all(|r| r.sim_report.is_some()));
+}
+
+#[test]
+fn hybrid_routing_uses_pjrt_for_compiled_contexts() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let coord = Coordinator::new(CoordinatorConfig {
+        artifact_dir: Some(dir.clone()),
+        max_wait_ns: 100_000,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+
+    // Real inputs from goldens so we can check output correctness too.
+    let manifest = Manifest::load(&dir).unwrap();
+    let golden = Golden::load(manifest.golden_path("causal_n128_d64")).unwrap();
+
+    let short = coord
+        .submit(Request {
+            spec: WorkloadSpec::new(OperatorKind::Causal, 128),
+            session: 1,
+            inputs: Some(golden.inputs.clone()),
+        })
+        .unwrap();
+    assert_eq!(short.backend, BackendKind::Pjrt);
+    let out = &short.outputs.as_ref().unwrap()[0];
+    assert!(out.max_abs_diff(&golden.outputs[0]) < 2e-3, "served output == oracle");
+
+    let long = coord
+        .submit(Request {
+            spec: WorkloadSpec::new(OperatorKind::Causal, 8192),
+            session: 1,
+            inputs: None,
+        })
+        .unwrap();
+    assert_eq!(long.backend, BackendKind::Simulate);
+}
+
+#[test]
+fn concurrent_submitters_all_complete() {
+    let coord = std::sync::Arc::new(
+        Coordinator::new(CoordinatorConfig {
+            max_wait_ns: 100_000,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap(),
+    );
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let c = coord.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut oks = 0;
+            for i in 0..5 {
+                let op = OperatorKind::ALL[(t as usize + i) % 5];
+                let r = c
+                    .submit(Request {
+                        spec: WorkloadSpec::new(op, 1024),
+                        session: t * 100 + i as u64,
+                        inputs: None,
+                    })
+                    .unwrap();
+                assert!(r.backend_ns > 0.0);
+                oks += 1;
+            }
+            oks
+        }));
+    }
+    let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    assert_eq!(total, 20);
+}
+
+#[test]
+fn session_state_tracked_across_requests() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        max_wait_ns: 100_000,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    for i in 0..4 {
+        coord
+            .submit(Request {
+                spec: WorkloadSpec::new(OperatorKind::Causal, 2048),
+                session: 7,
+                inputs: None,
+            })
+            .unwrap();
+        let _ = i;
+    }
+    let snap = coord.metrics_snapshot().unwrap();
+    assert!(snap.contains("sessions=1"), "one logical session: {snap}");
+    assert!(snap.contains("total=4"), "{snap}");
+}
+
+#[test]
+fn simulated_latency_visible_in_response() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        max_wait_ns: 100_000,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let fast = coord
+        .submit(Request {
+            spec: WorkloadSpec::new(OperatorKind::Toeplitz, 8192),
+            session: 1,
+            inputs: None,
+        })
+        .unwrap();
+    let slow = coord
+        .submit(Request {
+            spec: WorkloadSpec::new(OperatorKind::Fourier, 8192),
+            session: 2,
+            inputs: None,
+        })
+        .unwrap();
+    assert!(
+        slow.backend_ns > 50.0 * fast.backend_ns,
+        "fourier {} vs toeplitz {}",
+        slow.backend_ns,
+        fast.backend_ns
+    );
+}

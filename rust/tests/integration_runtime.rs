@@ -1,0 +1,171 @@
+//! Integration: the PJRT runtime loads AOT artifacts, executes them, and
+//! reproduces the golden outputs computed by the JAX oracle at build time.
+//! This is the cross-language numeric handshake of the three-layer stack.
+//!
+//! Requires `make artifacts` (skipped gracefully when absent).
+
+use npuperf::runtime::{Golden, HloRuntime, Manifest, Tensor};
+
+fn artifact_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifact_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn manifest_lists_all_operator_artifacts() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    for op in ["causal", "retentive", "toeplitz", "linear", "fourier"] {
+        for n in [128, 256, 512] {
+            let name = format!("{op}_n{n}_d64");
+            assert!(m.get(&name).is_some(), "missing artifact {name}");
+        }
+    }
+}
+
+#[test]
+fn every_operator_artifact_matches_golden() {
+    let dir = require_artifacts!();
+    let mut rt = HloRuntime::new(&dir).unwrap();
+    let platform = rt.platform().to_lowercase();
+    assert!(platform == "cpu" || platform == "host", "platform {platform}");
+    // N=128 for all five operators: full numeric validation.
+    for op in ["causal", "retentive", "toeplitz", "linear", "fourier"] {
+        let name = format!("{op}_n128_d64");
+        let diff = rt.validate(&name).unwrap();
+        assert!(diff < 2e-3, "{name}: max |Δ| = {diff}");
+    }
+}
+
+#[test]
+fn longer_context_artifact_matches_golden() {
+    let dir = require_artifacts!();
+    let mut rt = HloRuntime::new(&dir).unwrap();
+    let diff = rt.validate("causal_n512_d64").unwrap();
+    assert!(diff < 2e-3, "causal_n512: max |Δ| = {diff}");
+}
+
+#[test]
+fn block_artifact_matches_golden() {
+    let dir = require_artifacts!();
+    let mut rt = HloRuntime::new(&dir).unwrap();
+    let diff = rt.validate("block_causal_n128_dm256").unwrap();
+    assert!(diff < 5e-3, "block: max |Δ| = {diff}");
+}
+
+#[test]
+fn execute_reports_timing_and_shapes() {
+    let dir = require_artifacts!();
+    let mut rt = HloRuntime::new(&dir).unwrap();
+    let golden = Golden::load(dir.join("linear_n128_d64.golden.txt")).unwrap();
+    let (outputs, exec_ns) = rt.execute("linear_n128_d64", &golden.inputs).unwrap();
+    assert_eq!(outputs.len(), 1);
+    assert_eq!(outputs[0].shape, vec![128, 64]);
+    assert!(exec_ns > 0.0);
+}
+
+#[test]
+fn execute_rejects_wrong_arity() {
+    let dir = require_artifacts!();
+    let mut rt = HloRuntime::new(&dir).unwrap();
+    let t = Tensor::new(vec![128, 64], vec![0.0; 128 * 64]).unwrap();
+    assert!(rt.execute("causal_n128_d64", &[t]).is_err());
+}
+
+#[test]
+fn decode_artifacts_match_goldens() {
+    // One autoregressive step (attention over a 512-token KV cache, and
+    // the recurrent linear state step) — the decode path of §II-A Eq. 3.
+    let dir = require_artifacts!();
+    let mut rt = HloRuntime::new(&dir).unwrap();
+    for name in ["decode_causal_n512_d64", "decode_linear_d64_r16"] {
+        let diff = rt.validate(name).unwrap();
+        assert!(diff < 1e-3, "{name}: max |Δ| = {diff}");
+    }
+    // The linear step returns (y, S', z') — three outputs.
+    let golden = Golden::load(dir.join("decode_linear_d64_r16.golden.txt")).unwrap();
+    let (outputs, _) = rt.execute("decode_linear_d64_r16", &golden.inputs).unwrap();
+    assert_eq!(outputs.len(), 3);
+    assert_eq!(outputs[1].shape, vec![16, 64], "updated state S'");
+}
+
+#[test]
+fn failure_injection_corrupt_hlo_is_rejected() {
+    // Copy a valid artifact set, corrupt one HLO file: loading must fail
+    // with a parse error, not execute garbage.
+    let dir = require_artifacts!();
+    let tmp = std::env::temp_dir().join(format!("npuperf-corrupt-{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    for f in ["manifest.txt", "toeplitz_n128_d64.hlo.txt", "toeplitz_n128_d64.golden.txt"] {
+        std::fs::copy(dir.join(f), tmp.join(f)).unwrap();
+    }
+    // Keep only the one artifact in the manifest.
+    let manifest = std::fs::read_to_string(tmp.join("manifest.txt")).unwrap();
+    let line = manifest.lines().find(|l| l.starts_with("toeplitz_n128_d64 ")).unwrap();
+    std::fs::write(tmp.join("manifest.txt"), format!("{line}\n")).unwrap();
+    // Corrupt the HLO body.
+    std::fs::write(tmp.join("toeplitz_n128_d64.hlo.txt"), "HloModule broken {{{").unwrap();
+    let mut rt = HloRuntime::new(&tmp).unwrap();
+    let err = rt.execute(
+        "toeplitz_n128_d64",
+        &Golden::load(tmp.join("toeplitz_n128_d64.golden.txt")).unwrap().inputs,
+    );
+    assert!(err.is_err(), "corrupt HLO must not execute");
+}
+
+#[test]
+fn failure_injection_unknown_artifact() {
+    let dir = require_artifacts!();
+    let mut rt = HloRuntime::new(&dir).unwrap();
+    assert!(rt.load("no_such_artifact").is_err());
+    let t = Tensor::new(vec![1], vec![0.0]).unwrap();
+    assert!(rt.execute("no_such_artifact", &[t]).is_err());
+}
+
+#[test]
+fn failure_injection_wrong_shape_inputs() {
+    let dir = require_artifacts!();
+    let mut rt = HloRuntime::new(&dir).unwrap();
+    // Right arity, wrong shapes: PJRT must reject, not crash.
+    let bad = vec![Tensor::new(vec![64, 64], vec![0.0; 64 * 64]).unwrap(); 3];
+    assert!(rt.execute("causal_n128_d64", &bad).is_err());
+}
+
+#[test]
+fn executor_thread_roundtrip() {
+    let dir = require_artifacts!();
+    let exec = npuperf::runtime::executor::Executor::spawn(&dir).unwrap();
+    let h = exec.handle();
+    h.warmup("toeplitz_n128_d64").unwrap();
+    let diff = h.validate("toeplitz_n128_d64").unwrap();
+    assert!(diff < 2e-3, "via executor: {diff}");
+    // Concurrent submissions from multiple threads through one handle.
+    let golden = Golden::load(
+        Manifest::load(&dir).unwrap().golden_path("toeplitz_n128_d64"),
+    )
+    .unwrap();
+    let mut joins = Vec::new();
+    for _ in 0..4 {
+        let h = h.clone();
+        let inputs = golden.inputs.clone();
+        joins.push(std::thread::spawn(move || {
+            h.execute("toeplitz_n128_d64", inputs).unwrap()
+        }));
+    }
+    for j in joins {
+        let out = j.join().unwrap();
+        assert_eq!(out.outputs[0].shape, vec![128, 64]);
+    }
+}
