@@ -9,6 +9,7 @@
 use npuperf::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
 use npuperf::coordinator::Router;
 use npuperf::model::calibrate;
+use npuperf::ops::CausalOperator;
 use npuperf::{npu, ops};
 
 fn main() {

@@ -4,6 +4,8 @@
 //! npuperf tables                 # all paper tables, ours vs published
 //! npuperf table <1..8>           # one table
 //! npuperf figures                # figs 3-8
+//! npuperf sweep [--contexts A,B] # every registered operator x context grid
+//! npuperf operators              # list the operator registry
 //! npuperf simulate <op> <N> [--d-state D] [--offload] [--no-double-buffer]
 //! npuperf roofline               # calibation + fig 7
 //! npuperf masks [N]              # fig 3
@@ -13,14 +15,34 @@
 //! npuperf serve [dir]            # demo serving loop over the artifacts
 //! npuperf hw                     # table 1
 //! ```
+//!
+//! Every operator-touching command dispatches through the
+//! [operator registry](crate::ops::registry); `sweep` and `operators` are
+//! the registry's front door (enumerate, classify, compare).
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
 use crate::coordinator::{self, chunking, Coordinator, CoordinatorConfig, Request};
 use crate::model::{calibrate, Roofline};
+use crate::ops::CausalOperator;
 use crate::report::{figures, tables};
 use crate::{npu, ops};
+
+/// Resolve an operator argument: exact registry names first (so variants
+/// like `retentive-chunked` are runnable), then the `OperatorKind` aliases
+/// (`dra`, `tsa`, ...), which map to the kind's canonical registry entry.
+fn resolve_operator(arg: &str) -> Result<&'static dyn CausalOperator> {
+    let reg = ops::registry::global();
+    if let Some(op) = reg.get(&arg.to_ascii_lowercase()) {
+        return Ok(op);
+    }
+    let kind: OperatorKind = arg.parse().map_err(|e: String| {
+        anyhow!("{e} (or a registry name: {})", reg.names().join("|"))
+    })?;
+    reg.try_for_kind(kind)
+        .ok_or_else(|| anyhow!("no operator registered for workload kind {kind}"))
+}
 
 /// Entry point used by `main`.
 pub fn run(args: &[String]) -> Result<String> {
@@ -90,12 +112,44 @@ pub fn run(args: &[String]) -> Result<String> {
             let n = rest.first().and_then(|s| s.parse().ok()).unwrap_or(32);
             Ok(figures::fig3(n))
         }
+        "sweep" => {
+            let contexts: Vec<usize> = if flag("--contexts") {
+                let list = opt("--contexts").ok_or_else(|| {
+                    anyhow!("--contexts expects a comma-separated list of lengths")
+                })?;
+                list.split(',')
+                    .map(|x| {
+                        x.trim()
+                            .parse::<usize>()
+                            .map_err(|e| anyhow!("bad context {x:?}: {e}"))
+                    })
+                    .collect::<Result<_>>()?
+            } else {
+                vec![512, 2048, 8192]
+            };
+            Ok(crate::report::sweep::sweep_report(&contexts, &hw, &sim))
+        }
+        "operators" => {
+            let mut out = String::from(
+                "Registered causal operators (name / table name / kind / complexity):\n",
+            );
+            for op in ops::registry::global().iter() {
+                out += &format!(
+                    "  {:<18} {:<12} {:<10} {}\n",
+                    op.name(),
+                    op.paper_name(),
+                    op.kind().name(),
+                    op.complexity()
+                );
+            }
+            out += "\nAdd one by implementing ops::CausalOperator and registering it \
+                    (docs/ARCHITECTURE.md).\n";
+            Ok(out)
+        }
         "simulate" => {
-            let op: OperatorKind = rest
-                .first()
-                .ok_or_else(|| anyhow!("usage: npuperf simulate <op> <N>"))?
-                .parse()
-                .map_err(|e: String| anyhow!(e))?;
+            let entry = resolve_operator(
+                rest.first().ok_or_else(|| anyhow!("usage: npuperf simulate <op> <N>"))?,
+            )?;
             let n: usize = rest
                 .get(1)
                 .ok_or_else(|| anyhow!("usage: npuperf simulate <op> <N>"))?
@@ -106,15 +160,16 @@ pub fn run(args: &[String]) -> Result<String> {
                 .and_then(|i| rest.get(i + 1))
                 .and_then(|s| s.parse().ok())
                 .unwrap_or(16);
-            let spec = WorkloadSpec::new(op, n).with_d_state(d_state);
-            let g = ops::lower(&spec, &hw, &sim);
+            let spec = WorkloadSpec::new(entry.kind(), n).with_d_state(d_state);
+            let g = entry.lower(&spec, &hw, &sim);
             let r = npu::run(&g, &hw, &sim);
             let [dpu, dma, shave] = r.utilization();
             Ok(format!(
-                "{spec}\n  latency      {:.3} ms\n  throughput   {:.0} ops/s\n  \
+                "{spec} [op={}]\n  latency      {:.3} ms\n  throughput   {:.0} ops/s\n  \
                  utilization  DPU {:.1}% / DMA {:.1}% / SHAVE {:.1}%  -> {}\n  \
                  stall        {:.1}%\n  cache eff    {:.1}%\n  reuse        {:.3} ms\n  \
                  achieved     {:.1} GOP/s over {} DMA bytes\n  graph        {} prims",
+                entry.name(),
                 r.latency_ms(),
                 r.throughput_ops_s(),
                 dpu * 100.0,
@@ -153,8 +208,11 @@ pub fn run(args: &[String]) -> Result<String> {
                 .ok_or_else(|| anyhow!("usage: npuperf rank <N>"))?
                 .parse()?;
             let router = coordinator::Router::standard();
-            let mut out = format!("Cost-model operator ranking at N={n}:\n");
-            for (i, (op, ms)) in router.rank_operators(n, &hw, &sim).iter().enumerate() {
+            let mut out = format!(
+                "Cost-model operator ranking at N={n} (full registry; run variants \
+                 by name, e.g. `npuperf simulate retentive-chunked {n}`):\n"
+            );
+            for (i, (op, ms)) in router.rank_all(n, &hw, &sim).iter().enumerate() {
                 out += &format!("  {}. {:<12} {:.3} ms\n", i + 1, op.paper_name(), ms);
             }
             Ok(out)
@@ -188,42 +246,39 @@ pub fn run(args: &[String]) -> Result<String> {
             Ok(out)
         }
         "decode" => {
-            let op: OperatorKind = rest
-                .first()
-                .ok_or_else(|| anyhow!("usage: npuperf decode <op> <N>"))?
-                .parse()
-                .map_err(|e: String| anyhow!(e))?;
+            let entry = resolve_operator(
+                rest.first().ok_or_else(|| anyhow!("usage: npuperf decode <op> <N>"))?,
+            )?;
             let n: usize = rest
                 .get(1)
                 .ok_or_else(|| anyhow!("usage: npuperf decode <op> <N>"))?
                 .parse()?;
-            let spec = WorkloadSpec::new(op, n);
-            let g = ops::decode::lower_step(&spec, &hw, &sim);
+            let spec = WorkloadSpec::new(entry.kind(), n);
+            let g = entry.lower_decode(&spec, &hw, &sim);
             let r = npu::run(&g, &hw, &sim);
             Ok(format!(
                 "{} decode step at retained context N={n}:\n  \
                  per-token latency {:.3} ms -> {:.0} tokens/s sustained\n  \
                  bottleneck {} ({} prims)",
-                op.paper_name(),
+                entry.paper_name(),
                 r.latency_ms(),
-                ops::decode::tokens_per_second(&spec, &hw, &sim),
+                r.throughput_ops_s(),
                 r.bottleneck(),
                 g.len(),
             ))
         }
         "trace" => {
-            let op: OperatorKind = rest
-                .first()
-                .ok_or_else(|| anyhow!("usage: npuperf trace <op> <N> [--out F]"))?
-                .parse()
-                .map_err(|e: String| anyhow!(e))?;
+            let entry = resolve_operator(
+                rest.first()
+                    .ok_or_else(|| anyhow!("usage: npuperf trace <op> <N> [--out F]"))?,
+            )?;
             let n: usize = rest
                 .get(1)
                 .ok_or_else(|| anyhow!("usage: npuperf trace <op> <N> [--out F]"))?
                 .parse()?;
             let out = opt("--out").unwrap_or("trace.json").to_string();
-            let spec = WorkloadSpec::new(op, n);
-            let g = ops::lower(&spec, &hw, &sim);
+            let spec = WorkloadSpec::new(entry.kind(), n);
+            let g = entry.lower(&spec, &hw, &sim);
             let trace = npu::simulate(&g, &hw, &sim);
             let json = npu::trace_dump::to_chrome_trace(&g, &trace);
             std::fs::write(&out, &json)?;
@@ -320,8 +375,13 @@ const HELP: &str = "npuperf — NPU causal-operator performance modeling (paper 
 commands:
   tables | table <1..8>     paper tables, ours vs published values
   figures | masks [N]       paper figures 3-8
+  sweep [--contexts A,B,C]  run every registered operator across a context
+                            grid; per-cell bottleneck classification
+  operators                 list the operator registry
   simulate <op> <N> [--d-state D] [--offload] [--no-double-buffer]
   decode <op> <N>           one autoregressive decode step + tokens/s
+                            (<op> = kind alias or registry name, e.g.
+                             retentive-chunked — see `operators`)
   trace <op> <N> [--out F]  export Chrome/Perfetto trace of the schedule
   energy [N]                per-operator energy model (35 W envelope)
   roofline                  effective-ceiling calibration + fig 7
@@ -346,6 +406,41 @@ mod tests {
         let out = run_cmd(&["help"]).unwrap();
         assert!(out.contains("simulate"));
         assert!(out.contains("roofline"));
+        assert!(out.contains("sweep"));
+        assert!(out.contains("operators"));
+    }
+
+    #[test]
+    fn sweep_classifies_every_registered_operator() {
+        let out = run_cmd(&["sweep", "--contexts", "128,256"]).unwrap();
+        for name in ["Full Causal", "Retentive", "Toeplitz", "Linear", "Fourier", "Ret-Chunked"]
+        {
+            assert!(out.contains(name), "missing {name}:\n{out}");
+        }
+        assert!(out.contains("Classification"), "{out}");
+        assert!(out.contains("-bound"), "{out}");
+    }
+
+    #[test]
+    fn sweep_rejects_malformed_contexts() {
+        assert!(run_cmd(&["sweep", "--contexts", "12a"]).is_err());
+        assert!(run_cmd(&["sweep", "--contexts", ""]).is_err());
+        assert!(run_cmd(&["sweep", "--contexts"]).is_err(), "missing value must not be ignored");
+    }
+
+    #[test]
+    fn op_commands_accept_registry_variant_names() {
+        let out = run_cmd(&["simulate", "retentive-chunked", "512"]).unwrap();
+        assert!(out.contains("[op=retentive-chunked]"), "{out}");
+        let out = run_cmd(&["decode", "retentive-chunked", "1024"]).unwrap();
+        assert!(out.contains("Ret-Chunked"), "{out}");
+    }
+
+    #[test]
+    fn operators_lists_registry() {
+        let out = run_cmd(&["operators"]).unwrap();
+        assert!(out.contains("retentive-chunked"), "{out}");
+        assert!(out.contains("O(N^2*d)"), "{out}");
     }
 
     #[test]

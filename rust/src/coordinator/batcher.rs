@@ -5,6 +5,12 @@
 //! Policy: a signature's batch is released when it reaches `max_batch` or
 //! its oldest entry has waited `max_wait_ns` (measured on a caller-supplied
 //! clock so tests are deterministic).
+//!
+//! The signature key is the whole [`WorkloadSpec`], so batching is
+//! operator-agnostic: any kind the [operator
+//! registry](crate::ops::registry) can dispatch batches here without
+//! batcher changes, and one released [`Batch`] is always lowered exactly
+//! once on the simulate path regardless of its size.
 
 use std::collections::HashMap;
 

@@ -10,6 +10,13 @@
 //! plus the §V co-design machinery: a chunked-prefill scheduler bounded by
 //! the 4 MB scratchpad and a KV/recurrent-state manager implementing the
 //! memory-state tradeoff of Fig 1.
+//!
+//! Operator dispatch is registry-driven end to end: the [`Router`] ranks
+//! whatever the [operator registry](crate::ops::registry) enumerates, the
+//! [`Batcher`] keys on the full workload signature, and the [`Coordinator`]
+//! serve loop resolves each batch's kind to its registered
+//! [`crate::ops::CausalOperator`] — so a new operator becomes servable by
+//! implementing one trait and registering it, with no coordinator changes.
 
 pub mod batcher;
 pub mod chunking;

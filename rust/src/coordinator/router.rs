@@ -4,11 +4,34 @@
 //! numerics); longer contexts run on the **NPU simulator** (the paper's
 //! microbenchmark regime, 1024-8192, where compiling interpret-mode Pallas
 //! HLO is neither needed nor meaningful on CPU). The router also exposes
-//! the cost-model advice the §V co-design discussion calls for: given a
-//! context length, which operator family is expected to be fastest.
+//! the cost-model advice the §V co-design discussion calls for — given a
+//! context length, which operator is expected to be fastest — via
+//! [`CausalOperator::predict_ms`]: [`Router::rank_operators`] ranks the
+//! **dispatchable** set (the registry's canonical kernel per kind, i.e.
+//! exactly what a kind-keyed request will be served), while
+//! [`Router::rank_all`] ranks the whole registry including co-design
+//! variants like `retentive-chunked` for exploration.
 
 use crate::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
-use crate::{npu, ops};
+use crate::ops::registry::{self, CausalOperator};
+
+/// Shared ranking body: predict latency for each operator at context `n`
+/// and sort fastest first.
+fn rank(
+    ops: impl Iterator<Item = &'static dyn CausalOperator>,
+    n: usize,
+    hw: &NpuConfig,
+    sim: &SimConfig,
+) -> Vec<(&'static dyn CausalOperator, f64)> {
+    let mut ranked: Vec<(&'static dyn CausalOperator, f64)> = ops
+        .map(|op| {
+            let spec = WorkloadSpec::new(op.kind(), n);
+            (op, op.predict_ms(&spec, hw, sim))
+        })
+        .collect();
+    ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    ranked
+}
 
 /// Execution backend for one request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,6 +66,7 @@ impl Router {
         Self::new(Vec::new(), 0)
     }
 
+    /// Choose the backend for one request.
     pub fn route(&self, spec: &WorkloadSpec) -> BackendKind {
         if self.artifact_contexts.binary_search(&spec.n).is_ok()
             && spec.d_head == self.artifact_d_head
@@ -54,32 +78,42 @@ impl Router {
         }
     }
 
-    /// Cost-model advice (§V co-design): simulate every operator at `n` and
-    /// rank by latency. Returns (operator, predicted ms) sorted fastest
-    /// first.
+    /// Cost-model advice (§V co-design): rank the operators the serving
+    /// stack will actually dispatch — the registry's canonical entry per
+    /// [`OperatorKind`] — at context `n` by predicted latency. Returns
+    /// (operator, predicted ms) sorted fastest first. Every entry here is
+    /// directly actionable: submitting a request with that kind serves
+    /// exactly that operator.
     pub fn rank_operators(
         &self,
         n: usize,
         hw: &NpuConfig,
         sim: &SimConfig,
-    ) -> Vec<(OperatorKind, f64)> {
-        let mut ranked: Vec<(OperatorKind, f64)> = OperatorKind::ALL
-            .iter()
-            .map(|&op| {
-                let spec = WorkloadSpec::new(op, n);
-                let g = ops::lower(&spec, hw, sim);
-                let r = npu::run(&g, hw, sim);
-                (op, r.latency_ms())
-            })
-            .collect();
-        ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-        ranked
+    ) -> Vec<(&'static dyn CausalOperator, f64)> {
+        let reg = registry::global();
+        rank(OperatorKind::ALL.iter().map(move |&kind| reg.for_kind(kind)), n, hw, sim)
+    }
+
+    /// Exploration ranking over the **whole** registry, including variants
+    /// that share a kind with a canonical kernel (e.g.
+    /// `retentive-chunked`). Variants are not addressable through
+    /// kind-keyed serving requests — run them by registry name
+    /// (`npuperf simulate retentive-chunked <N>`) or promote one to
+    /// canonical by registration order in a custom registry.
+    pub fn rank_all(
+        &self,
+        n: usize,
+        hw: &NpuConfig,
+        sim: &SimConfig,
+    ) -> Vec<(&'static dyn CausalOperator, f64)> {
+        rank(registry::global().iter(), n, hw, sim)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::OperatorKind;
 
     #[test]
     fn artifacts_route_to_pjrt() {
@@ -118,9 +152,37 @@ mod tests {
         // Paper conclusion: Toeplitz/Linear win the long-context regime.
         let r = Router::standard();
         let ranked = r.rank_operators(4096, &NpuConfig::default(), &SimConfig::default());
-        let top2: Vec<OperatorKind> = ranked[..2].iter().map(|x| x.0).collect();
-        assert!(top2.contains(&OperatorKind::Toeplitz));
-        assert!(top2.contains(&OperatorKind::Linear));
-        assert_eq!(ranked.last().unwrap().0, OperatorKind::Fourier, "worst scaler");
+        assert_eq!(ranked.len(), OperatorKind::ALL.len(), "one entry per servable kind");
+        let top2: Vec<&str> = ranked[..2].iter().map(|x| x.0.name()).collect();
+        assert!(top2.contains(&"toeplitz"), "{top2:?}");
+        assert!(top2.contains(&"linear"), "{top2:?}");
+        assert_eq!(ranked.last().unwrap().0.name(), "fourier", "worst scaler");
+    }
+
+    #[test]
+    fn rank_operators_only_recommends_dispatchable_kernels() {
+        // Serving requests are kind-keyed: advice must match what
+        // for_kind() will dispatch, so variants never appear here.
+        let r = Router::simulate_only();
+        let ranked = r.rank_operators(1024, &NpuConfig::default(), &SimConfig::default());
+        for (op, _) in &ranked {
+            assert_eq!(
+                registry::global().for_kind(op.kind()).name(),
+                op.name(),
+                "ranked operator is exactly the one serving would dispatch"
+            );
+        }
+    }
+
+    #[test]
+    fn rank_all_includes_registered_variants() {
+        let r = Router::simulate_only();
+        let ranked = r.rank_all(2048, &NpuConfig::default(), &SimConfig::default());
+        assert_eq!(ranked.len(), registry::global().len(), "full registry ranked");
+        let names: Vec<&str> = ranked.iter().map(|x| x.0.name()).collect();
+        assert!(names.contains(&"retentive-chunked"), "{names:?}");
+        // The co-design variant must beat its quadratic sibling.
+        let pos = |n: &str| names.iter().position(|x| *x == n).unwrap();
+        assert!(pos("retentive-chunked") < pos("retentive"));
     }
 }

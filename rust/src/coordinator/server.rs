@@ -6,6 +6,15 @@
 //! state manager and metrics. The PJRT runtime (when artifacts are
 //! available) is confined to its own executor thread — the coordinator
 //! only holds the cloneable channel handle.
+//!
+//! Simulated batches are lowered through the [operator
+//! registry](crate::ops::registry): the serve loop resolves the batch's
+//! workload kind to its registered [`crate::ops::CausalOperator`] and
+//! dispatches that — no operator `match` in the serving path. A
+//! deployment that installs its own registry
+//! ([`crate::ops::registry::init_global`] at startup) therefore changes
+//! what every kind serves — including swapping in a new operator — with
+//! zero coordinator changes.
 
 use std::sync::mpsc;
 use std::thread::JoinHandle;
@@ -15,7 +24,8 @@ use anyhow::{anyhow, Result};
 
 use crate::config::{NpuConfig, SimConfig, WorkloadSpec};
 use crate::npu::{self, ExecReport};
-use crate::ops;
+use crate::ops::registry;
+use crate::ops::CausalOperator;
 use crate::runtime::executor::{Executor, ExecutorHandle};
 use crate::runtime::Tensor;
 
@@ -38,6 +48,10 @@ pub struct Request {
 #[derive(Clone, Debug)]
 pub struct Response {
     pub spec: WorkloadSpec,
+    /// What served the request: the registry name of the lowering that
+    /// ran (simulate path), or the precompiled artifact's kernel family —
+    /// the workload kind's name — on the PJRT path.
+    pub operator: &'static str,
     pub backend: BackendKind,
     /// Real outputs (PJRT path only).
     pub outputs: Option<Vec<Tensor>>,
@@ -184,12 +198,22 @@ fn serve_loop(
         metrics.batches += 1;
         let backend = router.route(&batch.spec);
         let size = batch.request_ids.len();
-        // Simulate once per batch signature; PJRT executes each item.
-        let sim_report = if backend == BackendKind::Simulate {
-            let g = ops::lower(&batch.spec, &cfg.hw, &cfg.sim);
-            Some(npu::run(&g, &cfg.hw, &cfg.sim))
+        // Simulate path: resolve the batch's operator through the registry
+        // and lower once per batch signature. A kind missing from a custom
+        // registry leaves this as None and each request in the batch gets
+        // an error reply — never a panic on the long-lived serving thread.
+        // The PJRT path never touches the registry: it executes a
+        // precompiled artifact keyed by the workload kind.
+        let (sim_operator, sim_report) = if backend == BackendKind::Simulate {
+            match registry::global().try_for_kind(batch.spec.op) {
+                Some(op_impl) => {
+                    let g = op_impl.lower(&batch.spec, &cfg.hw, &cfg.sim);
+                    (Some(op_impl.name()), Some(npu::run(&g, &cfg.hw, &cfg.sim)))
+                }
+                None => (None, None),
+            }
         } else {
-            None
+            (None, None)
         };
         for id in batch.request_ids {
             let Some(job) = jobs.remove(&id) else { continue };
@@ -214,6 +238,11 @@ fn serve_loop(
                             metrics.pjrt_requests += 1;
                             Ok(Response {
                                 spec,
+                                // The artifact is a precompiled build of the
+                                // kind's kernel family, independent of which
+                                // lowering the registry currently maps the
+                                // kind to — attribute it as such.
+                                operator: spec.op.name(),
                                 backend,
                                 backend_ns: out.exec_ns,
                                 outputs: Some(out.outputs),
@@ -224,18 +253,24 @@ fn serve_loop(
                         Err(e) => Err(e),
                     }
                 }
-                BackendKind::Simulate => {
-                    let report = sim_report.clone().expect("computed above");
-                    metrics.simulated_requests += 1;
-                    Ok(Response {
-                        spec,
-                        backend,
-                        backend_ns: report.span_ns,
-                        outputs: None,
-                        sim_report: Some(report),
-                        batch_size: size,
-                    })
-                }
+                BackendKind::Simulate => match (sim_operator, sim_report.as_ref()) {
+                    (Some(operator), Some(report)) => {
+                        metrics.simulated_requests += 1;
+                        Ok(Response {
+                            spec,
+                            operator,
+                            backend,
+                            backend_ns: report.span_ns,
+                            outputs: None,
+                            sim_report: Some(report.clone()),
+                            batch_size: size,
+                        })
+                    }
+                    _ => Err(anyhow!(
+                        "no operator registered for workload kind {}",
+                        spec.op
+                    )),
+                },
             };
             metrics.record(spec.op, job.enqueued.elapsed().as_nanos() as f64);
             let _ = job.reply.send(result);
@@ -367,6 +402,19 @@ mod tests {
         assert!(snap.contains("causal"), "{snap}");
         assert!(snap.contains("total=3"), "{snap}");
         assert!(snap.contains("sessions=1"), "{snap}");
+    }
+
+    #[test]
+    fn response_names_the_registry_operator() {
+        let c = sim_only();
+        let r = c
+            .submit(Request {
+                spec: WorkloadSpec::new(OperatorKind::Linear, 1024),
+                session: 1,
+                inputs: None,
+            })
+            .unwrap();
+        assert_eq!(r.operator, "linear", "registry attribution on the response");
     }
 
     #[test]

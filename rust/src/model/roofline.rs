@@ -2,7 +2,7 @@
 
 use crate::config::WorkloadSpec;
 use crate::npu::ExecReport;
-use crate::ops::flops;
+use crate::ops::registry::{self, CausalOperator};
 
 use super::calibrate::Ceilings;
 
@@ -51,15 +51,30 @@ impl Roofline {
         (self.ceilings.beta_eff_gbps * intensity).min(self.ceilings.pi_eff_gops)
     }
 
-    /// Place one simulated operator run on the roofline. Intensity is the
-    /// *analytical* ops/byte (flops::profile — the paper's Table VII
-    /// convention); measured GOP/s is algorithmic ops over simulated time.
+    /// Place one simulated operator run on the roofline, resolving the
+    /// workload's kind through the operator registry (canonical kernel).
+    /// Intensity is the *analytical* ops/byte
+    /// ([`CausalOperator::profile`] — the paper's Table VII convention);
+    /// measured GOP/s is algorithmic ops over simulated time.
     pub fn place(&self, spec: &WorkloadSpec, report: &ExecReport, elem_bytes: u64) -> RooflinePoint {
-        let prof = flops::profile(spec, elem_bytes);
+        self.place_op(registry::global().for_kind(spec.op), spec, report, elem_bytes)
+    }
+
+    /// Place a specific registry operator (e.g. a variant like
+    /// `retentive-chunked` whose profile differs from its kind's canonical
+    /// kernel) on the roofline.
+    pub fn place_op(
+        &self,
+        op: &dyn CausalOperator,
+        spec: &WorkloadSpec,
+        report: &ExecReport,
+        elem_bytes: u64,
+    ) -> RooflinePoint {
+        let prof = op.profile(spec, elem_bytes);
         let intensity = prof.intensity();
         let measured = prof.ops as f64 / report.span_ns;
         RooflinePoint {
-            name: spec.op.paper_name().to_string(),
+            name: op.paper_name().to_string(),
             intensity,
             measured_gops: measured,
             bound_gops: self.bound_gops(intensity),
@@ -236,6 +251,29 @@ mod tests {
         for op in [OperatorKind::Causal, OperatorKind::Toeplitz, OperatorKind::Linear] {
             assert!(fourier < frac(op), "fourier must be worst");
         }
+    }
+
+    #[test]
+    fn variant_placement_uses_its_own_profile() {
+        // A registry variant (retentive-chunked) must land on the roofline
+        // with its own analytical profile, not its kind's quadratic one.
+        let hw = NpuConfig::default();
+        let sim = SimConfig::default();
+        let r = roofline();
+        let reg = crate::ops::registry::global();
+        let chunked = reg.get("retentive-chunked").unwrap();
+        let spec = crate::config::WorkloadSpec::new(OperatorKind::Retentive, 4096);
+        let rep = npu::run(&chunked.lower(&spec, &hw, &sim), &hw, &sim);
+        let via_variant = r.place_op(chunked, &spec, &rep, sim.elem_bytes);
+        let via_kind = r.place(&spec, &rep, sim.elem_bytes);
+        assert_eq!(via_variant.name, "Ret-Chunked");
+        assert_eq!(via_kind.name, "Retentive");
+        assert!(
+            (via_variant.intensity - via_kind.intensity).abs() > 1.0,
+            "chunked profile ({}) must differ from the quadratic kernel's ({})",
+            via_variant.intensity,
+            via_kind.intensity
+        );
     }
 
     #[test]

@@ -5,6 +5,11 @@
 //! in integer picoseconds for determinism. The scheduler is
 //! earliest-ready-first with node-id tie-breaking — the static, in-order
 //! dispatch a real NPU command list gives you.
+//!
+//! The engine is deliberately operator-blind: it consumes any [`OpGraph`]
+//! produced by a [`crate::ops::CausalOperator`] lowering, so registering a
+//! new operator (see [`crate::ops::registry`]) requires no simulator
+//! changes — the per-primitive [`CostModel`] is the only hardware contract.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;

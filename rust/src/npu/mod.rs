@@ -8,6 +8,15 @@
 //! time, and [`cache`]/[`pipeline`] instrumentation that reproduces the
 //! vendor profiler's counters (utilization %, pipeline stalls, cache
 //! efficiency, state-reuse latency).
+//!
+//! The simulator is operator-agnostic: it executes whatever DAG the
+//! [operator registry](crate::ops::registry) lowered. [`run`] takes a
+//! pre-lowered graph; [`run_workload`] is the registry-dispatched
+//! convenience the report layer builds its tables/figures on (workload
+//! spec in, full [`ExecReport`] out — no operator `match` anywhere on
+//! the path). The coordinator's serve loop resolves the registry itself
+//! instead, because it also needs the operator's name for response
+//! attribution and a per-request error on unregistered kinds.
 
 pub mod cache;
 pub mod cost;
@@ -22,11 +31,17 @@ pub use engine::{simulate, NodeTiming, SimTrace};
 pub use report::ExecReport;
 pub use scratchpad::Scratchpad;
 
-use crate::config::{NpuConfig, SimConfig};
+use crate::config::{NpuConfig, SimConfig, WorkloadSpec};
 use crate::ops::OpGraph;
 
 /// Convenience: lower-level `simulate` + full report derivation.
 pub fn run(graph: &OpGraph, hw: &NpuConfig, sim: &SimConfig) -> ExecReport {
     let trace = simulate(graph, hw, sim);
     ExecReport::from_trace(graph, &trace)
+}
+
+/// Registry-dispatched execution: resolve `spec.op` through the operator
+/// registry, lower, simulate, and derive the report in one call.
+pub fn run_workload(spec: &WorkloadSpec, hw: &NpuConfig, sim: &SimConfig) -> ExecReport {
+    run(&crate::ops::lower(spec, hw, sim), hw, sim)
 }

@@ -1,4 +1,4 @@
-//! Operator IR and lowerings.
+//! Operator IR, lowerings, and the operator registry.
 //!
 //! Each causal operator (paper §II-C) is lowered — exactly like the vendor
 //! NPU compiler would — into a DAG of *primitive ops* scheduled onto the
@@ -14,6 +14,14 @@
 //! every buffer access is tagged hit/miss by the scratchpad allocator in
 //! [`tiling`]. The event-driven simulator in [`crate::npu`] then executes
 //! the DAG and the paper's utilization/stall/cache numbers fall out.
+//!
+//! Dispatch is owned by the [`registry`]: every operator is a
+//! [`CausalOperator`] implementation registered by name in an
+//! [`OperatorRegistry`], and the pipeline entry points ([`lower`],
+//! [`lower_decode`]) resolve the workload's kind through the process-wide
+//! registry instead of hardcoded `match` arms. New operators plug in by
+//! implementing the trait and registering — no pipeline changes (see
+//! `docs/ARCHITECTURE.md`).
 
 pub mod causal;
 pub mod decode;
@@ -22,6 +30,7 @@ pub mod fourier;
 pub mod graph;
 pub mod linear;
 pub mod masks;
+pub mod registry;
 pub mod retentive;
 pub mod retentive_chunked;
 pub mod tiling;
@@ -31,17 +40,18 @@ pub use graph::{
     BufferAccess, BufferId, Engine, EltKind, GraphBuilder, Node, NodeId, OpGraph, PrimOp,
     TransferDir,
 };
+pub use registry::{classify, BoundClass, CausalOperator, OperatorRegistry};
 
-use crate::config::{OperatorKind, SimConfig, WorkloadSpec};
 use crate::config::hw::NpuConfig;
+use crate::config::{SimConfig, WorkloadSpec};
 
-/// Lower a workload to its primitive-op DAG (dispatch over operator kind).
+/// Lower a prefill workload to its primitive-op DAG via the operator
+/// registry (kind-based dispatch to the canonical lowering).
 pub fn lower(spec: &WorkloadSpec, hw: &NpuConfig, sim: &SimConfig) -> OpGraph {
-    match spec.op {
-        OperatorKind::Causal => causal::lower(spec, hw, sim),
-        OperatorKind::Retentive => retentive::lower(spec, hw, sim),
-        OperatorKind::Toeplitz => toeplitz::lower(spec, hw, sim),
-        OperatorKind::Linear => linear::lower(spec, hw, sim),
-        OperatorKind::Fourier => fourier::lower(spec, hw, sim),
-    }
+    registry::global().for_kind(spec.op).lower(spec, hw, sim)
+}
+
+/// Lower one autoregressive decode step via the operator registry.
+pub fn lower_decode(spec: &WorkloadSpec, hw: &NpuConfig, sim: &SimConfig) -> OpGraph {
+    registry::global().for_kind(spec.op).lower_decode(spec, hw, sim)
 }

@@ -4,23 +4,24 @@
 //! published values printed alongside our simulated values so deviations
 //! are visible at a glance. [`figures`] regenerates Figs 3-8 as ASCII
 //! plots + CSV series. [`export`] writes the CSV files the benches emit.
+//! [`sweep`] is the registry-driven comparative report behind
+//! `npuperf sweep`: every registered operator across a context grid, with
+//! the paper's bottleneck-taxonomy classification per cell.
 
 pub mod export;
 pub mod figures;
+pub mod sweep;
 pub mod tables;
 
 use crate::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
 use crate::npu::{self, ExecReport};
-use crate::ops;
 
 /// The context sweep used throughout the paper's evaluation.
 pub const CONTEXTS: [usize; 7] = [128, 256, 512, 1024, 2048, 4096, 8192];
 
-/// Run one (operator, context) cell on the simulator.
+/// Run one (operator, context) cell on the simulator (registry-dispatched).
 pub fn run_cell(op: OperatorKind, n: usize, hw: &NpuConfig, sim: &SimConfig) -> ExecReport {
-    let spec = WorkloadSpec::new(op, n);
-    let g = ops::lower(&spec, hw, sim);
-    npu::run(&g, hw, sim)
+    npu::run_workload(&WorkloadSpec::new(op, n), hw, sim)
 }
 
 /// Run a full operator × context grid (reused by several tables/figures).

@@ -1,0 +1,204 @@
+//! Registry-driven operator × context sweep with bottleneck classification
+//! (the `npuperf sweep` report).
+//!
+//! Runs **every registered operator** — builtins and anything a deployment
+//! registered on its own [`OperatorRegistry`] — across a grid of context
+//! lengths on the NPU simulator, and renders one comparative table: per
+//! cell the latency, engine-utilization split, stall and cache-efficiency
+//! counters, and the paper's taxonomy verdict ([`BoundClass`]): memory-,
+//! compute-, vector-compute-, or data-movement-bound. This is the paper's
+//! central artifact — the bottleneck *spectrum* across operators — as one
+//! command over the pluggable operator inventory.
+
+use crate::config::{NpuConfig, SimConfig, WorkloadSpec};
+use crate::npu;
+use crate::ops::registry::{self, classify, BoundClass, CausalOperator, OperatorRegistry};
+use crate::util::fmt;
+
+/// One evaluated (operator, context) cell.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    /// Registry name of the operator.
+    pub name: &'static str,
+    /// Display name for tables.
+    pub paper_name: &'static str,
+    /// Asymptotic cost class.
+    pub complexity: &'static str,
+    /// Context length N.
+    pub n: usize,
+    /// Simulated latency, ms.
+    pub latency_ms: f64,
+    /// Utilization shares [DPU, DMA, SHAVE] summing to 1.
+    pub utilization: [f64; 3],
+    /// Compute pipeline-stall fraction.
+    pub stall: f64,
+    /// Scratchpad hit rate.
+    pub cache_eff: f64,
+    /// Dominant-engine bottleneck string (Table II column).
+    pub bottleneck: String,
+    /// Paper-taxonomy classification.
+    pub class: BoundClass,
+}
+
+/// Evaluate every operator in `reg` at every context in `contexts`.
+pub fn run_sweep(
+    reg: &OperatorRegistry,
+    contexts: &[usize],
+    hw: &NpuConfig,
+    sim: &SimConfig,
+) -> Vec<SweepCell> {
+    let mut cells = Vec::new();
+    for op in reg.iter() {
+        for &n in contexts {
+            let spec = WorkloadSpec::new(op.kind(), n);
+            let r = npu::run(&op.lower(&spec, hw, sim), hw, sim);
+            cells.push(SweepCell {
+                name: op.name(),
+                paper_name: op.paper_name(),
+                complexity: op.complexity(),
+                n,
+                latency_ms: r.latency_ms(),
+                utilization: r.utilization(),
+                stall: r.stall.stall_frac(),
+                cache_eff: r.cache.efficiency(),
+                bottleneck: r.bottleneck().to_string(),
+                class: classify(&r),
+            });
+        }
+    }
+    cells
+}
+
+/// Render the sweep over an explicit registry.
+pub fn sweep_report_with(
+    reg: &OperatorRegistry,
+    contexts: &[usize],
+    hw: &NpuConfig,
+    sim: &SimConfig,
+) -> String {
+    let cells = run_sweep(reg, contexts, hw, sim);
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.paper_name.to_string(),
+                c.complexity.to_string(),
+                c.n.to_string(),
+                format!("{:.2}", c.latency_ms),
+                fmt::pct(c.utilization[0]),
+                fmt::pct(c.utilization[1]),
+                fmt::pct(c.utilization[2]),
+                fmt::pct(c.stall),
+                fmt::pct(c.cache_eff),
+                c.bottleneck.clone(),
+                c.class.to_string(),
+            ]
+        })
+        .collect();
+    let table = fmt::table(
+        &[
+            "Operator",
+            "Complexity",
+            "N",
+            "Latency ms",
+            "DPU %",
+            "DMA %",
+            "SHAVE %",
+            "Stall %",
+            "Cache %",
+            "Bottleneck",
+            "Classification",
+        ],
+        &rows,
+    );
+
+    // Verdict per operator at the longest context — the regime the paper's
+    // conclusions are drawn from.
+    let longest = contexts.iter().copied().max().unwrap_or(0);
+    let mut verdicts = String::new();
+    for c in cells.iter().filter(|c| c.n == longest) {
+        verdicts += &format!(
+            "  {:<12} {:<14} -> {} at N={}\n",
+            c.paper_name, c.complexity, c.class, c.n
+        );
+    }
+    format!(
+        "Operator sweep over {} registered operators x {:?} contexts\n\
+         (taxonomy per paper §IV: memory- / compute- / vector-compute- / \
+         data-movement-bound)\n{table}\n\nLong-context verdicts:\n{verdicts}",
+        reg.len(),
+        contexts,
+    )
+}
+
+/// Render the sweep over the process-wide default registry.
+pub fn sweep_report(contexts: &[usize], hw: &NpuConfig, sim: &SimConfig) -> String {
+    sweep_report_with(registry::global(), contexts, hw, sim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> (NpuConfig, SimConfig) {
+        (NpuConfig::default(), SimConfig::default())
+    }
+
+    #[test]
+    fn sweep_covers_registry_times_contexts() {
+        let (hw, sim) = cfg();
+        let cells = run_sweep(registry::global(), &[128, 256], &hw, &sim);
+        assert_eq!(cells.len(), registry::global().len() * 2);
+        for c in &cells {
+            assert!(c.latency_ms > 0.0, "{}", c.name);
+            let total: f64 = c.utilization.iter().sum();
+            assert!((total - 1.0).abs() < 1e-6, "{}: {total}", c.name);
+        }
+    }
+
+    #[test]
+    fn report_renders_every_operator_and_a_classification() {
+        let (hw, sim) = cfg();
+        let text = sweep_report(&[128, 256], &hw, &sim);
+        for op in registry::global().iter() {
+            assert!(text.contains(op.paper_name()), "missing {}", op.name());
+        }
+        assert!(text.contains("Classification"));
+        assert!(text.contains("-bound"));
+        assert!(text.contains("Long-context verdicts"));
+    }
+
+    #[test]
+    fn custom_registry_is_honored() {
+        let (hw, sim) = cfg();
+        let mut reg = OperatorRegistry::new();
+        // A one-operator deployment: only toeplitz.
+        struct Only;
+        impl crate::ops::CausalOperator for Only {
+            fn name(&self) -> &'static str {
+                "toeplitz"
+            }
+            fn paper_name(&self) -> &'static str {
+                "Toeplitz"
+            }
+            fn kind(&self) -> crate::config::OperatorKind {
+                crate::config::OperatorKind::Toeplitz
+            }
+            fn complexity(&self) -> &'static str {
+                "O(N*B*d)"
+            }
+            fn lower(
+                &self,
+                spec: &WorkloadSpec,
+                hw: &NpuConfig,
+                sim: &SimConfig,
+            ) -> crate::ops::OpGraph {
+                crate::ops::toeplitz::lower(spec, hw, sim)
+            }
+        }
+        reg.register(Box::new(Only));
+        let text = sweep_report_with(&reg, &[256], &hw, &sim);
+        assert!(text.contains("Toeplitz"));
+        assert!(!text.contains("Fourier"));
+    }
+}

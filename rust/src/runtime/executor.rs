@@ -1,6 +1,15 @@
 //! Channel-based executor: confines the (!Send) PJRT runtime to a
 //! dedicated worker thread and hands out a cloneable [`ExecutorHandle`]
 //! that the multi-threaded coordinator can call from anywhere.
+//!
+//! The executor addresses work by **artifact name**
+//! (`WorkloadSpec::artifact_name`, `<op>_n<N>_d<D>`), the compiled-side
+//! mirror of the operator registry's names: the coordinator resolves a
+//! batch's operator through the registry and hands this executor only the
+//! artifact string, so the PJRT path stays operator-agnostic too. When the
+//! runtime is built against the vendored `xla` stub (no PJRT native
+//! library), [`Executor::spawn`] fails fast and the router keeps every
+//! request on the simulator backend.
 
 use std::path::PathBuf;
 use std::sync::mpsc;

@@ -1,0 +1,173 @@
+//! Integration: the operator registry end-to-end — enumeration, dispatch
+//! through the NPU engine, bottleneck classification against the paper's
+//! taxonomy, and the "new operator = one trait impl + one registry line"
+//! extension contract the architecture doc promises.
+
+use npuperf::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+use npuperf::npu;
+use npuperf::ops::registry::{self, classify, BoundClass, CausalOperator, OperatorRegistry};
+use npuperf::ops::{self, OpGraph};
+use npuperf::report::sweep;
+
+fn cfg() -> (NpuConfig, SimConfig) {
+    (NpuConfig::default(), SimConfig::default())
+}
+
+#[test]
+fn registry_enumerates_builtins_and_covers_every_kind() {
+    let reg = registry::global();
+    let names = reg.names();
+    for want in ["causal", "retentive", "toeplitz", "linear", "fourier", "retentive-chunked"] {
+        assert!(names.contains(&want), "missing {want} in {names:?}");
+    }
+    for kind in OperatorKind::ALL {
+        assert_eq!(reg.for_kind(kind).kind(), kind);
+    }
+}
+
+#[test]
+fn every_registered_operator_dispatches_through_the_engine() {
+    // The acceptance walk: enumerate -> lower -> simulate at two context
+    // lengths, and get a well-formed report out of each cell.
+    let (hw, sim) = cfg();
+    for op in registry::global().iter() {
+        for n in [512usize, 2048] {
+            let spec = WorkloadSpec::new(op.kind(), n);
+            let g = op.lower(&spec, &hw, &sim);
+            g.validate().unwrap_or_else(|e| panic!("{} N={n}: {e}", op.name()));
+            let r = npu::run(&g, &hw, &sim);
+            assert!(r.span_ns > 0.0, "{} N={n}", op.name());
+            let total: f64 = r.utilization().iter().sum();
+            assert!((total - 1.0).abs() < 1e-6, "{} N={n}: {total}", op.name());
+            let _ = classify(&r); // total over every cell
+        }
+    }
+}
+
+#[test]
+fn pipeline_entry_points_agree_with_direct_registry_dispatch() {
+    // ops::lower / npu::run_workload are the registry's front doors: they
+    // must produce exactly the canonical entry's lowering.
+    let (hw, sim) = cfg();
+    for kind in OperatorKind::ALL {
+        let spec = WorkloadSpec::new(kind, 1024);
+        let via_entry = ops::lower(&spec, &hw, &sim);
+        let via_registry = registry::global().for_kind(kind).lower(&spec, &hw, &sim);
+        assert_eq!(via_entry.label, via_registry.label);
+        assert_eq!(via_entry.len(), via_registry.len());
+        let r = npu::run_workload(&spec, &hw, &sim);
+        assert_eq!(r.span_ns, npu::run(&via_entry, &hw, &sim).span_ns);
+    }
+}
+
+#[test]
+fn classification_reproduces_the_paper_taxonomy() {
+    // The paper's §IV landscape: the quadratic baseline thrashes memory,
+    // retention hits the SHAVE vector wall, linear attention keeps the
+    // systolic array as the limiter.
+    let (hw, sim) = cfg();
+    let class = |op, n| classify(&npu::run_workload(&WorkloadSpec::new(op, n), &hw, &sim));
+
+    assert_eq!(
+        class(OperatorKind::Causal, 8192),
+        BoundClass::Memory,
+        "spilling quadratic attention is memory-bound (Table V)"
+    );
+    assert_eq!(
+        class(OperatorKind::Retentive, 8192),
+        BoundClass::VectorCompute,
+        "retentive decay is SHAVE-bound past N=1024 (Table II)"
+    );
+    for n in [4096usize, 8192] {
+        assert_eq!(
+            class(OperatorKind::Linear, n),
+            BoundClass::Compute,
+            "linear attention keeps the DPU as the limiter at N={n}"
+        );
+    }
+    // Toeplitz keeps its working set resident: whatever dominates, it can
+    // never classify as cache-thrashing memory-bound.
+    assert_ne!(class(OperatorKind::Toeplitz, 4096), BoundClass::Memory);
+    // Fourier's spectrum work is matmul+DMA, not vector-bound.
+    assert_ne!(class(OperatorKind::Fourier, 2048), BoundClass::VectorCompute);
+}
+
+#[test]
+fn decode_variants_dispatch_for_every_entry() {
+    let (hw, sim) = cfg();
+    for op in registry::global().iter() {
+        let spec = WorkloadSpec::new(op.kind(), 1024);
+        let g = op.lower_decode(&spec, &hw, &sim);
+        g.validate().unwrap_or_else(|e| panic!("{}: {e}", op.name()));
+        let r = npu::run(&g, &hw, &sim);
+        assert!(r.span_ns > 0.0, "{} decode", op.name());
+    }
+}
+
+#[test]
+fn sweep_report_covers_the_full_registry() {
+    let (hw, sim) = cfg();
+    let text = sweep::sweep_report(&[128, 512, 2048], &hw, &sim);
+    for op in registry::global().iter() {
+        assert!(text.contains(op.paper_name()), "sweep missing {}", op.name());
+    }
+    assert!(text.contains("Classification"));
+    assert!(text.contains("-bound"));
+    assert!(text.contains("Long-context verdicts"));
+}
+
+// ---- the extension contract --------------------------------------------
+
+/// The architecture doc's walkthrough operator: full causal attention
+/// restricted to a fixed 256-token sliding window — implemented entirely
+/// outside the pipeline by delegating to the Toeplitz lowering machinery.
+struct SlidingWindow;
+
+impl CausalOperator for SlidingWindow {
+    fn name(&self) -> &'static str {
+        "sliding-window"
+    }
+    fn paper_name(&self) -> &'static str {
+        "SlidingWin"
+    }
+    fn kind(&self) -> OperatorKind {
+        OperatorKind::Toeplitz
+    }
+    fn complexity(&self) -> &'static str {
+        "O(N*W*d)"
+    }
+    fn lower(&self, spec: &WorkloadSpec, hw: &NpuConfig, sim: &SimConfig) -> OpGraph {
+        // A 256-token window is a Toeplitz band at d_state = 32.
+        let windowed = WorkloadSpec { d_state: 32, ..*spec };
+        let mut g = ops::toeplitz::lower(&windowed, hw, sim);
+        g.label = format!("sliding-window N={}", spec.n);
+        g
+    }
+}
+
+#[test]
+fn new_operator_plugs_in_with_one_registry_line() {
+    let (hw, sim) = cfg();
+    let mut reg = OperatorRegistry::with_builtins();
+    reg.register(Box::new(SlidingWindow)); // <- the one line
+
+    // Enumerable...
+    assert!(reg.names().contains(&"sliding-window"));
+    // ...addressable by name...
+    let op = reg.get("sliding-window").expect("registered");
+    // ...and servable through the unchanged engine + report path.
+    for n in [512usize, 2048] {
+        let spec = WorkloadSpec::new(op.kind(), n);
+        let g = op.lower(&spec, &hw, &sim);
+        g.validate().unwrap();
+        let r = npu::run(&g, &hw, &sim);
+        assert!(r.span_ns > 0.0);
+    }
+    // The sweep report picks it up with zero report-layer changes.
+    let text = sweep::sweep_report_with(&reg, &[512], &hw, &sim);
+    assert!(text.contains("SlidingWin"), "{text}");
+
+    // The canonical kind dispatch is untouched: Toeplitz still resolves to
+    // the builtin registered first.
+    assert_eq!(reg.for_kind(OperatorKind::Toeplitz).name(), "toeplitz");
+}

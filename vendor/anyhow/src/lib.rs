@@ -1,0 +1,231 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The container building this repo has no crates.io access, so this
+//! vendored shim provides exactly the surface the codebase uses:
+//!
+//! - [`Error`] / [`Result`] — a string-backed error with an optional cause
+//!   chain,
+//! - [`anyhow!`] / [`bail!`] — ad-hoc error construction macros,
+//! - [`Context`] — `.context(..)` / `.with_context(..)` on any `Result`
+//!   whose error converts into [`Error`],
+//! - a blanket `From<E: std::error::Error>` so `?` works on `io::Error`,
+//!   `ParseIntError`, etc.
+//!
+//! Semantics match real `anyhow` where this repo depends on them:
+//! `Display` shows the outermost message, `Debug` shows the cause chain.
+
+use std::fmt::{self, Debug, Display};
+
+/// String-backed error with an optional cause chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `Result` specialized to [`Error`], as in real `anyhow`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error under a new outermost context message.
+    pub fn context<C: Display>(self, context: C) -> Self {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain outermost-first.
+    pub fn chain(&self) -> impl Iterator<Item = &Error> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source.as_deref();
+            Some(cur)
+        })
+    }
+
+    /// Innermost (root) cause message.
+    pub fn root_cause(&self) -> &Error {
+        self.chain().last().expect("chain is never empty")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain().skip(1).enumerate() {
+                write!(f, "\n    {i}: {}", cause.msg)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `?` on any std error. Sound for the same reason real anyhow's blanket impl
+// is: `Error` itself does not implement `std::error::Error`, so this cannot
+// overlap the identity `From<Error> for Error`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` extension, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Attach a context message to the error, if any.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    /// Attach a lazily-built context message to the error, if any.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message literal (with inline format
+/// captures), a displayable expression, or a format string + args.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`anyhow!`]-constructed error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_ok() -> Result<u32> {
+        let n: u32 = "42".parse()?; // From<ParseIntError>
+        Ok(n)
+    }
+
+    fn parse_err() -> Result<u32> {
+        let n: u32 = "nope".parse()?;
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_ok().unwrap(), 42);
+        let e = parse_err().unwrap_err();
+        assert!(e.to_string().contains("invalid digit"), "{e}");
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let x = 7;
+        let b = anyhow!("x = {x}");
+        assert_eq!(b.to_string(), "x = 7");
+        let c = anyhow!("{} {}", "two", "args");
+        assert_eq!(c.to_string(), "two args");
+        let s = String::from("owned");
+        let d = anyhow!(s);
+        assert_eq!(d.to_string(), "owned");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("boom {}", 1);
+            }
+            Ok(0)
+        }
+        assert!(f(false).is_ok());
+        assert_eq!(f(true).unwrap_err().to_string(), "boom 1");
+    }
+
+    #[test]
+    fn context_wraps_and_chains() {
+        let base: Result<()> = Err(anyhow!("root"));
+        let e = base.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(e.root_cause().to_string(), "root");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+        assert!(dbg.contains("root"), "{dbg}");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<u32, std::num::ParseIntError> = "5".parse();
+        let got = ok.with_context(|| -> String { unreachable!("not called on Ok") });
+        assert_eq!(got.unwrap(), 5);
+        let bad: std::result::Result<u32, std::num::ParseIntError> = "x".parse();
+        let e = bad.with_context(|| format!("parsing {}", "x")).unwrap_err();
+        assert_eq!(e.to_string(), "parsing x");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(3u32).context("unused").unwrap(), 3);
+    }
+}
