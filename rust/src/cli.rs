@@ -5,6 +5,7 @@
 //! npuperf table <1..8>           # one table
 //! npuperf figures                # figs 3-8
 //! npuperf sweep [--contexts A,B] # every registered operator x context grid
+//! npuperf capacity [--contexts A,B] # max resident sessions per op x context
 //! npuperf operators              # list the operator registry
 //! npuperf simulate <op> <N> [--d-state D] [--offload] [--no-double-buffer]
 //! npuperf roofline               # calibation + fig 7
@@ -42,6 +43,25 @@ fn resolve_operator(arg: &str) -> Result<&'static dyn CausalOperator> {
     })?;
     reg.try_for_kind(kind)
         .ok_or_else(|| anyhow!("no operator registered for workload kind {kind}"))
+}
+
+/// Parse an optional `--contexts A,B,C` flag; `default` when absent.
+fn parse_contexts(rest: &[&str], default: &[usize]) -> Result<Vec<usize>> {
+    match rest.iter().position(|a| *a == "--contexts") {
+        None => Ok(default.to_vec()),
+        Some(i) => {
+            let list = rest.get(i + 1).ok_or_else(|| {
+                anyhow!("--contexts expects a comma-separated list of lengths")
+            })?;
+            list.split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse::<usize>()
+                        .map_err(|e| anyhow!("bad context {x:?}: {e}"))
+                })
+                .collect()
+        }
+    }
 }
 
 /// Entry point used by `main`.
@@ -113,21 +133,12 @@ pub fn run(args: &[String]) -> Result<String> {
             Ok(figures::fig3(n))
         }
         "sweep" => {
-            let contexts: Vec<usize> = if flag("--contexts") {
-                let list = opt("--contexts").ok_or_else(|| {
-                    anyhow!("--contexts expects a comma-separated list of lengths")
-                })?;
-                list.split(',')
-                    .map(|x| {
-                        x.trim()
-                            .parse::<usize>()
-                            .map_err(|e| anyhow!("bad context {x:?}: {e}"))
-                    })
-                    .collect::<Result<_>>()?
-            } else {
-                vec![512, 2048, 8192]
-            };
+            let contexts = parse_contexts(&rest, &[512, 2048, 8192])?;
             Ok(crate::report::sweep::sweep_report(&contexts, &hw, &sim))
+        }
+        "capacity" => {
+            let contexts = parse_contexts(&rest, &[512, 2048, 8192, 32768])?;
+            Ok(crate::report::sweep::capacity_report(&contexts, &hw, &sim))
         }
         "operators" => {
             let mut out = String::from(
@@ -337,10 +348,17 @@ pub fn run(args: &[String]) -> Result<String> {
             Ok(out)
         }
         "serve" => {
-            let dir = rest.first().map(|s| s.to_string()).unwrap_or_else(|| "artifacts".into());
+            // Positional artifact dir; flags like --hw are not a dir.
+            let dir = rest
+                .first()
+                .filter(|s| !s.starts_with("--"))
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| "artifacts".into());
+            // Honor --hw/--sim overrides: the session-memory pool is
+            // sized from the configured device, not the default one.
             let coord = Coordinator::new(CoordinatorConfig {
                 artifact_dir: Some(dir.into()),
-                ..CoordinatorConfig::default()
+                ..CoordinatorConfig::for_hw(hw, sim)
             })?;
             let mut reqs = Vec::new();
             for (i, op) in OperatorKind::ALL.iter().enumerate() {
@@ -377,6 +395,8 @@ commands:
   figures | masks [N]       paper figures 3-8
   sweep [--contexts A,B,C]  run every registered operator across a context
                             grid; per-cell bottleneck classification
+  capacity [--contexts A,B] max concurrently resident sessions per operator
+                            x context under the paged session-memory pool
   operators                 list the operator registry
   simulate <op> <N> [--d-state D] [--offload] [--no-double-buffer]
   decode <op> <N>           one autoregressive decode step + tokens/s
@@ -408,6 +428,24 @@ mod tests {
         assert!(out.contains("roofline"));
         assert!(out.contains("sweep"));
         assert!(out.contains("operators"));
+        assert!(out.contains("capacity"));
+    }
+
+    #[test]
+    fn capacity_shows_collapse_and_flat_lines() {
+        let out = run_cmd(&["capacity", "--contexts", "512,8192"]).unwrap();
+        assert!(out.contains("Max sessions"), "{out}");
+        assert!(out.contains("collapses with context"), "{out}");
+        assert!(out.contains("flat"), "{out}");
+        for name in ["Full Causal", "Retentive", "Toeplitz", "Linear", "Fourier"] {
+            assert!(out.contains(name), "missing {name}:\n{out}");
+        }
+    }
+
+    #[test]
+    fn capacity_rejects_malformed_contexts() {
+        assert!(run_cmd(&["capacity", "--contexts", "12a"]).is_err());
+        assert!(run_cmd(&["capacity", "--contexts"]).is_err());
     }
 
     #[test]

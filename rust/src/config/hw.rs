@@ -31,6 +31,11 @@ pub struct NpuConfig {
     pub dma_bw_gbps: f64,
     /// Global LPDDR5X capacity, bytes (bounds the KV cache in `state`).
     pub dram_bytes: u64,
+    /// Page size of the paged session-memory pool (`crate::memory`), bytes.
+    pub state_page_bytes: u64,
+    /// Fraction of global memory reserved for persistent session state;
+    /// the rest holds weights, activations, and the runtime.
+    pub state_pool_frac: f64,
 
     // ---- Microarchitectural overheads (effective-ceiling drivers) -----
     /// Systolic array fill latency per tile stream, cycles.
@@ -73,6 +78,8 @@ impl Default for NpuConfig {
             scratchpad_bytes: 4 * 1024 * 1024,
             dma_bw_gbps: 64.0,
             dram_bytes: 32 * 1024 * 1024 * 1024,
+            state_page_bytes: 64 * 1024,
+            state_pool_frac: 0.5,
             dpu_fill_cycles: 128,
             dpu_drain_cycles: 128,
             dpu_issue_ns: 5_000.0,
@@ -136,6 +143,14 @@ mod tests {
         assert_eq!(hw.scratchpad_bytes, 4 * 1024 * 1024);
         assert_eq!(hw.shave_cores, 8);
         assert_eq!(hw.dma_bw_gbps, 64.0);
+    }
+
+    #[test]
+    fn state_pool_is_a_strict_dram_fraction() {
+        let hw = NpuConfig::default();
+        assert!(hw.state_pool_frac > 0.0 && hw.state_pool_frac < 1.0);
+        assert!(hw.state_page_bytes > 0);
+        assert_eq!(hw.dram_bytes % hw.state_page_bytes, 0, "pages tile DRAM evenly");
     }
 
     #[test]

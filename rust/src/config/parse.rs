@@ -39,6 +39,20 @@ pub fn apply(hw: &mut NpuConfig, key: &str, value: &str) -> Result<()> {
         "scratchpad_bytes" => hw.scratchpad_bytes = u()?,
         "dma_bw_gbps" => hw.dma_bw_gbps = f()?,
         "dram_bytes" => hw.dram_bytes = u()?,
+        "state_page_bytes" => {
+            let v = u()?;
+            if v == 0 {
+                bail!("state_page_bytes must be positive");
+            }
+            hw.state_page_bytes = v;
+        }
+        "state_pool_frac" => {
+            let v = f()?;
+            if !(v > 0.0 && v <= 1.0) {
+                bail!("state_pool_frac must be in (0, 1], got {v}");
+            }
+            hw.state_pool_frac = v;
+        }
         "dpu_fill_cycles" => hw.dpu_fill_cycles = u()?,
         "dpu_drain_cycles" => hw.dpu_drain_cycles = u()?,
         "dpu_issue_ns" => hw.dpu_issue_ns = f()?,
@@ -95,6 +109,25 @@ mod tests {
         assert_eq!(hw.scratchpad_bytes, 512 << 10);
         apply(&mut hw, "dram_bytes", "16g").unwrap();
         assert_eq!(hw.dram_bytes, 16 << 30);
+    }
+
+    #[test]
+    fn session_memory_keys() {
+        let mut hw = NpuConfig::default();
+        apply(&mut hw, "state_page_bytes", "128k").unwrap();
+        apply(&mut hw, "state_pool_frac", "0.25").unwrap();
+        assert_eq!(hw.state_page_bytes, 128 << 10);
+        assert_eq!(hw.state_pool_frac, 0.25);
+    }
+
+    #[test]
+    fn degenerate_session_memory_values_rejected() {
+        let mut hw = NpuConfig::default();
+        assert!(apply(&mut hw, "state_page_bytes", "0").is_err(), "0 page would div-by-zero");
+        assert!(apply(&mut hw, "state_pool_frac", "1.5").is_err());
+        assert!(apply(&mut hw, "state_pool_frac", "-0.1").is_err());
+        assert!(apply(&mut hw, "state_pool_frac", "0").is_err(), "a zero pool serves nothing");
+        assert_eq!(hw, NpuConfig::default(), "rejected overrides leave hw untouched");
     }
 
     #[test]

@@ -4,7 +4,14 @@
 //!
 //! Policy: a signature's batch is released when it reaches `max_batch` or
 //! its oldest entry has waited `max_wait_ns` (measured on a caller-supplied
-//! clock so tests are deterministic).
+//! clock so tests are deterministic). Expired batches release **oldest
+//! waiter first** — signature order is only a tie-break — so no signature
+//! can starve behind one that merely sorts earlier. When the caller knows
+//! which sessions are resident in the session-memory pool
+//! ([`Batcher::poll_expired_prefer`]), batches whose sessions are already
+//! paged in dispatch ahead of cold ones at equal pressure, saving refill
+//! traffic while the cold batch's sessions are paged in anyway when its
+//! turn comes.
 //!
 //! The signature key is the whole [`WorkloadSpec`], so batching is
 //! operator-agnostic: any kind the [operator
@@ -21,11 +28,15 @@ use crate::config::WorkloadSpec;
 pub struct Batch {
     pub spec: WorkloadSpec,
     pub request_ids: Vec<u64>,
+    /// Session of each request, parallel to `request_ids` (used for
+    /// residency-aware release ordering).
+    pub sessions: Vec<u64>,
 }
 
 #[derive(Debug)]
 struct Pending {
     ids: Vec<u64>,
+    sessions: Vec<u64>,
     oldest_ns: u64,
 }
 
@@ -49,36 +60,54 @@ impl Batcher {
     }
 
     /// Enqueue a request; returns a batch immediately if it filled one.
-    pub fn push(&mut self, id: u64, spec: WorkloadSpec, now_ns: u64) -> Option<Batch> {
-        let entry = self
-            .pending
-            .entry(spec)
-            .or_insert_with(|| Pending { ids: Vec::new(), oldest_ns: now_ns });
+    pub fn push(&mut self, id: u64, spec: WorkloadSpec, session: u64, now_ns: u64) -> Option<Batch> {
+        let entry = self.pending.entry(spec).or_insert_with(|| Pending {
+            ids: Vec::new(),
+            sessions: Vec::new(),
+            oldest_ns: now_ns,
+        });
         if entry.ids.is_empty() {
             entry.oldest_ns = now_ns;
         }
         entry.ids.push(id);
+        entry.sessions.push(session);
         if entry.ids.len() >= self.max_batch {
             let p = self.pending.remove(&spec).expect("just inserted");
-            return Some(Batch { spec, request_ids: p.ids });
+            return Some(Batch { spec, request_ids: p.ids, sessions: p.sessions });
         }
         None
     }
 
-    /// Release every batch whose oldest entry exceeded the wait budget.
-    /// Deterministic order: sorted by signature.
+    /// Release every batch whose oldest entry exceeded the wait budget,
+    /// oldest waiter first (signature as deterministic tie-break).
     pub fn poll_expired(&mut self, now_ns: u64) -> Vec<Batch> {
-        let mut due: Vec<WorkloadSpec> = self
+        self.poll_expired_prefer(now_ns, |_| true)
+    }
+
+    /// Like [`Batcher::poll_expired`], but orders the released batches by
+    /// session residency first: batches whose sessions are all resident
+    /// in the session-memory pool dispatch before ones that would have to
+    /// page state in, with wait age deciding among equals (oldest-waiter
+    /// wins at equal pressure).
+    pub fn poll_expired_prefer(
+        &mut self,
+        now_ns: u64,
+        is_resident: impl Fn(u64) -> bool,
+    ) -> Vec<Batch> {
+        let mut due: Vec<(usize, u64, WorkloadSpec)> = self
             .pending
             .iter()
             .filter(|(_, p)| now_ns.saturating_sub(p.oldest_ns) >= self.max_wait_ns)
-            .map(|(s, _)| *s)
+            .map(|(s, p)| {
+                let cold = p.sessions.iter().filter(|&&sess| !is_resident(sess)).count();
+                (cold, p.oldest_ns, *s)
+            })
             .collect();
-        due.sort_by_key(|s| (s.op, s.n, s.d_head, s.d_state));
+        due.sort_by_key(|(cold, oldest, s)| (*cold, *oldest, s.op, s.n, s.d_head, s.d_state));
         due.into_iter()
-            .map(|spec| {
+            .map(|(_, _, spec)| {
                 let p = self.pending.remove(&spec).expect("present");
-                Batch { spec, request_ids: p.ids }
+                Batch { spec, request_ids: p.ids, sessions: p.sessions }
             })
             .collect()
     }
@@ -91,7 +120,7 @@ impl Batcher {
             .into_iter()
             .map(|spec| {
                 let p = self.pending.remove(&spec).expect("present");
-                Batch { spec, request_ids: p.ids }
+                Batch { spec, request_ids: p.ids, sessions: p.sessions }
             })
             .collect()
     }
@@ -110,27 +139,28 @@ mod tests {
     #[test]
     fn fills_batch_at_max() {
         let mut b = Batcher::new(3, 1_000_000);
-        assert!(b.push(1, spec(OperatorKind::Causal, 128), 0).is_none());
-        assert!(b.push(2, spec(OperatorKind::Causal, 128), 10).is_none());
-        let batch = b.push(3, spec(OperatorKind::Causal, 128), 20).unwrap();
+        assert!(b.push(1, spec(OperatorKind::Causal, 128), 1, 0).is_none());
+        assert!(b.push(2, spec(OperatorKind::Causal, 128), 2, 10).is_none());
+        let batch = b.push(3, spec(OperatorKind::Causal, 128), 3, 20).unwrap();
         assert_eq!(batch.request_ids, vec![1, 2, 3]);
+        assert_eq!(batch.sessions, vec![1, 2, 3]);
         assert_eq!(b.queued(), 0);
     }
 
     #[test]
     fn different_signatures_do_not_mix() {
         let mut b = Batcher::new(2, 1_000_000);
-        b.push(1, spec(OperatorKind::Causal, 128), 0);
-        assert!(b.push(2, spec(OperatorKind::Linear, 128), 0).is_none());
-        assert!(b.push(3, spec(OperatorKind::Causal, 256), 0).is_none());
+        b.push(1, spec(OperatorKind::Causal, 128), 1, 0);
+        assert!(b.push(2, spec(OperatorKind::Linear, 128), 2, 0).is_none());
+        assert!(b.push(3, spec(OperatorKind::Causal, 256), 3, 0).is_none());
         assert_eq!(b.queued(), 3);
     }
 
     #[test]
     fn expiry_releases_old_batches() {
         let mut b = Batcher::new(10, 100);
-        b.push(1, spec(OperatorKind::Toeplitz, 128), 0);
-        b.push(2, spec(OperatorKind::Toeplitz, 128), 50);
+        b.push(1, spec(OperatorKind::Toeplitz, 128), 1, 0);
+        b.push(2, spec(OperatorKind::Toeplitz, 128), 2, 50);
         assert!(b.poll_expired(99).is_empty());
         let out = b.poll_expired(100);
         assert_eq!(out.len(), 1);
@@ -140,18 +170,46 @@ mod tests {
     #[test]
     fn expiry_timer_resets_after_release() {
         let mut b = Batcher::new(10, 100);
-        b.push(1, spec(OperatorKind::Linear, 128), 0);
+        b.push(1, spec(OperatorKind::Linear, 128), 1, 0);
         assert_eq!(b.poll_expired(150).len(), 1);
-        b.push(2, spec(OperatorKind::Linear, 128), 160);
+        b.push(2, spec(OperatorKind::Linear, 128), 2, 160);
         assert!(b.poll_expired(200).is_empty(), "new batch must not inherit age");
         assert_eq!(b.poll_expired(260).len(), 1);
     }
 
     #[test]
+    fn oldest_waiter_released_first_at_equal_pressure() {
+        // Starvation guard: Linear sorts *after* Causal by signature, but
+        // it has waited longer, so it must release first.
+        let mut b = Batcher::new(10, 100);
+        b.push(1, spec(OperatorKind::Linear, 128), 1, 0);
+        b.push(2, spec(OperatorKind::Causal, 128), 2, 50);
+        let out = b.poll_expired(500);
+        assert_eq!(out.len(), 2);
+        assert_eq!(
+            out[0].spec.op,
+            OperatorKind::Linear,
+            "oldest waiter wins, not signature order"
+        );
+        assert_eq!(out[1].spec.op, OperatorKind::Causal);
+    }
+
+    #[test]
+    fn expiry_prefers_resident_sessions_then_age() {
+        let mut b = Batcher::new(10, 100);
+        b.push(1, spec(OperatorKind::Causal, 128), 11, 0); // older, cold
+        b.push(2, spec(OperatorKind::Linear, 128), 22, 10); // newer, resident
+        let out = b.poll_expired_prefer(500, |s| s == 22);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].spec.op, OperatorKind::Linear, "resident batch first");
+        assert_eq!(out[1].spec.op, OperatorKind::Causal);
+    }
+
+    #[test]
     fn flush_returns_all_sorted() {
         let mut b = Batcher::new(10, u64::MAX);
-        b.push(1, spec(OperatorKind::Fourier, 128), 0);
-        b.push(2, spec(OperatorKind::Causal, 128), 0);
+        b.push(1, spec(OperatorKind::Fourier, 128), 1, 0);
+        b.push(2, spec(OperatorKind::Causal, 128), 2, 0);
         let out = b.flush();
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].spec.op, OperatorKind::Causal, "deterministic order");
@@ -182,7 +240,7 @@ mod tests {
                 let mut t = 0;
                 for &(id, s, dt) in events {
                     t += dt;
-                    if let Some(batch) = b.push(id, s, t) {
+                    if let Some(batch) = b.push(id, s, id, t) {
                         seen.extend(batch.request_ids);
                     }
                     for batch in b.poll_expired(t) {
@@ -223,7 +281,7 @@ mod tests {
                 let mut batches = Vec::new();
                 for &(id, s) in reqs {
                     specs_by_id.insert(id, s);
-                    if let Some(batch) = b.push(id, s, 0) {
+                    if let Some(batch) = b.push(id, s, id, 0) {
                         batches.push(batch);
                     }
                 }

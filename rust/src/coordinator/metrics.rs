@@ -15,6 +15,11 @@ pub struct Metrics {
     pub batches: u64,
     pub pjrt_requests: u64,
     pub simulated_requests: u64,
+    /// Requests refused because their state footprint could not be paged
+    /// into the session-memory pool. (Eviction/spill counters live in
+    /// [`crate::memory::MemStats`] — one source of truth, surfaced by
+    /// the coordinator's snapshot.)
+    pub shed_requests: u64,
 }
 
 impl Default for Metrics {
@@ -32,6 +37,7 @@ impl Metrics {
             batches: 0,
             pjrt_requests: 0,
             simulated_requests: 0,
+            shed_requests: 0,
         }
     }
 
@@ -79,8 +85,12 @@ impl Metrics {
             );
         }
         out += &format!(
-            "batches={} pjrt={} simulated={} total={}\n",
-            self.batches, self.pjrt_requests, self.simulated_requests, self.total_served()
+            "batches={} pjrt={} simulated={} total={} shed={}\n",
+            self.batches,
+            self.pjrt_requests,
+            self.simulated_requests,
+            self.total_served(),
+            self.shed_requests
         );
         out
     }
@@ -111,6 +121,14 @@ mod tests {
         assert!(snap.contains("toeplitz"));
         assert!(snap.contains("fourier"));
         assert!(snap.contains("total=2"));
+    }
+
+    #[test]
+    fn snapshot_reports_shed_requests() {
+        let mut m = Metrics::new();
+        m.shed_requests = 1;
+        let snap = m.snapshot();
+        assert!(snap.contains("shed=1"), "{snap}");
     }
 
     #[test]

@@ -9,7 +9,10 @@
 //!
 //! plus the §V co-design machinery: a chunked-prefill scheduler bounded by
 //! the 4 MB scratchpad and a KV/recurrent-state manager implementing the
-//! memory-state tradeoff of Fig 1.
+//! memory-state tradeoff of Fig 1 on top of the paged session-memory
+//! subsystem (`crate::memory`): per-request admission control, LRU-with
+//! -pinning eviction, and spill/refill time charged to responses at the
+//! calibrated DMA ceiling.
 //!
 //! Operator dispatch is registry-driven end to end: the [`Router`] ranks
 //! whatever the [operator registry](crate::ops::registry) enumerates, the

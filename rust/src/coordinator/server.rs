@@ -25,7 +25,6 @@ use anyhow::{anyhow, Result};
 use crate::config::{NpuConfig, SimConfig, WorkloadSpec};
 use crate::npu::{self, ExecReport};
 use crate::ops::registry;
-use crate::ops::CausalOperator;
 use crate::runtime::executor::{Executor, ExecutorHandle};
 use crate::runtime::Tensor;
 
@@ -57,6 +56,11 @@ pub struct Response {
     pub outputs: Option<Vec<Tensor>>,
     /// Wall-clock time inside the backend, ns.
     pub backend_ns: f64,
+    /// Session-memory time charged to this request, ns: spilling LRU
+    /// victims out to admit this session's state plus paging its own
+    /// previously spilled state back in (priced at the calibrated
+    /// effective DMA ceiling). Zero when the pool is uncontended.
+    pub spill_ns: f64,
     /// Full simulator report (simulate path only).
     pub sim_report: Option<ExecReport>,
     /// Batch size this request was served in.
@@ -75,21 +79,39 @@ pub struct CoordinatorConfig {
     pub warmup: bool,
     pub max_batch: usize,
     pub max_wait_ns: u64,
-    /// Global state budget (defaults to Table I's 32 GB).
+    /// Session-memory pool capacity (defaults to the state-reserved
+    /// fraction of Table I's 32 GB; page geometry and spill pricing come
+    /// from `hw` via [`crate::memory::MemoryConfig`]).
     pub state_budget_bytes: u64,
+    /// Upper bound on *tracked* sessions (resident + spilled). Beyond
+    /// it, the bookkeeping of LRU spilled sessions is garbage-collected
+    /// after each batch — they re-prefill if they return — so a
+    /// long-lived server's session map stays bounded.
+    pub max_tracked_sessions: usize,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        let hw = NpuConfig::default();
+        Self::for_hw(NpuConfig::default(), SimConfig::default())
+    }
+}
+
+impl CoordinatorConfig {
+    /// Config for a specific device: the session-memory pool is sized
+    /// from **this** `hw` (its `dram_bytes × state_pool_frac`), not from
+    /// the default device — use this instead of
+    /// `CoordinatorConfig { hw, ..Default::default() }`, which would
+    /// keep a pool sized for the default 32 GB part.
+    pub fn for_hw(hw: NpuConfig, sim: SimConfig) -> Self {
         Self {
-            state_budget_bytes: hw.dram_bytes,
+            state_budget_bytes: (hw.dram_bytes as f64 * hw.state_pool_frac) as u64,
             hw,
-            sim: SimConfig::default(),
+            sim,
             artifact_dir: None,
             warmup: false,
             max_batch: 8,
             max_wait_ns: 2_000_000, // 2 ms batching window
+            max_tracked_sessions: 65_536,
         }
     }
 }
@@ -186,7 +208,13 @@ fn serve_loop(
 ) {
     let mut batcher = Batcher::new(cfg.max_batch, cfg.max_wait_ns);
     let mut metrics = Metrics::new();
-    let mut state = StateManager::new(cfg.state_budget_bytes);
+    // Spills/refills are priced with the same calibrated beta_eff the
+    // roofline reports, so eviction time on responses is commensurate
+    // with simulated operator latencies.
+    let mut state = StateManager::with_config(
+        crate::memory::MemoryConfig::calibrated(&cfg.hw, &cfg.sim)
+            .with_pool_bytes(cfg.state_budget_bytes),
+    );
     let mut jobs: std::collections::HashMap<u64, Job> = Default::default();
     let mut next_id: u64 = 0;
     let t0 = Instant::now();
@@ -218,8 +246,24 @@ fn serve_loop(
         for id in batch.request_ids {
             let Some(job) = jobs.remove(&id) else { continue };
             let spec = job.request.spec;
-            state.open(job.request.session, spec.op, spec.d_head, spec.d_state);
-            state.append(job.request.session, spec.n);
+            // Admission control: page the session's state in before the
+            // request runs (`admit` never evicts the session it is
+            // admitting; explicit pinning is the hook for concurrent
+            // dispatchers and latency-critical sessions, not needed on
+            // this serial path). A footprint the pool can never hold is
+            // shed with an error instead of growing state without bound.
+            let session = job.request.session;
+            state.open(session, spec.op, spec.d_head, spec.d_state);
+            let spill_ns = match state.touch(session, spec.n) {
+                Ok(adm) => adm.total_ns(),
+                Err(e) => {
+                    metrics.shed_requests += 1;
+                    let _ = job.reply.send(Err(anyhow!(
+                        "request shed by session-memory admission control: {e}"
+                    )));
+                    continue;
+                }
+            };
             let result = match backend {
                 BackendKind::Pjrt => {
                     let inputs = job.request.inputs.clone().unwrap_or_else(|| {
@@ -245,6 +289,7 @@ fn serve_loop(
                                 operator: spec.op.name(),
                                 backend,
                                 backend_ns: out.exec_ns,
+                                spill_ns,
                                 outputs: Some(out.outputs),
                                 sim_report: None,
                                 batch_size: size,
@@ -261,6 +306,7 @@ fn serve_loop(
                             operator,
                             backend,
                             backend_ns: report.span_ns,
+                            spill_ns,
                             outputs: None,
                             sim_report: Some(report.clone()),
                             batch_size: size,
@@ -275,6 +321,9 @@ fn serve_loop(
             metrics.record(spec.op, job.enqueued.elapsed().as_nanos() as f64);
             let _ = job.reply.send(result);
         }
+        // Keep the session map bounded: forget LRU spilled sessions once
+        // the tracked count exceeds the configured cap.
+        let _ = state.gc(cfg.max_tracked_sessions);
     };
 
     loop {
@@ -286,18 +335,23 @@ fn serve_loop(
                 let id = next_id;
                 next_id += 1;
                 let spec = job.request.spec;
+                let session = job.request.session;
                 jobs.insert(id, job);
-                if let Some(batch) = batcher.push(id, spec, now_ns) {
+                if let Some(batch) = batcher.push(id, spec, session, now_ns) {
                     dispatch(batch, &mut jobs, &mut metrics, &mut state);
                 }
             }
             Ok(Ctl::Snapshot(tx)) => {
                 let mut snap = metrics.snapshot();
                 snap += &format!(
-                    "sessions={} state_bytes={} evictions={}\n",
+                    "sessions={} resident={} state_bytes={} resident_bytes={} \
+                     evictions={} spill_ms={:.3}\n",
                     state.len(),
+                    state.resident_sessions(),
                     state.total_bytes(),
-                    state.evictions
+                    state.resident_bytes(),
+                    state.evictions(),
+                    state.stats().total_spill_ns() / 1e6
                 );
                 let _ = tx.send(snap);
             }
@@ -310,7 +364,13 @@ fn serve_loop(
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => break,
         }
-        for batch in batcher.poll_expired(t0.elapsed().as_nanos() as u64) {
+        // Release expired batches, dispatching ones whose sessions are
+        // already resident in the state pool first (cold batches pay
+        // their refill when their turn comes; age breaks ties so no
+        // signature starves).
+        let due = batcher
+            .poll_expired_prefer(t0.elapsed().as_nanos() as u64, |s| state.is_resident(s));
+        for batch in due {
             dispatch(batch, &mut jobs, &mut metrics, &mut state);
         }
     }

@@ -1,19 +1,28 @@
-//! Session state manager: the memory-state tradeoff of paper Fig 1.
+//! Session state manager: the memory-state tradeoff of paper Fig 1,
+//! enforced by the paged session-memory subsystem (`crate::memory`).
 //!
-//! Attention-class sessions keep an explicit KV cache that grows
-//! O(N·d) with context; SSM-class sessions compress to a fixed-size
-//! recurrent state, O(d·d_state). The manager enforces the global memory
-//! budget (Table I: 32 GB LPDDR5X) with LRU eviction and reports the
-//! per-class footprints the paper's Fig 1 contrasts.
+//! Attention-class sessions keep an explicit KV cache that grows O(N·d)
+//! with context; retention/SSM-class sessions compress to a fixed-size
+//! recurrent state, O(d·d_state); banded operators keep an O(band·d)
+//! ring buffer. Each session's growth curve comes from its operator's
+//! [`CausalOperator::state_footprint`](crate::ops::CausalOperator::state_footprint)
+//! via the registry, so a new operator is charged correctly with zero
+//! manager changes. The manager no longer *destroys* sessions under
+//! pressure: the pool spills the LRU unpinned victim's pages out (priced
+//! with the calibrated DMA ceiling) and pages them back in when the
+//! session is next served — evictions cost nanoseconds, not correctness.
 
 use std::collections::HashMap;
 
-use crate::config::OperatorKind;
+use crate::config::{NpuConfig, OperatorKind, WorkloadSpec};
+use crate::memory::{Admission, AdmitError, MemStats, MemoryConfig, SessionMemory};
+use crate::ops::registry;
 
 /// Context-retention class of an operator (Fig 1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SessionKind {
-    /// Explicit KV cache: O(N·d) persistent bytes.
+    /// Explicit KV cache: O(N·d) persistent bytes (Toeplitz's banded
+    /// window is the capped variant of this class).
     KvCache,
     /// Compressed recurrent state: O(d·d_state) persistent bytes.
     RecurrentState,
@@ -21,141 +30,194 @@ pub enum SessionKind {
 
 impl SessionKind {
     /// Classification per paper §II-A: attention-style operators retain
-    /// K/V; linear attention & SSM-inspired operators carry a fixed state.
-    /// (Toeplitz's banded window retains only `band` rows — we classify it
-    /// KV but its growth is capped by the band.)
+    /// K/V; retention, linear attention and SSM-inspired operators carry
+    /// a fixed decayed/outer-product state across steps.
     pub fn for_operator(op: OperatorKind) -> Self {
         match op {
-            OperatorKind::Causal | OperatorKind::Retentive | OperatorKind::Toeplitz => {
-                SessionKind::KvCache
+            OperatorKind::Causal | OperatorKind::Toeplitz => SessionKind::KvCache,
+            OperatorKind::Retentive | OperatorKind::Linear | OperatorKind::Fourier => {
+                SessionKind::RecurrentState
             }
-            OperatorKind::Linear | OperatorKind::Fourier => SessionKind::RecurrentState,
         }
     }
 }
 
-#[derive(Clone, Debug)]
-struct Session {
+#[derive(Clone, Copy, Debug)]
+struct SessionMeta {
     op: OperatorKind,
-    kind: SessionKind,
-    tokens: usize,
-    d_model: usize,
+    d_head: usize,
     d_state: usize,
-    elem_bytes: u64,
-    last_touch: u64,
+    tokens: usize,
 }
 
-impl Session {
-    /// Persistent bytes this session pins in global memory.
-    fn bytes(&self, band_cap: usize) -> u64 {
-        match self.kind {
-            SessionKind::KvCache => {
-                let retained = if self.op == OperatorKind::Toeplitz {
-                    self.tokens.min(band_cap)
-                } else {
-                    self.tokens
-                };
-                2 * retained as u64 * self.d_model as u64 * self.elem_bytes
+/// The operator's persistent-state growth curve, resolved through the
+/// registry — the single source every layer (serving pool, capacity
+/// report, deploy planner) prices state with. A kind absent from a
+/// custom registry falls back to the class defaults so accounting never
+/// panics on the serving thread.
+pub fn footprint_for(op: OperatorKind, tokens: usize, d_head: usize, d_state: usize) -> u64 {
+    let spec = WorkloadSpec { op, n: tokens.max(1), d_head, d_state };
+    match registry::global().try_for_kind(op) {
+        Some(entry) => entry.state_footprint(&spec, tokens),
+        // Mirror of the builtin curves for registries that dropped a
+        // kind (such a kind cannot be served — dispatch errors — but its
+        // accounting must still match what the builtins would charge).
+        None => match op {
+            OperatorKind::Causal => 2 * tokens as u64 * d_head as u64 * 2,
+            OperatorKind::Toeplitz => {
+                2 * tokens.min(crate::ops::toeplitz::band_for(&spec)) as u64
+                    * d_head as u64
+                    * 2
             }
-            SessionKind::RecurrentState => {
-                (self.d_model * self.d_state) as u64 * 4 // f32 state
-            }
-        }
+            OperatorKind::Retentive => (d_head * d_head) as u64 * 4,
+            OperatorKind::Linear => (d_head * d_state) as u64 * 4,
+            OperatorKind::Fourier => 2 * (d_head * d_state) as u64 * 4,
+        },
     }
 }
 
-/// KV / recurrent state manager with a global byte budget.
+/// KV / recurrent state manager over the paged session-memory pool.
 #[derive(Debug)]
 pub struct StateManager {
-    budget_bytes: u64,
-    band_cap: usize,
-    sessions: HashMap<u64, Session>,
-    clock: u64,
-    pub evictions: u64,
+    mem: SessionMemory,
+    meta: HashMap<u64, SessionMeta>,
 }
 
 impl StateManager {
+    /// Manager with a `budget_bytes` pool and default page geometry /
+    /// spill pricing (tests, examples). Serving deployments should use
+    /// [`StateManager::with_config`] with a calibrated [`MemoryConfig`].
     pub fn new(budget_bytes: u64) -> Self {
-        Self {
-            budget_bytes,
-            band_cap: 128,
-            sessions: HashMap::new(),
-            clock: 0,
-            evictions: 0,
+        Self::with_config(
+            MemoryConfig::from_hw(&NpuConfig::default()).with_pool_bytes(budget_bytes),
+        )
+    }
+
+    pub fn with_config(cfg: MemoryConfig) -> Self {
+        Self { mem: SessionMemory::new(cfg), meta: HashMap::new() }
+    }
+
+    /// Open a session for `op`, or continue it. Re-opening an id with
+    /// the **same** operator and dims is a no-op — the session's context
+    /// keeps accumulating across requests, and state that was spilled in
+    /// between pages back in (priced) on the next
+    /// [`StateManager::touch`]. Re-opening with a **different** shape
+    /// restarts the context at zero and returns the previously resident
+    /// pages to the pool, keeping logical and resident accounting in
+    /// sync (no spill is priced: discarding state on reshape is the
+    /// owner's choice, not an eviction).
+    pub fn open(&mut self, id: u64, op: OperatorKind, d_head: usize, d_state: usize) {
+        match self.meta.get(&id) {
+            Some(m) if m.op == op && m.d_head == d_head && m.d_state == d_state => {}
+            Some(_) => {
+                self.meta.insert(id, SessionMeta { op, d_head, d_state, tokens: 0 });
+                self.mem.reset(id);
+            }
+            None => {
+                self.meta.insert(id, SessionMeta { op, d_head, d_state, tokens: 0 });
+                self.mem.open(id);
+            }
         }
     }
 
-    fn tick(&mut self) -> u64 {
-        self.clock += 1;
-        self.clock
+    /// Append `tokens` of context and make the session's state resident,
+    /// returning the priced [`Admission`]. On error the session keeps its
+    /// previous size — an over-pool footprint is the caller's admission
+    /// -control signal, not a state mutation.
+    pub fn touch(&mut self, id: u64, tokens: usize) -> Result<Admission, AdmitError> {
+        let meta = *self.meta.get(&id).ok_or(AdmitError::UnknownSession(id))?;
+        let grown = meta.tokens + tokens;
+        let footprint = footprint_for(meta.op, grown, meta.d_head, meta.d_state);
+        let adm = self.mem.admit(id, footprint)?;
+        self.meta.get_mut(&id).expect("present above").tokens = grown;
+        Ok(adm)
     }
 
-    /// Open a session for `op`; returns the session id provided.
-    pub fn open(&mut self, id: u64, op: OperatorKind, d_model: usize, d_state: usize) {
-        let t = self.tick();
-        self.sessions.insert(
-            id,
-            Session {
-                op,
-                kind: SessionKind::for_operator(op),
-                tokens: 0,
-                d_model,
-                d_state,
-                elem_bytes: 2,
-                last_touch: t,
-            },
-        );
-        self.enforce_budget(Some(id));
-    }
-
-    /// Append `tokens` of context to a session (prefill or decode).
+    /// Legacy convenience: [`StateManager::touch`] collapsed to success
+    /// /failure.
     pub fn append(&mut self, id: u64, tokens: usize) -> bool {
-        let t = self.tick();
-        let Some(s) = self.sessions.get_mut(&id) else { return false };
-        s.tokens += tokens;
-        s.last_touch = t;
-        self.enforce_budget(Some(id));
-        self.sessions.contains_key(&id)
+        self.touch(id, tokens).is_ok()
+    }
+
+    /// Protect a session from eviction while it is being served.
+    pub fn pin(&mut self, id: u64) -> bool {
+        self.mem.pin(id)
+    }
+
+    pub fn unpin(&mut self, id: u64) -> bool {
+        self.mem.unpin(id)
     }
 
     pub fn close(&mut self, id: u64) {
-        self.sessions.remove(&id);
+        self.meta.remove(&id);
+        self.mem.close(id);
     }
 
+    /// Bound bookkeeping on a long-lived server: close least-recently
+    /// -touched *spilled* sessions until at most `max_sessions` remain
+    /// tracked. Resident and pinned sessions are never dropped, so GC
+    /// stops early (and returns what it closed) rather than touch live
+    /// state.
+    pub fn gc(&mut self, max_sessions: usize) -> Vec<u64> {
+        let mut closed = Vec::new();
+        while self.meta.len() > max_sessions {
+            match self.mem.shed_spilled_lru() {
+                Some(id) => {
+                    self.meta.remove(&id);
+                    closed.push(id);
+                }
+                None => break,
+            }
+        }
+        closed
+    }
+
+    /// Logical persistent bytes of one session (resident or spilled).
     pub fn session_bytes(&self, id: u64) -> Option<u64> {
-        self.sessions.get(&id).map(|s| s.bytes(self.band_cap))
+        let m = self.meta.get(&id)?;
+        Some(footprint_for(m.op, m.tokens, m.d_head, m.d_state))
     }
 
+    /// Sum of logical persistent bytes across open sessions.
     pub fn total_bytes(&self) -> u64 {
-        self.sessions.values().map(|s| s.bytes(self.band_cap)).sum()
+        self.meta
+            .values()
+            .map(|m| footprint_for(m.op, m.tokens, m.d_head, m.d_state))
+            .sum()
+    }
+
+    /// Pool bytes currently backing resident state (page-granular).
+    pub fn resident_bytes(&self) -> u64 {
+        self.mem.resident_bytes()
+    }
+
+    pub fn is_resident(&self, id: u64) -> bool {
+        self.mem.is_resident(id)
     }
 
     pub fn len(&self) -> usize {
-        self.sessions.len()
+        self.meta.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.sessions.is_empty()
+        self.meta.is_empty()
     }
 
-    /// Evict least-recently-used sessions until under budget, never
-    /// evicting `protect` (the session being served).
-    fn enforce_budget(&mut self, protect: Option<u64>) {
-        while self.total_bytes() > self.budget_bytes {
-            let victim = self
-                .sessions
-                .iter()
-                .filter(|(id, _)| Some(**id) != protect)
-                .min_by_key(|(_, s)| s.last_touch)
-                .map(|(id, _)| *id);
-            match victim {
-                Some(id) => {
-                    self.sessions.remove(&id);
-                    self.evictions += 1;
-                }
-                None => break, // only the protected session remains
-            }
-        }
+    pub fn resident_sessions(&self) -> usize {
+        self.mem.resident_sessions()
+    }
+
+    /// Sessions spilled out under pressure so far.
+    pub fn evictions(&self) -> u64 {
+        self.mem.stats().evictions
+    }
+
+    pub fn stats(&self) -> &MemStats {
+        self.mem.stats()
+    }
+
+    pub fn memory(&self) -> &SessionMemory {
+        &self.mem
     }
 }
 
@@ -163,6 +225,12 @@ impl StateManager {
 mod tests {
     use super::*;
     use crate::util::check::{forall, Rng};
+
+    fn pooled(pool_bytes: u64) -> StateManager {
+        StateManager::with_config(
+            MemoryConfig::from_hw(&NpuConfig::default()).with_pool_bytes(pool_bytes),
+        )
+    }
 
     #[test]
     fn kv_cache_grows_linearly_with_context() {
@@ -189,6 +257,19 @@ mod tests {
     }
 
     #[test]
+    fn retention_state_is_constant() {
+        // The acceptance story of the capacity model: retention carries a
+        // d×d accumulator, not a growing KV scan.
+        let mut m = StateManager::new(u64::MAX);
+        m.open(1, OperatorKind::Retentive, 64, 16);
+        m.append(1, 1024);
+        let b1 = m.session_bytes(1).unwrap();
+        m.append(1, 1_000_000);
+        assert_eq!(m.session_bytes(1).unwrap(), b1);
+        assert_eq!(b1, 64 * 64 * 4);
+    }
+
+    #[test]
     fn toeplitz_retention_capped_by_band() {
         let mut m = StateManager::new(u64::MAX);
         m.open(1, OperatorKind::Toeplitz, 64, 16);
@@ -210,27 +291,103 @@ mod tests {
     }
 
     #[test]
-    fn lru_eviction_under_budget_pressure() {
-        // Budget fits two small KV sessions, not three.
-        let mut m = StateManager::new(600 * 1024);
+    fn lru_spill_under_pool_pressure() {
+        // Pool holds 9 pages; three 4-page KV sessions cannot all stay
+        // resident, so the LRU one spills — but survives.
+        let mut m = pooled(600 * 1024);
         for id in 1..=3u64 {
             m.open(id, OperatorKind::Causal, 64, 16);
-            m.append(id, 1024); // 256 KiB each
+            assert!(m.append(id, 1024), "256 KiB = 4 pages each");
         }
-        assert!(m.total_bytes() <= 600 * 1024);
-        assert_eq!(m.len(), 2);
-        assert_eq!(m.evictions, 1);
-        // Session 1 was LRU ⇒ evicted.
-        assert!(m.session_bytes(1).is_none());
-        assert!(m.session_bytes(3).is_some());
+        assert_eq!(m.len(), 3, "spilled sessions stay open");
+        assert_eq!(m.resident_sessions(), 2);
+        assert_eq!(m.evictions(), 1);
+        assert!(!m.is_resident(1), "session 1 was LRU -> spilled");
+        assert!(m.is_resident(3));
+        assert!(m.resident_bytes() <= 600 * 1024);
+        assert!(m.session_bytes(1).is_some(), "spill is not destruction");
     }
 
     #[test]
-    fn active_session_never_self_evicts() {
-        let mut m = StateManager::new(100 * 1024);
+    fn spilled_session_refills_with_cost() {
+        let mut m = pooled(600 * 1024);
+        for id in 1..=3u64 {
+            m.open(id, OperatorKind::Causal, 64, 16);
+            m.append(id, 1024);
+        }
+        assert!(!m.is_resident(1));
+        let adm = m.touch(1, 0).unwrap();
+        assert!(adm.refill_ns > 0.0, "paging cold state back in costs ns");
+        assert_eq!(adm.evicted, vec![2], "next LRU makes room");
+        assert!(m.is_resident(1));
+        assert!(m.stats().total_spill_ns() > 0.0);
+    }
+
+    #[test]
+    fn pinned_session_never_evicted() {
+        let mut m = pooled(600 * 1024);
         m.open(1, OperatorKind::Causal, 64, 16);
-        assert!(m.append(1, 100_000), "grows past budget but survives");
-        assert_eq!(m.len(), 1);
+        m.append(1, 1024);
+        m.pin(1);
+        for id in 2..=3u64 {
+            m.open(id, OperatorKind::Causal, 64, 16);
+            m.append(id, 1024);
+        }
+        assert!(m.is_resident(1), "pinned LRU session survives pressure");
+        assert!(!m.is_resident(2), "pressure fell on the next LRU instead");
+    }
+
+    #[test]
+    fn same_shape_reopen_continues_the_session() {
+        let mut m = pooled(u64::MAX);
+        m.open(1, OperatorKind::Causal, 64, 16);
+        m.append(1, 1024);
+        let before = m.session_bytes(1).unwrap();
+        m.open(1, OperatorKind::Causal, 64, 16); // next request, same shape
+        assert_eq!(m.session_bytes(1), Some(before), "context is kept, not reset");
+        m.append(1, 1024);
+        assert_eq!(m.session_bytes(1), Some(2 * before), "and keeps accumulating");
+    }
+
+    #[test]
+    fn reshaped_reopen_releases_previous_state() {
+        let mut m = pooled(600 * 1024);
+        m.open(1, OperatorKind::Causal, 64, 16);
+        m.append(1, 1024); // 4 pages resident
+        assert!(m.resident_bytes() > 0);
+        m.pin(1);
+        m.open(1, OperatorKind::Causal, 128, 16); // new shape -> fresh context
+        assert_eq!(m.resident_bytes(), 0, "reset returns pages to the pool");
+        assert_eq!(m.session_bytes(1), Some(0), "logical and resident stay in sync");
+        assert_eq!(m.evictions(), 0, "a reshape is not an eviction");
+        assert_eq!(m.gc(0), vec![1], "stale pin was cleared, so GC can reach it");
+    }
+
+    #[test]
+    fn gc_bounds_tracking_without_touching_residents() {
+        let mut m = pooled(600 * 1024);
+        for id in 1..=5u64 {
+            m.open(id, OperatorKind::Causal, 64, 16);
+            m.append(id, 1024);
+        }
+        // 9-page pool, 4 pages/session: 2 resident, 3 spilled.
+        assert_eq!(m.len(), 5);
+        let closed = m.gc(3);
+        assert_eq!(closed, vec![1, 2], "LRU spilled sessions dropped first");
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.resident_sessions(), 2, "residents untouched");
+        let closed = m.gc(1);
+        assert_eq!(closed, vec![3], "GC stops at residents instead of evicting them");
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn oversized_session_rejected_not_grown() {
+        let mut m = pooled(100 * 1024);
+        m.open(1, OperatorKind::Causal, 64, 16);
+        assert!(!m.append(1, 100_000), "footprint larger than the pool is refused");
+        assert_eq!(m.len(), 1, "session survives at its previous size");
+        assert_eq!(m.session_bytes(1), Some(0), "failed growth did not commit");
     }
 
     #[test]

@@ -3,6 +3,7 @@
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod memory;
 pub mod model;
 pub mod npu;
 pub mod ops;

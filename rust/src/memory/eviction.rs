@@ -1,0 +1,79 @@
+//! Eviction policy: LRU with pinning.
+//!
+//! Victim selection is least-recently-touched first over the *evictable*
+//! set — resident, unpinned sessions other than the one being admitted
+//! (admission always protects its own session via `protect`, no pin
+//! needed). Pinning is the explicit override on top of that: how a
+//! deployment marks latency-critical sessions, or how a concurrent
+//! dispatcher keeps an in-flight batch's sessions resident. A fully
+//! pinned pool is an admission error, never a deadlocked loop.
+
+use std::collections::HashMap;
+
+use super::page_table::PageTable;
+
+/// Pick the LRU eviction victim among resident, unpinned sessions other
+/// than `protect`. Ties on the touch clock break toward the smaller
+/// session id so eviction order is deterministic.
+pub fn lru_victim(tables: &HashMap<u64, PageTable>, protect: u64) -> Option<u64> {
+    tables
+        .iter()
+        .filter(|(id, t)| **id != protect && t.resident && !t.pinned && t.resident_pages > 0)
+        .min_by_key(|(id, t)| (t.last_touch, **id))
+        .map(|(id, _)| *id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(touch: u64, pages: u64, pinned: bool) -> PageTable {
+        let mut t = PageTable::new(touch);
+        t.resident = pages > 0;
+        t.resident_pages = pages;
+        t.pinned = pinned;
+        t
+    }
+
+    #[test]
+    fn oldest_resident_wins() {
+        let mut m = HashMap::new();
+        m.insert(1, entry(5, 2, false));
+        m.insert(2, entry(3, 2, false));
+        m.insert(3, entry(9, 2, false));
+        assert_eq!(lru_victim(&m, 0), Some(2));
+    }
+
+    #[test]
+    fn pinned_and_protected_are_skipped() {
+        let mut m = HashMap::new();
+        m.insert(1, entry(1, 2, true)); // pinned, oldest
+        m.insert(2, entry(2, 2, false)); // protected below
+        m.insert(3, entry(3, 2, false));
+        assert_eq!(lru_victim(&m, 2), Some(3));
+    }
+
+    #[test]
+    fn spilled_sessions_are_not_victims() {
+        let mut m = HashMap::new();
+        m.insert(1, entry(1, 0, false)); // already spilled
+        m.insert(2, entry(2, 4, false));
+        assert_eq!(lru_victim(&m, 0), Some(2));
+    }
+
+    #[test]
+    fn empty_or_fully_pinned_pool_has_no_victim() {
+        let mut m: HashMap<u64, PageTable> = HashMap::new();
+        assert_eq!(lru_victim(&m, 0), None);
+        m.insert(1, entry(1, 2, true));
+        assert_eq!(lru_victim(&m, 0), None);
+    }
+
+    #[test]
+    fn touch_ties_break_by_id() {
+        let mut m = HashMap::new();
+        m.insert(9, entry(4, 1, false));
+        m.insert(2, entry(4, 1, false));
+        assert_eq!(lru_victim(&m, 0), Some(2));
+    }
+}

@@ -1,0 +1,501 @@
+//! The session-memory manager: page pool + page tables + eviction + spill
+//! accounting behind one admission API.
+//!
+//! [`SessionMemory::admit`] is the only way state enters the pool: the
+//! caller states the session's *current* logical footprint (from
+//! [`crate::ops::CausalOperator::state_footprint`]) and the manager makes
+//! it resident — growing its page extent, evicting LRU unpinned victims
+//! under pressure, and paging previously spilled state back in — returning
+//! an [`Admission`] that prices every byte moved. A footprint that cannot
+//! fit the pool even after evicting everything else is refused
+//! ([`AdmitError`]), which is the serving layer's admission-control
+//! signal: shed the request instead of growing without bound.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use super::eviction;
+use super::page_table::PageTable;
+use super::pool::PagePool;
+use super::spill::SpillModel;
+use super::MemoryConfig;
+
+/// Cost and effect of one successful admission.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Admission {
+    /// Paging this session's own spilled state back in, ns.
+    pub refill_ns: f64,
+    /// Writing evicted victims out to make room, ns.
+    pub spill_ns: f64,
+    /// Sessions spilled to make room, in eviction order.
+    pub evicted: Vec<u64>,
+    /// Pool pages backing the session after admission.
+    pub pages: u64,
+}
+
+impl Admission {
+    /// Total memory-subsystem nanoseconds charged to the request.
+    pub fn total_ns(&self) -> f64 {
+        self.refill_ns + self.spill_ns
+    }
+}
+
+/// Why an admission was refused.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdmitError {
+    /// The footprint exceeds the whole pool — no eviction schedule can
+    /// ever make it resident.
+    FootprintExceedsPool { needed_pages: u64, pool_pages: u64 },
+    /// Enough pages exist but pinned sessions hold them.
+    PoolPinned { needed_pages: u64, free_pages: u64 },
+    /// The session was never opened.
+    UnknownSession(u64),
+}
+
+impl fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmitError::FootprintExceedsPool { needed_pages, pool_pages } => write!(
+                f,
+                "state footprint needs {needed_pages} pages but the pool has {pool_pages}"
+            ),
+            AdmitError::PoolPinned { needed_pages, free_pages } => write!(
+                f,
+                "need {needed_pages} pages but only {free_pages} free and every \
+                 resident session is pinned"
+            ),
+            AdmitError::UnknownSession(id) => write!(f, "session {id} was never opened"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+/// Lifetime counters for the memory subsystem.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MemStats {
+    /// Sessions spilled out under pressure.
+    pub evictions: u64,
+    /// Page-granular bytes written out by evictions.
+    pub spilled_bytes: u64,
+    /// Page-granular bytes paged back in on refills.
+    pub refilled_bytes: u64,
+    /// Total eviction DMA time, ns.
+    pub spill_ns: f64,
+    /// Total refill DMA time, ns.
+    pub refill_ns: f64,
+    /// Admissions refused (footprint over pool, or pool fully pinned).
+    pub rejected: u64,
+    /// Spilled sessions whose bookkeeping was dropped by capacity GC
+    /// ([`SessionMemory::shed_spilled_lru`]); they re-prefill on return.
+    pub shed_sessions: u64,
+    /// High-water mark of resident pool bytes.
+    pub peak_resident_bytes: u64,
+}
+
+impl MemStats {
+    /// Total DMA nanoseconds the subsystem charged (spills + refills).
+    pub fn total_spill_ns(&self) -> f64 {
+        self.spill_ns + self.refill_ns
+    }
+}
+
+/// Paged session-memory manager.
+#[derive(Clone, Debug)]
+pub struct SessionMemory {
+    cfg: MemoryConfig,
+    pool: PagePool,
+    spill: SpillModel,
+    tables: HashMap<u64, PageTable>,
+    clock: u64,
+    stats: MemStats,
+}
+
+impl SessionMemory {
+    pub fn new(cfg: MemoryConfig) -> Self {
+        let pool = PagePool::new(cfg.pool_bytes, cfg.page_bytes);
+        let spill = SpillModel { beta_eff_gbps: cfg.beta_eff_gbps, setup_ns: cfg.spill_setup_ns };
+        Self { cfg, pool, spill, tables: HashMap::new(), clock: 0, stats: MemStats::default() }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Open a session (idempotent — an existing page table is kept).
+    pub fn open(&mut self, id: u64) {
+        let t = self.tick();
+        self.tables.entry(id).or_insert_with(|| PageTable::new(t));
+    }
+
+    /// Make `id`'s state resident at `footprint_bytes`, evicting LRU
+    /// unpinned sessions as needed and pricing every transfer.
+    pub fn admit(&mut self, id: u64, footprint_bytes: u64) -> Result<Admission, AdmitError> {
+        if !self.tables.contains_key(&id) {
+            return Err(AdmitError::UnknownSession(id));
+        }
+        let t = self.tick();
+        // Even a zero-byte footprint anchors one page: every resident
+        // session must hold pages so eviction and capacity GC can reach
+        // it (and capacity planning counts it the same way).
+        let need = self.cfg.pages_for(footprint_bytes).max(1);
+        if need > self.pool.total_pages() {
+            self.stats.rejected += 1;
+            return Err(AdmitError::FootprintExceedsPool {
+                needed_pages: need,
+                pool_pages: self.pool.total_pages(),
+            });
+        }
+
+        let (was_resident, old_logical, old_pages) = {
+            let table = &self.tables[&id];
+            (table.resident, table.logical_bytes, table.resident_pages)
+        };
+        let have = if was_resident { old_pages } else { 0 };
+
+        let mut adm = Admission::default();
+        if need <= have {
+            // Shrink (or exact fit): give slack pages back, move nothing.
+            self.pool.release(have - need);
+        } else {
+            let want = need - have;
+            // Refuse before spilling anyone: if pinned sessions hold too
+            // much of the pool, no eviction schedule can make room, and a
+            // failed admission must not leave innocent victims spilled.
+            let evictable: u64 = self
+                .tables
+                .iter()
+                .filter(|(vid, v)| **vid != id && v.resident && !v.pinned)
+                .map(|(_, v)| v.resident_pages)
+                .sum();
+            if self.pool.free_pages() + evictable < want {
+                self.stats.rejected += 1;
+                return Err(AdmitError::PoolPinned {
+                    needed_pages: want,
+                    free_pages: self.pool.free_pages(),
+                });
+            }
+            while self.pool.free_pages() < want {
+                let victim = eviction::lru_victim(&self.tables, id)
+                    .expect("evictable capacity pre-checked above");
+                adm.spill_ns += self.spill_out(victim);
+                adm.evicted.push(victim);
+            }
+            let ok = self.pool.try_allocate(want);
+            debug_assert!(ok, "eviction loop guarantees the allocation fits");
+        }
+
+        if !was_resident && old_logical > 0 {
+            // Cold state pages back in before the session grows past it.
+            let bytes =
+                self.cfg.pages_for(old_logical.min(footprint_bytes)) * self.cfg.page_bytes;
+            adm.refill_ns = self.spill.transfer_ns(bytes);
+            self.stats.refilled_bytes += bytes;
+            self.stats.refill_ns += adm.refill_ns;
+        }
+
+        let table = self.tables.get_mut(&id).expect("checked above");
+        table.resident = true;
+        table.resident_pages = need;
+        table.logical_bytes = footprint_bytes;
+        table.last_touch = t;
+        adm.pages = need;
+        self.stats.peak_resident_bytes =
+            self.stats.peak_resident_bytes.max(self.pool.used_bytes());
+        Ok(adm)
+    }
+
+    /// Spill `victim` out: free its pages, price the write-out.
+    fn spill_out(&mut self, victim: u64) -> f64 {
+        let table = self.tables.get_mut(&victim).expect("victim exists");
+        let pages = table.resident_pages;
+        table.resident = false;
+        table.resident_pages = 0;
+        self.pool.release(pages);
+        let bytes = pages * self.cfg.page_bytes;
+        let ns = self.spill.transfer_ns(bytes);
+        self.stats.evictions += 1;
+        self.stats.spilled_bytes += bytes;
+        self.stats.spill_ns += ns;
+        ns
+    }
+
+    /// Protect a session from eviction; `false` if it was never opened.
+    pub fn pin(&mut self, id: u64) -> bool {
+        match self.tables.get_mut(&id) {
+            Some(t) => {
+                t.pinned = true;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Make a session evictable again; `false` if it was never opened.
+    pub fn unpin(&mut self, id: u64) -> bool {
+        match self.tables.get_mut(&id) {
+            Some(t) => {
+                t.pinned = false;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Reset a session's state to empty without closing it: pages return
+    /// to the pool, the logical size drops to zero, and any pin is
+    /// cleared (a fresh context does not inherit the old one's
+    /// latency-critical status). No spill is priced — the owner chose to
+    /// discard the state, it was not evicted.
+    pub fn reset(&mut self, id: u64) {
+        let t = self.tick();
+        if let Some(table) = self.tables.get_mut(&id) {
+            if table.resident {
+                self.pool.release(table.resident_pages);
+            }
+            table.resident = false;
+            table.resident_pages = 0;
+            table.logical_bytes = 0;
+            table.pinned = false;
+            table.last_touch = t;
+        }
+    }
+
+    /// Capacity GC: drop the bookkeeping of the least-recently-touched
+    /// *spilled*, unpinned session, so the session map stays bounded on a
+    /// long-lived server (page tables are cheap; "millions of users" are
+    /// not). The shed session's state is gone — it re-prefills if it
+    /// returns. Returns the id closed, or `None` when every open session
+    /// is resident or pinned (nothing is safe to forget).
+    pub fn shed_spilled_lru(&mut self) -> Option<u64> {
+        let victim = self
+            .tables
+            .iter()
+            .filter(|(_, t)| !t.resident && !t.pinned)
+            .min_by_key(|(id, t)| (t.last_touch, **id))
+            .map(|(id, _)| *id)?;
+        self.tables.remove(&victim);
+        self.stats.shed_sessions += 1;
+        Some(victim)
+    }
+
+    /// Close a session and return its pages to the pool.
+    pub fn close(&mut self, id: u64) {
+        if let Some(t) = self.tables.remove(&id) {
+            if t.resident {
+                self.pool.release(t.resident_pages);
+            }
+        }
+    }
+
+    pub fn is_resident(&self, id: u64) -> bool {
+        self.tables.get(&id).is_some_and(|t| t.resident)
+    }
+
+    /// Logical state bytes of one session (spilled or resident).
+    pub fn logical_bytes(&self, id: u64) -> Option<u64> {
+        self.tables.get(&id).map(|t| t.logical_bytes)
+    }
+
+    /// Open sessions, resident or spilled.
+    pub fn sessions(&self) -> usize {
+        self.tables.len()
+    }
+
+    pub fn resident_sessions(&self) -> usize {
+        self.tables.values().filter(|t| t.resident).count()
+    }
+
+    /// Pool bytes currently backing resident state (page-granular).
+    pub fn resident_bytes(&self) -> u64 {
+        self.pool.used_bytes()
+    }
+
+    /// Sum of logical state bytes across all open sessions.
+    pub fn total_logical_bytes(&self) -> u64 {
+        self.tables.values().map(|t| t.logical_bytes).sum()
+    }
+
+    pub fn stats(&self) -> &MemStats {
+        &self.stats
+    }
+
+    pub fn config(&self) -> &MemoryConfig {
+        &self.cfg
+    }
+
+    pub fn pool(&self) -> &PagePool {
+        &self.pool
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PAGE: u64 = 64 * 1024;
+
+    fn mem(pages: u64) -> SessionMemory {
+        SessionMemory::new(MemoryConfig {
+            page_bytes: PAGE,
+            pool_bytes: pages * PAGE,
+            beta_eff_gbps: 3.2,
+            spill_setup_ns: 1_500.0,
+        })
+    }
+
+    fn admit(m: &mut SessionMemory, id: u64, bytes: u64) -> Admission {
+        m.open(id);
+        m.admit(id, bytes).unwrap()
+    }
+
+    #[test]
+    fn growth_allocates_page_granular_extents() {
+        let mut m = mem(16);
+        let a = admit(&mut m, 1, 1); // 1 byte -> 1 page
+        assert_eq!(a.pages, 1);
+        let a = admit(&mut m, 1, 5 * PAGE + 1);
+        assert_eq!(a.pages, 6);
+        assert_eq!(m.resident_bytes(), 6 * PAGE);
+        assert_eq!(m.logical_bytes(1), Some(5 * PAGE + 1));
+    }
+
+    #[test]
+    fn shrink_returns_slack_pages() {
+        let mut m = mem(16);
+        admit(&mut m, 1, 8 * PAGE);
+        admit(&mut m, 1, 2 * PAGE);
+        assert_eq!(m.pool().free_pages(), 14);
+        assert_eq!(m.resident_bytes(), 2 * PAGE);
+    }
+
+    #[test]
+    fn pressure_evicts_lru_and_prices_the_spill() {
+        let mut m = mem(9);
+        admit(&mut m, 1, 4 * PAGE);
+        admit(&mut m, 2, 4 * PAGE);
+        let a = admit(&mut m, 3, 4 * PAGE);
+        assert_eq!(a.evicted, vec![1], "session 1 is LRU");
+        let expect =
+            SpillModel { beta_eff_gbps: 3.2, setup_ns: 1_500.0 }.transfer_ns(4 * PAGE);
+        assert_eq!(a.spill_ns, expect);
+        assert!(!m.is_resident(1));
+        assert_eq!(m.logical_bytes(1), Some(4 * PAGE), "spilled state keeps its size");
+        assert_eq!(m.stats().evictions, 1);
+        assert_eq!(m.sessions(), 3);
+        assert_eq!(m.resident_sessions(), 2);
+    }
+
+    #[test]
+    fn refill_charges_the_page_back_in() {
+        let mut m = mem(9);
+        admit(&mut m, 1, 4 * PAGE);
+        admit(&mut m, 2, 4 * PAGE);
+        admit(&mut m, 3, 4 * PAGE); // spills 1
+        let back = admit(&mut m, 1, 4 * PAGE); // refills 1, spills 2
+        assert!(back.refill_ns > 0.0);
+        assert_eq!(back.evicted, vec![2]);
+        assert!(m.is_resident(1));
+        assert_eq!(m.stats().refilled_bytes, 4 * PAGE);
+    }
+
+    #[test]
+    fn pinned_sessions_survive_pressure() {
+        let mut m = mem(9);
+        admit(&mut m, 1, 4 * PAGE);
+        m.pin(1);
+        admit(&mut m, 2, 4 * PAGE);
+        let a = admit(&mut m, 3, 4 * PAGE);
+        assert_eq!(a.evicted, vec![2], "LRU would be 1, but it is pinned");
+        assert!(m.is_resident(1));
+    }
+
+    #[test]
+    fn zero_footprint_sessions_anchor_one_page() {
+        // An empty session still holds a page, so eviction and GC can
+        // reach it — otherwise n=0 sessions would accumulate forever.
+        let mut m = mem(4);
+        let a = admit(&mut m, 1, 0);
+        assert_eq!(a.pages, 1);
+        assert_eq!(m.resident_bytes(), PAGE);
+        admit(&mut m, 2, 3 * PAGE);
+        let c = admit(&mut m, 3, PAGE);
+        assert_eq!(c.evicted, vec![1], "anchor pages are evictable");
+        assert_eq!(m.shed_spilled_lru(), Some(1), "and GC can forget the session");
+    }
+
+    #[test]
+    fn pinned_shortfall_refuses_without_spilling_innocents() {
+        // Pool of 4: A (2 pages, unpinned) + B (2 pages, pinned). C wants
+        // 4 pages — even evicting A cannot make room, so the admission
+        // must fail *before* A is spilled.
+        let mut m = mem(4);
+        admit(&mut m, 1, 2 * PAGE);
+        admit(&mut m, 2, 2 * PAGE);
+        m.pin(2);
+        m.open(3);
+        let err = m.admit(3, 4 * PAGE).unwrap_err();
+        assert!(matches!(err, AdmitError::PoolPinned { .. }), "{err}");
+        assert!(m.is_resident(1), "innocent LRU session was not spilled");
+        assert_eq!(m.stats().evictions, 0);
+    }
+
+    #[test]
+    fn fully_pinned_pool_is_an_admission_error() {
+        let mut m = mem(4);
+        admit(&mut m, 1, 2 * PAGE);
+        admit(&mut m, 2, 2 * PAGE);
+        m.pin(1);
+        m.pin(2);
+        m.open(3);
+        let err = m.admit(3, 2 * PAGE).unwrap_err();
+        assert!(matches!(err, AdmitError::PoolPinned { .. }), "{err}");
+        assert_eq!(m.stats().rejected, 1);
+    }
+
+    #[test]
+    fn over_pool_footprint_is_refused_outright() {
+        let mut m = mem(4);
+        m.open(1);
+        let err = m.admit(1, 5 * PAGE).unwrap_err();
+        assert!(matches!(err, AdmitError::FootprintExceedsPool { .. }), "{err}");
+        assert_eq!(m.resident_bytes(), 0, "nothing was evicted for a hopeless request");
+    }
+
+    #[test]
+    fn unknown_session_is_an_error() {
+        let mut m = mem(4);
+        assert_eq!(m.admit(42, PAGE).unwrap_err(), AdmitError::UnknownSession(42));
+    }
+
+    #[test]
+    fn gc_sheds_spilled_lru_only() {
+        let mut m = mem(9);
+        admit(&mut m, 1, 4 * PAGE);
+        admit(&mut m, 2, 4 * PAGE);
+        admit(&mut m, 3, 4 * PAGE); // spills 1
+        assert_eq!(m.shed_spilled_lru(), Some(1), "only the spilled session is shed");
+        assert_eq!(m.sessions(), 2);
+        assert_eq!(m.stats().shed_sessions, 1);
+        assert_eq!(m.shed_spilled_lru(), None, "residents are never GC'd");
+        assert!(m.is_resident(2) && m.is_resident(3));
+    }
+
+    #[test]
+    fn close_returns_pages() {
+        let mut m = mem(8);
+        admit(&mut m, 1, 3 * PAGE);
+        m.close(1);
+        assert_eq!(m.pool().free_pages(), 8);
+        assert_eq!(m.sessions(), 0);
+    }
+
+    #[test]
+    fn peak_resident_high_water_mark() {
+        let mut m = mem(16);
+        admit(&mut m, 1, 10 * PAGE);
+        admit(&mut m, 1, 2 * PAGE);
+        assert_eq!(m.stats().peak_resident_bytes, 10 * PAGE);
+    }
+}

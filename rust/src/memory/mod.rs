@@ -1,0 +1,136 @@
+//! Paged session-memory subsystem: the serving-capacity model.
+//!
+//! The paper's Fig 1 contrast — attention retains an O(N·d) KV cache
+//! while sub-quadratic operators keep O(1)/O(k) state — only matters at
+//! scale if the serving stack *enforces* it. This module turns the cost
+//! model into a capacity model:
+//!
+//! - a fixed-capacity [`PagePool`] sized from [`NpuConfig`] (the
+//!   state-reserved fraction of global memory, split into pages),
+//! - per-session [`PageTable`]s charged by each operator's
+//!   [`state_footprint`](crate::ops::CausalOperator::state_footprint)
+//!   growth curve,
+//! - an LRU-with-pinning [eviction policy](eviction),
+//! - a [`SpillModel`] that prices every eviction/refill with the
+//!   *calibrated* effective DMA ceiling β_eff (§IV-A), so memory
+//!   pressure surfaces as nanoseconds on responses, not as silent OOM.
+//!
+//! [`SessionMemory`] composes the four behind one admission API; the
+//! coordinator's `StateManager` wraps it, and `npuperf capacity` /
+//! `report::sweep::capacity_report` answer the planning question: how
+//! many concurrent sessions fit, per operator × context length?
+
+pub mod eviction;
+pub mod manager;
+pub mod page_table;
+pub mod pool;
+pub mod spill;
+
+pub use manager::{AdmitError, Admission, MemStats, SessionMemory};
+pub use page_table::PageTable;
+pub use pool::PagePool;
+pub use spill::SpillModel;
+
+use crate::config::{NpuConfig, SimConfig};
+
+/// Fraction of nominal DMA bandwidth a state stream sustains when no
+/// calibration run is available (paper §IV-A: effective ceilings land at
+/// ~5 % of nominal).
+pub const EFFECTIVE_BW_FRACTION: f64 = 0.05;
+
+/// Geometry and pricing of the session-memory pool.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MemoryConfig {
+    /// State page size, bytes.
+    pub page_bytes: u64,
+    /// Total pool capacity, bytes (page-rounded down by the pool).
+    pub pool_bytes: u64,
+    /// Effective DMA bandwidth for spills/refills, GB/s.
+    pub beta_eff_gbps: f64,
+    /// DMA descriptor setup charged per spill/refill, ns.
+    pub spill_setup_ns: f64,
+}
+
+impl MemoryConfig {
+    /// Pool geometry from the hardware description alone: the
+    /// state-reserved fraction of global memory, the configured page
+    /// size, and the §IV-A derate applied to nominal DMA bandwidth.
+    pub fn from_hw(hw: &NpuConfig) -> Self {
+        Self {
+            page_bytes: hw.state_page_bytes,
+            pool_bytes: (hw.dram_bytes as f64 * hw.state_pool_frac) as u64,
+            beta_eff_gbps: hw.dma_bw_gbps * EFFECTIVE_BW_FRACTION,
+            spill_setup_ns: hw.dma_setup_ns,
+        }
+    }
+
+    /// Like [`MemoryConfig::from_hw`], but β_eff comes from the roofline
+    /// calibration microbenchmarks run on the simulator — the same number
+    /// `npuperf roofline` reports.
+    pub fn calibrated(hw: &NpuConfig, sim: &SimConfig) -> Self {
+        let ceilings = crate::model::calibrate(hw, sim);
+        Self { beta_eff_gbps: ceilings.beta_eff_gbps, ..Self::from_hw(hw) }
+    }
+
+    pub fn with_pool_bytes(mut self, pool_bytes: u64) -> Self {
+        self.pool_bytes = pool_bytes;
+        self
+    }
+
+    pub fn with_page_bytes(mut self, page_bytes: u64) -> Self {
+        self.page_bytes = page_bytes;
+        self
+    }
+
+    /// Pages needed to back `bytes` of state.
+    pub fn pages_for(&self, bytes: u64) -> u64 {
+        bytes.div_ceil(self.page_bytes)
+    }
+
+    /// Usable pool pages.
+    pub fn pool_pages(&self) -> u64 {
+        self.pool_bytes / self.page_bytes
+    }
+
+    /// Capacity planning: maximum concurrently *resident* sessions of
+    /// `footprint_bytes` each. A zero footprint occupies one page slot —
+    /// even an empty session needs a page-table anchor.
+    pub fn max_sessions(&self, footprint_bytes: u64) -> u64 {
+        self.pool_pages() / self.pages_for(footprint_bytes).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_hw_reserves_the_state_fraction() {
+        let hw = NpuConfig::default();
+        let cfg = MemoryConfig::from_hw(&hw);
+        assert_eq!(cfg.page_bytes, hw.state_page_bytes);
+        assert_eq!(cfg.pool_bytes, (hw.dram_bytes as f64 * hw.state_pool_frac) as u64);
+        // 64 GB/s nominal * 5% derate = the paper's ~3.2 GB/s.
+        assert!((cfg.beta_eff_gbps - 3.2).abs() < 1e-9, "{}", cfg.beta_eff_gbps);
+    }
+
+    #[test]
+    fn calibrated_beta_matches_roofline() {
+        let hw = NpuConfig::default();
+        let sim = SimConfig::default();
+        let cfg = MemoryConfig::calibrated(&hw, &sim);
+        let c = crate::model::calibrate(&hw, &sim);
+        assert_eq!(cfg.beta_eff_gbps, c.beta_eff_gbps);
+        assert!((1.5..6.0).contains(&cfg.beta_eff_gbps), "{}", cfg.beta_eff_gbps);
+    }
+
+    #[test]
+    fn max_sessions_is_pool_over_extent() {
+        let cfg = MemoryConfig::from_hw(&NpuConfig::default())
+            .with_pool_bytes(1024 * 64 * 1024)
+            .with_page_bytes(64 * 1024);
+        assert_eq!(cfg.max_sessions(4 * 64 * 1024), 256);
+        assert_eq!(cfg.max_sessions(1), 1024, "sub-page footprints round to one page");
+        assert_eq!(cfg.max_sessions(0), 1024);
+    }
+}

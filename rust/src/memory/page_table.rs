@@ -1,0 +1,62 @@
+//! Per-session page-table entries.
+//!
+//! One [`PageTable`] per open session records how much logical state the
+//! session has accumulated (the operator's growth curve), how many pool
+//! pages back it while resident, and the eviction bookkeeping (last touch,
+//! pin). A *spilled* session keeps its logical size — that is what the
+//! refill transfer will have to page back in — but holds zero pool pages.
+
+/// Page-table entry for one session.
+#[derive(Clone, Debug)]
+pub struct PageTable {
+    /// Logical persistent-state bytes (the operator's footprint curve).
+    pub logical_bytes: u64,
+    /// Pool pages backing the state while resident; 0 when spilled.
+    pub resident_pages: u64,
+    /// Whether the state currently lives in the pool.
+    pub resident: bool,
+    /// Pinned entries are never chosen as eviction victims (the session
+    /// is being served, or the deployment marked it latency-critical).
+    pub pinned: bool,
+    /// Logical clock of the last admission touch (LRU key).
+    pub last_touch: u64,
+}
+
+impl PageTable {
+    pub fn new(now: u64) -> Self {
+        Self {
+            logical_bytes: 0,
+            resident_pages: 0,
+            resident: false,
+            pinned: false,
+            last_touch: now,
+        }
+    }
+
+    /// Pool bytes this entry holds (page-granular; 0 when spilled).
+    pub fn resident_bytes(&self, page_bytes: u64) -> u64 {
+        self.resident_pages * page_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_entry_is_empty_and_unpinned() {
+        let t = PageTable::new(7);
+        assert_eq!(t.logical_bytes, 0);
+        assert_eq!(t.resident_pages, 0);
+        assert!(!t.resident);
+        assert!(!t.pinned);
+        assert_eq!(t.last_touch, 7);
+    }
+
+    #[test]
+    fn resident_bytes_are_page_granular() {
+        let mut t = PageTable::new(0);
+        t.resident_pages = 3;
+        assert_eq!(t.resident_bytes(64 * 1024), 3 * 64 * 1024);
+    }
+}

@@ -1,0 +1,111 @@
+//! Fixed-capacity page pool backing all session state.
+//!
+//! The pool models the device-memory partition reserved for persistent
+//! session state (KV caches, recurrent states, ring buffers) as a fixed
+//! number of equally-sized pages. Page *identity* is irrelevant to a
+//! performance model — what capacity planning and spill accounting need
+//! is conservation: pages allocated never exceed the pool, and every
+//! eviction returns exactly the pages the victim held. The pool therefore
+//! tracks extents (counts), not addresses, which also keeps an
+//! effectively-unbounded test pool (`pool_bytes = u64::MAX`) O(1).
+
+/// Fixed pool of equally-sized state pages.
+#[derive(Clone, Debug)]
+pub struct PagePool {
+    page_bytes: u64,
+    total_pages: u64,
+    free_pages: u64,
+}
+
+impl PagePool {
+    /// Pool of `pool_bytes / page_bytes` pages (remainder is unusable,
+    /// exactly like a real allocator's slack).
+    pub fn new(pool_bytes: u64, page_bytes: u64) -> Self {
+        assert!(page_bytes > 0, "page size must be positive");
+        let total = pool_bytes / page_bytes;
+        Self { page_bytes, total_pages: total, free_pages: total }
+    }
+
+    /// Claim `pages` from the free list; `false` (and no change) if the
+    /// pool cannot satisfy the request.
+    pub fn try_allocate(&mut self, pages: u64) -> bool {
+        if pages <= self.free_pages {
+            self.free_pages -= pages;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Return `pages` to the free list.
+    pub fn release(&mut self, pages: u64) {
+        debug_assert!(
+            self.free_pages + pages <= self.total_pages,
+            "released more pages than were allocated"
+        );
+        self.free_pages = (self.free_pages + pages).min(self.total_pages);
+    }
+
+    pub fn page_bytes(&self) -> u64 {
+        self.page_bytes
+    }
+
+    pub fn total_pages(&self) -> u64 {
+        self.total_pages
+    }
+
+    pub fn free_pages(&self) -> u64 {
+        self.free_pages
+    }
+
+    pub fn used_pages(&self) -> u64 {
+        self.total_pages - self.free_pages
+    }
+
+    /// Bytes currently backing resident state (page-granular).
+    pub fn used_bytes(&self) -> u64 {
+        self.used_pages() * self.page_bytes
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.total_pages * self.page_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_geometry() {
+        let p = PagePool::new(640 * 1024, 64 * 1024);
+        assert_eq!(p.total_pages(), 10);
+        assert_eq!(p.free_pages(), 10);
+        assert_eq!(p.page_bytes(), 64 * 1024);
+    }
+
+    #[test]
+    fn allocate_and_release_conserve_pages() {
+        let mut p = PagePool::new(10 * 4096, 4096);
+        assert!(p.try_allocate(7));
+        assert_eq!(p.free_pages(), 3);
+        assert!(!p.try_allocate(4), "over-allocation refused");
+        assert_eq!(p.free_pages(), 3, "failed allocation is a no-op");
+        p.release(7);
+        assert_eq!(p.free_pages(), 10);
+    }
+
+    #[test]
+    fn slack_bytes_are_unusable() {
+        // 9.375 pages of slack-inclusive capacity -> 9 usable pages.
+        let p = PagePool::new(600 * 1024, 64 * 1024);
+        assert_eq!(p.total_pages(), 9);
+        assert_eq!(p.total_bytes(), 9 * 64 * 1024);
+    }
+
+    #[test]
+    fn huge_pool_is_cheap() {
+        let p = PagePool::new(u64::MAX, 64 * 1024);
+        assert_eq!(p.total_pages(), u64::MAX / (64 * 1024));
+    }
+}

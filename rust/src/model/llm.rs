@@ -10,7 +10,7 @@
 //! Table-I memory budget.
 
 use crate::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
-use crate::coordinator::state::SessionKind;
+use crate::coordinator::state::footprint_for;
 use crate::npu;
 use crate::ops::{self, decode, GraphBuilder, PrimOp};
 
@@ -102,14 +102,13 @@ pub fn plan(spec: &ModelSpec, n: usize, hw: &NpuConfig, sim: &SimConfig) -> Depl
     let step_ns =
         (head_step.span_ns * spec.heads as f64 + mlp_step.span_ns) * spec.layers as f64;
 
-    // Persistent state per Fig 1, summed over layers & heads.
-    let per_head_state = match SessionKind::for_operator(spec.op) {
-        SessionKind::KvCache => {
-            let retained = if spec.op == OperatorKind::Toeplitz { n.min(128) } else { n };
-            2 * retained as u64 * spec.d_head() as u64 * sim.elem_bytes
-        }
-        SessionKind::RecurrentState => (spec.d_head() * spec.d_state) as u64 * 4,
-    };
+    // Persistent state per Fig 1 — the registry's state-footprint growth
+    // curve (the same number the session-memory pool charges at serving
+    // time), summed over layers & heads. State is priced at the pool's
+    // fixed convention (fp16 KV, f32 recurrent accumulators) regardless
+    // of `sim.elem_bytes`: the retained cache does not requantize with
+    // the compute precision under test.
+    let per_head_state = footprint_for(spec.op, n, spec.d_head(), spec.d_state);
     let state_bytes = per_head_state * (spec.heads * spec.layers) as u64;
     let weight_bytes = spec.params() * sim.elem_bytes;
 

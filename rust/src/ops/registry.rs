@@ -85,6 +85,21 @@ pub trait CausalOperator: Send + Sync {
     fn predict_ms(&self, spec: &WorkloadSpec, hw: &NpuConfig, sim: &SimConfig) -> f64 {
         crate::npu::run(&self.lower(spec, hw, sim), hw, sim).latency_ms()
     }
+
+    /// Persistent session-state bytes retained after `position` tokens of
+    /// context — the growth curve the paged session-memory pool
+    /// (`crate::memory`) charges this operator. This is what turns the
+    /// cost model into a *capacity* model: attention-class KV grows
+    /// O(N·d), retention/SSM state stays O(d·d) constant, and banded
+    /// operators keep an O(band·d) ring buffer.
+    ///
+    /// The default models an explicit fp16 K/V cache (the quadratic
+    /// baseline's behavior); constant-state operators must override it or
+    /// the pool will overcharge them into early eviction.
+    fn state_footprint(&self, spec: &WorkloadSpec, position: usize) -> u64 {
+        // K + V rows at fp16.
+        2 * position as u64 * spec.d_head as u64 * 2
+    }
 }
 
 /// Bottleneck classification per the paper's taxonomy (§IV, Table II/V).
@@ -192,6 +207,12 @@ impl CausalOperator for RetentiveAttention {
     fn lower(&self, spec: &WorkloadSpec, hw: &NpuConfig, sim: &SimConfig) -> OpGraph {
         retentive::lower(spec, hw, sim)
     }
+    fn state_footprint(&self, spec: &WorkloadSpec, _position: usize) -> u64 {
+        // The retention formulation carries a d×d decayed-state
+        // accumulator across steps (f32) — constant in context, however
+        // the prefill kernel is lowered.
+        (spec.d_head * spec.d_head) as u64 * 4
+    }
 }
 
 /// Band-limited Toeplitz structured attention.
@@ -212,6 +233,11 @@ impl CausalOperator for ToeplitzAttention {
     }
     fn lower(&self, spec: &WorkloadSpec, hw: &NpuConfig, sim: &SimConfig) -> OpGraph {
         toeplitz::lower(spec, hw, sim)
+    }
+    fn state_footprint(&self, spec: &WorkloadSpec, position: usize) -> u64 {
+        // Banded window: an O(band·d) fp16 K/V ring buffer — grows until
+        // the band fills, then stays flat (the causal-conv analogue).
+        2 * position.min(toeplitz::band_for(spec)) as u64 * spec.d_head as u64 * 2
     }
 }
 
@@ -234,6 +260,11 @@ impl CausalOperator for LinearAttention {
     fn lower(&self, spec: &WorkloadSpec, hw: &NpuConfig, sim: &SimConfig) -> OpGraph {
         linear::lower(spec, hw, sim)
     }
+    fn state_footprint(&self, spec: &WorkloadSpec, _position: usize) -> u64 {
+        // Compressed recurrent state: the d_head × d_state f32 outer
+        // -product accumulator — context-independent (Fig 1's flat line).
+        (spec.d_head * spec.d_state) as u64 * 4
+    }
 }
 
 /// Fourier structured attention (frequency-domain product).
@@ -254,6 +285,11 @@ impl CausalOperator for FourierAttention {
     }
     fn lower(&self, spec: &WorkloadSpec, hw: &NpuConfig, sim: &SimConfig) -> OpGraph {
         fourier::lower(spec, hw, sim)
+    }
+    fn state_footprint(&self, spec: &WorkloadSpec, _position: usize) -> u64 {
+        // Retained spectrum: d_state frequency modes per head dimension,
+        // complex f32 (re + im) — constant in context.
+        2 * (spec.d_head * spec.d_state) as u64 * 4
     }
 }
 
@@ -299,6 +335,11 @@ impl CausalOperator for ChunkedRetention {
             ops: 4 * n * c * d + 4 * n * d * d + 4 * n * c,
             bytes: 4 * n * d * elem_bytes,
         }
+    }
+    fn state_footprint(&self, spec: &WorkloadSpec, _position: usize) -> u64 {
+        // Decodes through the same d×d recurrent state as canonical
+        // retention — the co-design keeps the constant-state property.
+        (spec.d_head * spec.d_head) as u64 * 4
     }
 }
 
@@ -522,6 +563,25 @@ mod tests {
         let p2 = op.profile(&WorkloadSpec::new(OperatorKind::Retentive, 4096), 2);
         assert!((p2.ops as f64 / p1.ops as f64 - 2.0).abs() < 0.1);
         assert!((p2.bytes as f64 / p1.bytes as f64 - 2.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn state_footprints_follow_the_paper_classes() {
+        let r = OperatorRegistry::with_builtins();
+        let fp = |name: &str, n: usize| {
+            let op = r.get(name).unwrap();
+            op.state_footprint(&WorkloadSpec::new(op.kind(), n), n)
+        };
+        // Attention KV doubles with context (O(N·d))...
+        assert_eq!(fp("causal", 4096), 2 * fp("causal", 2048));
+        assert_eq!(fp("causal", 1024), 2 * 1024 * 64 * 2);
+        // ...while retention/SSM state is context-independent (O(d·d))...
+        for op in ["retentive", "retentive-chunked", "linear", "fourier"] {
+            assert_eq!(fp(op, 256), fp(op, 1 << 20), "{op} state must stay flat");
+        }
+        // ...and the banded ring buffer fills its window then flattens.
+        assert!(fp("toeplitz", 64) < fp("toeplitz", 2048));
+        assert_eq!(fp("toeplitz", 2048), fp("toeplitz", 1 << 20));
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! command over the pluggable operator inventory.
 
 use crate::config::{NpuConfig, SimConfig, WorkloadSpec};
+use crate::memory::MemoryConfig;
 use crate::npu;
 use crate::ops::registry::{self, classify, BoundClass, CausalOperator, OperatorRegistry};
 use crate::util::fmt;
@@ -26,6 +27,8 @@ pub struct SweepCell {
     pub complexity: &'static str,
     /// Context length N.
     pub n: usize,
+    /// Persistent session-state bytes at this context (capacity axis).
+    pub state_bytes: u64,
     /// Simulated latency, ms.
     pub latency_ms: f64,
     /// Utilization shares [DPU, DMA, SHAVE] summing to 1.
@@ -57,6 +60,7 @@ pub fn run_sweep(
                 paper_name: op.paper_name(),
                 complexity: op.complexity(),
                 n,
+                state_bytes: op.state_footprint(&spec, n),
                 latency_ms: r.latency_ms(),
                 utilization: r.utilization(),
                 stall: r.stall.stall_frac(),
@@ -84,6 +88,7 @@ pub fn sweep_report_with(
                 c.paper_name.to_string(),
                 c.complexity.to_string(),
                 c.n.to_string(),
+                fmt::bytes(c.state_bytes),
                 format!("{:.2}", c.latency_ms),
                 fmt::pct(c.utilization[0]),
                 fmt::pct(c.utilization[1]),
@@ -100,6 +105,7 @@ pub fn sweep_report_with(
             "Operator",
             "Complexity",
             "N",
+            "State",
             "Latency ms",
             "DPU %",
             "DMA %",
@@ -136,6 +142,76 @@ pub fn sweep_report(contexts: &[usize], hw: &NpuConfig, sim: &SimConfig) -> Stri
     sweep_report_with(registry::global(), contexts, hw, sim)
 }
 
+/// Max concurrently resident sessions for one operator at context `n`,
+/// given the pool geometry in `mem`.
+pub fn max_sessions_at(op: &dyn CausalOperator, n: usize, mem: &MemoryConfig) -> u64 {
+    let spec = WorkloadSpec::new(op.kind(), n);
+    mem.max_sessions(op.state_footprint(&spec, n))
+}
+
+/// Serving-capacity table over an explicit registry: for every
+/// (operator × context), the per-session state footprint, its page
+/// extent, and the maximum number of concurrently resident sessions the
+/// session-memory pool sustains — the paper's quadratic-vs-constant
+/// state divergence expressed as a capacity number.
+pub fn capacity_report_with(
+    reg: &OperatorRegistry,
+    contexts: &[usize],
+    mem: &MemoryConfig,
+) -> String {
+    let pool_pages = mem.pool_pages();
+    let rows: Vec<Vec<String>> = reg
+        .iter()
+        .flat_map(|op| {
+            contexts.iter().map(move |&n| {
+                let spec = WorkloadSpec::new(op.kind(), n);
+                let fp = op.state_footprint(&spec, n);
+                vec![
+                    op.paper_name().to_string(),
+                    op.complexity().to_string(),
+                    n.to_string(),
+                    fmt::bytes(fp),
+                    mem.pages_for(fp).max(1).to_string(),
+                    mem.max_sessions(fp).to_string(),
+                ]
+            })
+        })
+        .collect();
+    let table = fmt::table(
+        &["Operator", "Complexity", "N", "State/session", "Pages", "Max sessions"],
+        &rows,
+    );
+
+    // Verdict per operator: does capacity collapse with context, or hold?
+    let lo = contexts.iter().copied().min().unwrap_or(0);
+    let hi = contexts.iter().copied().max().unwrap_or(0);
+    let mut verdicts = String::new();
+    for op in reg.iter() {
+        let (a, b) = (max_sessions_at(op, lo, mem), max_sessions_at(op, hi, mem));
+        verdicts += &format!(
+            "  {:<12} {:>12} sessions at N={lo} -> {:>12} at N={hi}  ({})\n",
+            op.paper_name(),
+            a,
+            b,
+            if b * 4 < a { "collapses with context" } else { "flat" }
+        );
+    }
+    format!(
+        "Session-memory capacity: pool {} in {pool_pages} pages of {}\n\
+         (spill/refill priced at {:.2} GB/s effective DMA)\n{table}\n\n\
+         Capacity verdicts:\n{verdicts}",
+        fmt::bytes(mem.pool_bytes),
+        fmt::bytes(mem.page_bytes),
+        mem.beta_eff_gbps,
+    )
+}
+
+/// Serving-capacity table over the process-wide registry, with the pool
+/// sized from `hw` and spills priced by the calibrated DMA ceiling.
+pub fn capacity_report(contexts: &[usize], hw: &NpuConfig, sim: &SimConfig) -> String {
+    capacity_report_with(registry::global(), contexts, &MemoryConfig::calibrated(hw, sim))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,6 +242,37 @@ mod tests {
         assert!(text.contains("Classification"));
         assert!(text.contains("-bound"));
         assert!(text.contains("Long-context verdicts"));
+    }
+
+    #[test]
+    fn capacity_collapses_for_attention_and_holds_for_constant_state() {
+        let mem = MemoryConfig::from_hw(&NpuConfig::default());
+        let reg = registry::global();
+        let causal = reg.get("causal").unwrap();
+        let retentive = reg.get("retentive").unwrap();
+        let linear = reg.get("linear").unwrap();
+        assert!(
+            max_sessions_at(causal, 512, &mem) >= 8 * max_sessions_at(causal, 16384, &mem),
+            "KV capacity must collapse with context"
+        );
+        assert_eq!(max_sessions_at(retentive, 512, &mem), max_sessions_at(retentive, 16384, &mem));
+        assert_eq!(max_sessions_at(linear, 512, &mem), max_sessions_at(linear, 16384, &mem));
+
+        let text = capacity_report_with(reg, &[512, 16384], &mem);
+        assert!(text.contains("collapses with context"), "{text}");
+        assert!(text.contains("flat"), "{text}");
+        assert!(text.contains("Max sessions"), "{text}");
+    }
+
+    #[test]
+    fn sweep_reports_the_state_column() {
+        let (hw, sim) = cfg();
+        let cells = run_sweep(registry::global(), &[256, 1024], &hw, &sim);
+        let causal: Vec<&SweepCell> =
+            cells.iter().filter(|c| c.name == "causal").collect();
+        assert_eq!(causal[1].state_bytes, 4 * causal[0].state_bytes, "KV grows O(N)");
+        let text = sweep_report(&[256], &hw, &sim);
+        assert!(text.contains("State"), "{text}");
     }
 
     #[test]

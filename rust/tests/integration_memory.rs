@@ -1,0 +1,205 @@
+//! Integration: the paged session-memory subsystem end to end — footprint
+//! growth per operator class, LRU-with-pinning eviction, spill/refill
+//! pricing, capacity-aware serving under pool pressure, and the
+//! `capacity` CLI report.
+
+use npuperf::config::{NpuConfig, OperatorKind, WorkloadSpec};
+use npuperf::coordinator::{Coordinator, CoordinatorConfig, Request};
+use npuperf::memory::{MemoryConfig, SessionMemory, SpillModel};
+use npuperf::ops::registry;
+
+const PAGE: u64 = 64 * 1024;
+
+fn pool_of(pages: u64) -> MemoryConfig {
+    MemoryConfig::from_hw(&NpuConfig::default()).with_pool_bytes(pages * PAGE)
+}
+
+#[test]
+fn footprint_growth_matches_operator_class() {
+    let reg = registry::global();
+    let fp = |name: &str, n: usize| {
+        let op = reg.get(name).unwrap();
+        op.state_footprint(&WorkloadSpec::new(op.kind(), n), n)
+    };
+    // Attention KV: O(N·d).
+    assert_eq!(fp("causal", 8192), 4 * fp("causal", 2048));
+    // Retention / SSM state: constant in context.
+    for op in ["retentive", "retentive-chunked", "linear", "fourier"] {
+        assert_eq!(fp(op, 2048), fp(op, 8192), "{op}");
+    }
+    // Banded ring buffer: grows to the band, then flat.
+    assert!(fp("toeplitz", 64) < fp("toeplitz", 2048));
+    assert_eq!(fp("toeplitz", 2048), fp("toeplitz", 8192));
+}
+
+#[test]
+fn page_tables_grow_with_kv_and_stay_flat_for_state() {
+    let mut m = SessionMemory::new(pool_of(1024));
+    let reg = registry::global();
+    let causal = reg.get("causal").unwrap();
+    let linear = reg.get("linear").unwrap();
+    m.open(1);
+    m.open(2);
+    let mut last = 0;
+    for n in [1024usize, 2048, 4096] {
+        let kv = m
+            .admit(1, causal.state_footprint(&WorkloadSpec::new(OperatorKind::Causal, n), n))
+            .unwrap();
+        assert!(kv.pages > last, "KV page extent must grow with context");
+        last = kv.pages;
+        let ssm = m
+            .admit(2, linear.state_footprint(&WorkloadSpec::new(OperatorKind::Linear, n), n))
+            .unwrap();
+        assert_eq!(ssm.pages, 1, "recurrent state pins one page at every context");
+    }
+}
+
+#[test]
+fn eviction_is_lru_with_pinning() {
+    let mut m = SessionMemory::new(pool_of(9));
+    for id in 1..=2u64 {
+        m.open(id);
+        m.admit(id, 4 * PAGE).unwrap();
+    }
+    m.pin(1); // 1 is LRU but pinned
+    m.open(3);
+    let adm = m.admit(3, 4 * PAGE).unwrap();
+    assert_eq!(adm.evicted, vec![2], "pressure falls on the LRU *unpinned* session");
+    assert!(m.is_resident(1));
+    assert!(!m.is_resident(2));
+}
+
+#[test]
+fn spill_and_refill_are_priced_by_the_dma_ceiling() {
+    let cfg = pool_of(8);
+    let price = SpillModel { beta_eff_gbps: cfg.beta_eff_gbps, setup_ns: cfg.spill_setup_ns };
+    let mut m = SessionMemory::new(cfg);
+    m.open(1);
+    m.open(2);
+    m.admit(1, 5 * PAGE).unwrap();
+    let adm = m.admit(2, 5 * PAGE).unwrap(); // must spill session 1
+    assert_eq!(adm.evicted, vec![1]);
+    assert_eq!(adm.spill_ns, price.transfer_ns(5 * PAGE));
+    let back = m.admit(1, 5 * PAGE).unwrap(); // refills 1, spilling 2
+    assert_eq!(back.refill_ns, price.transfer_ns(5 * PAGE));
+    assert_eq!(back.evicted, vec![2]);
+    let stats = m.stats();
+    assert_eq!(stats.evictions, 2);
+    assert!(stats.spill_ns > 0.0 && stats.refill_ns > 0.0);
+    assert_eq!(stats.spilled_bytes, 10 * PAGE);
+}
+
+#[test]
+fn serve_loop_under_pressure_spills_instead_of_growing_unbounded() {
+    // Pool of 32 pages; each causal N=2048 session needs 8 pages, so only
+    // four sessions fit — a stream of 12 distinct sessions must still
+    // complete, with the pressure surfacing as eviction/spill time.
+    let coord = Coordinator::new(CoordinatorConfig {
+        max_wait_ns: 100_000,
+        state_budget_bytes: 32 * PAGE,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let reqs: Vec<Request> = (0..12)
+        .map(|i| Request {
+            spec: WorkloadSpec::new(OperatorKind::Causal, 2048),
+            session: i,
+            inputs: None,
+        })
+        .collect();
+    let responses = coord.submit_all(reqs).unwrap();
+    assert_eq!(responses.len(), 12, "pressure must not drop requests");
+    let spilled: f64 = responses.iter().map(|r| r.spill_ns).sum();
+    assert!(spilled > 0.0, "pool pressure must surface as spill nanoseconds");
+    let snap = coord.metrics_snapshot().unwrap();
+    assert!(snap.contains("evictions="), "{snap}");
+    assert!(!snap.contains("evictions=0"), "nonzero evictions expected:\n{snap}");
+    assert!(snap.contains("shed=0"), "everything fit after eviction:\n{snap}");
+}
+
+#[test]
+fn session_bookkeeping_is_bounded_by_gc() {
+    // 12 distinct sessions stream through a pool that fits 4; with a
+    // tracked-session cap of 6 the server forgets LRU spilled sessions
+    // instead of remembering every session it ever saw.
+    let coord = Coordinator::new(CoordinatorConfig {
+        max_wait_ns: 100_000,
+        state_budget_bytes: 32 * PAGE,
+        max_tracked_sessions: 6,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let reqs: Vec<Request> = (0..12)
+        .map(|i| Request {
+            spec: WorkloadSpec::new(OperatorKind::Causal, 2048),
+            session: i,
+            inputs: None,
+        })
+        .collect();
+    coord.submit_all(reqs).unwrap();
+    let snap = coord.metrics_snapshot().unwrap();
+    assert!(snap.contains("sessions=6"), "tracked sessions capped at 6:\n{snap}");
+}
+
+#[test]
+fn oversized_footprint_is_shed_with_an_error() {
+    // One page of pool: a causal 2048-token session (512 KiB) can never
+    // be paged in, so admission control sheds the request.
+    let coord = Coordinator::new(CoordinatorConfig {
+        max_wait_ns: 100_000,
+        state_budget_bytes: PAGE,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let err = coord
+        .submit(Request {
+            spec: WorkloadSpec::new(OperatorKind::Causal, 2048),
+            session: 1,
+            inputs: None,
+        })
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("shed"), "{err}");
+
+    // A constant-state operator still fits the same pool.
+    let ok = coord
+        .submit(Request {
+            spec: WorkloadSpec::new(OperatorKind::Linear, 2048),
+            session: 2,
+            inputs: None,
+        })
+        .unwrap();
+    assert!(ok.backend_ns > 0.0);
+}
+
+#[test]
+fn attention_capacity_collapses_while_constant_state_stays_flat() {
+    let cfg = MemoryConfig::from_hw(&NpuConfig::default());
+    let reg = registry::global();
+    let cap = |name: &str, n: usize| {
+        let op = reg.get(name).unwrap();
+        cfg.max_sessions(op.state_footprint(&WorkloadSpec::new(op.kind(), n), n))
+    };
+    assert!(
+        cap("causal", 512) >= 8 * cap("causal", 16384),
+        "causal {} vs {}",
+        cap("causal", 512),
+        cap("causal", 16384)
+    );
+    for name in ["retentive", "linear", "fourier", "toeplitz"] {
+        assert_eq!(cap(name, 512), cap(name, 16384), "{name} capacity must hold");
+    }
+}
+
+#[test]
+fn capacity_cli_smoke() {
+    let args: Vec<String> =
+        ["capacity", "--contexts", "512,8192"].iter().map(|s| s.to_string()).collect();
+    let out = npuperf::cli::run(&args).unwrap();
+    assert!(out.contains("Max sessions"), "{out}");
+    assert!(out.contains("collapses with context"), "{out}");
+    assert!(out.contains("flat"), "{out}");
+    for name in ["Full Causal", "Retentive", "Toeplitz", "Linear", "Fourier", "Ret-Chunked"] {
+        assert!(out.contains(name), "missing {name}:\n{out}");
+    }
+}
