@@ -14,6 +14,7 @@
 //! npuperf chunking <N>           # chunked-prefill plan sweep (§V)
 //! npuperf validate [dir]         # golden-validate every artifact via PJRT
 //! npuperf serve [dir]            # demo serving loop over the artifacts
+//! npuperf selftest [--seeds A,B,C] [--contexts A,B] [--bless]
 //! npuperf hw                     # table 1
 //! ```
 //!
@@ -46,6 +47,10 @@ fn resolve_operator(arg: &str) -> Result<&'static dyn CausalOperator> {
 }
 
 /// Parse an optional `--contexts A,B,C` flag; `default` when absent.
+/// Duplicates are dropped and the grid is sorted ascending, so
+/// `--contexts 256,128,256` and `--contexts 128,256` produce identical
+/// reports (sweep verdicts key on the min/max context, so order and
+/// duplicates would otherwise change output).
 fn parse_contexts(rest: &[&str], default: &[usize]) -> Result<Vec<usize>> {
     match rest.iter().position(|a| *a == "--contexts") {
         None => Ok(default.to_vec()),
@@ -53,13 +58,45 @@ fn parse_contexts(rest: &[&str], default: &[usize]) -> Result<Vec<usize>> {
             let list = rest.get(i + 1).ok_or_else(|| {
                 anyhow!("--contexts expects a comma-separated list of lengths")
             })?;
-            list.split(',')
+            let mut contexts = list
+                .split(',')
                 .map(|x| {
-                    x.trim()
+                    let n = x
+                        .trim()
                         .parse::<usize>()
-                        .map_err(|e| anyhow!("bad context {x:?}: {e}"))
+                        .map_err(|e| anyhow!("bad context {x:?}: {e}"))?;
+                    if n == 0 {
+                        bail!("context length must be positive, got {x:?}");
+                    }
+                    Ok(n)
                 })
-                .collect()
+                .collect::<Result<Vec<usize>>>()?;
+            contexts.sort_unstable();
+            contexts.dedup();
+            Ok(contexts)
+        }
+    }
+}
+
+/// Parse an optional `--seeds A,B,C` flag (u64 list, deduped + sorted);
+/// `default` when absent.
+fn parse_seeds(rest: &[&str], default: &[u64]) -> Result<Vec<u64>> {
+    match rest.iter().position(|a| *a == "--seeds") {
+        None => Ok(default.to_vec()),
+        Some(i) => {
+            let list = rest
+                .get(i + 1)
+                .ok_or_else(|| anyhow!("--seeds expects a comma-separated list"))?;
+            let mut seeds = list
+                .split(',')
+                .map(|x| x.trim().parse::<u64>().map_err(|e| anyhow!("bad seed {x:?}: {e}")))
+                .collect::<Result<Vec<u64>>>()?;
+            seeds.sort_unstable();
+            seeds.dedup();
+            if seeds.is_empty() {
+                bail!("--seeds expects at least one seed");
+            }
+            Ok(seeds)
         }
     }
 }
@@ -139,6 +176,20 @@ pub fn run(args: &[String]) -> Result<String> {
         "capacity" => {
             let contexts = parse_contexts(&rest, &[512, 2048, 8192, 32768])?;
             Ok(crate::report::sweep::capacity_report(&contexts, &hw, &sim))
+        }
+        "selftest" => {
+            let opts = crate::testkit::SelftestOptions {
+                seeds: parse_seeds(&rest, &[1, 2, 3])?,
+                contexts: parse_contexts(&rest, &[256, 1024, 4096])?,
+                bless: flag("--bless"),
+                golden_dir: None,
+            };
+            let rep = crate::testkit::selftest(&hw, &sim, &opts);
+            if rep.passed() {
+                Ok(rep.render())
+            } else {
+                bail!("{}", rep.render())
+            }
         }
         "operators" => {
             let mut out = String::from(
@@ -397,6 +448,10 @@ commands:
                             grid; per-cell bottleneck classification
   capacity [--contexts A,B] max concurrently resident sessions per operator
                             x context under the paged session-memory pool
+  selftest [--seeds A,B,C] [--contexts A,B] [--bless]
+                            deterministic conformance suite: differential
+                            serve-vs-direct check, memory/batcher invariants,
+                            replay determinism, golden fixtures (docs/TESTING.md)
   operators                 list the operator registry
   simulate <op> <N> [--d-state D] [--offload] [--no-double-buffer]
   decode <op> <N>           one autoregressive decode step + tokens/s
@@ -464,6 +519,46 @@ mod tests {
         assert!(run_cmd(&["sweep", "--contexts", "12a"]).is_err());
         assert!(run_cmd(&["sweep", "--contexts", ""]).is_err());
         assert!(run_cmd(&["sweep", "--contexts"]).is_err(), "missing value must not be ignored");
+    }
+
+    #[test]
+    fn contexts_are_deduped_and_sorted() {
+        let rest = ["--contexts", "256,128,256"];
+        assert_eq!(parse_contexts(&rest, &[512]).unwrap(), vec![128, 256]);
+        let rest = ["--contexts", "8192,512,2048,512"];
+        assert_eq!(parse_contexts(&rest, &[]).unwrap(), vec![512, 2048, 8192]);
+        assert_eq!(parse_contexts(&[], &[512, 2048]).unwrap(), vec![512, 2048]);
+    }
+
+    #[test]
+    fn zero_context_is_rejected() {
+        let err = parse_contexts(&["--contexts", "0,128"], &[]).unwrap_err();
+        assert!(err.to_string().contains("positive"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_contexts_give_identical_reports() {
+        let a = run_cmd(&["sweep", "--contexts", "256,128,256"]).unwrap();
+        let b = run_cmd(&["sweep", "--contexts", "128,256"]).unwrap();
+        assert_eq!(a, b, "dupes and order must not change the report");
+    }
+
+    #[test]
+    fn seeds_are_deduped_and_sorted() {
+        assert_eq!(parse_seeds(&["--seeds", "3,1,3"], &[9]).unwrap(), vec![1, 3]);
+        assert_eq!(parse_seeds(&[], &[1, 2, 3]).unwrap(), vec![1, 2, 3]);
+        assert!(parse_seeds(&["--seeds", "x"], &[]).is_err());
+        assert!(parse_seeds(&["--seeds"], &[]).is_err());
+    }
+
+    #[test]
+    fn selftest_smoke_passes_on_defaults() {
+        // Small grid/seed count so the smoke test stays fast; the golden
+        // sections still use their own pinned grids.
+        let out = run_cmd(&["selftest", "--seeds", "1", "--contexts", "128,256"]).unwrap();
+        assert!(out.contains("result: PASS"), "{out}");
+        assert!(out.contains("differential"), "{out}");
+        assert!(out.contains("replay-determinism"), "{out}");
     }
 
     #[test]

@@ -1,15 +1,85 @@
 //! Serving metrics: per-operator latency summaries + throughput counters.
+//!
+//! All time-derived numbers (uptime, throughput) are read off a [`Clock`]
+//! rather than `Instant::now()` directly, so tests drive a [`ManualClock`]
+//! and assert exact throughput/uptime values; production uses the
+//! monotonic [`WallClock`].
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::OperatorKind;
 use crate::util::stats::Summary;
 
+/// Monotonic nanosecond time source for the serving stack.
+///
+/// The coordinator never calls `Instant::now()` itself — it reads this,
+/// so a test can substitute a [`ManualClock`] and make queue ages,
+/// uptime, and throughput deterministic.
+pub trait Clock: std::fmt::Debug + Send + Sync {
+    /// Nanoseconds since an arbitrary per-clock epoch (monotonic).
+    fn now_ns(&self) -> u64;
+}
+
+/// Production clock: monotonic nanoseconds since construction.
+#[derive(Clone, Debug)]
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        Self { epoch: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+}
+
+/// Test clock: advances only when told to. Cloning shares the underlying
+/// counter, so the copy handed to the coordinator and the one kept by the
+/// test tick together.
+#[derive(Clone, Debug, Default)]
+pub struct ManualClock {
+    ns: Arc<AtomicU64>,
+}
+
+impl ManualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn advance_ns(&self, delta: u64) {
+        self.ns.fetch_add(delta, Ordering::SeqCst);
+    }
+
+    pub fn set_ns(&self, ns: u64) {
+        self.ns.store(ns, Ordering::SeqCst);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_ns(&self) -> u64 {
+        self.ns.load(Ordering::SeqCst)
+    }
+}
+
 /// Registry of per-operator serving metrics.
 #[derive(Debug)]
 pub struct Metrics {
-    start: Instant,
+    clock: Arc<dyn Clock>,
+    start_ns: u64,
     latency_ns: HashMap<OperatorKind, Summary>,
     served: HashMap<OperatorKind, u64>,
     pub batches: u64,
@@ -30,8 +100,15 @@ impl Default for Metrics {
 
 impl Metrics {
     pub fn new() -> Self {
+        Self::with_clock(Arc::new(WallClock::new()))
+    }
+
+    /// Metrics driven by an external time source (tests: [`ManualClock`]).
+    pub fn with_clock(clock: Arc<dyn Clock>) -> Self {
+        let start_ns = clock.now_ns();
         Self {
-            start: Instant::now(),
+            clock,
+            start_ns,
             latency_ns: HashMap::new(),
             served: HashMap::new(),
             batches: 0,
@@ -39,6 +116,16 @@ impl Metrics {
             simulated_requests: 0,
             shed_requests: 0,
         }
+    }
+
+    /// Current clock reading (same source throughput uses).
+    pub fn now_ns(&self) -> u64 {
+        self.clock.now_ns()
+    }
+
+    /// Nanoseconds since construction, on the injected clock.
+    pub fn uptime_ns(&self) -> u64 {
+        self.clock.now_ns().saturating_sub(self.start_ns)
     }
 
     pub fn record(&mut self, op: OperatorKind, latency_ns: f64) {
@@ -60,7 +147,7 @@ impl Metrics {
 
     /// Requests per second since construction.
     pub fn throughput_rps(&self) -> f64 {
-        let secs = self.start.elapsed().as_secs_f64();
+        let secs = self.uptime_ns() as f64 / 1e9;
         if secs == 0.0 {
             0.0
         } else {
@@ -85,12 +172,14 @@ impl Metrics {
             );
         }
         out += &format!(
-            "batches={} pjrt={} simulated={} total={} shed={}\n",
+            "batches={} pjrt={} simulated={} total={} shed={} uptime_ms={:.3} rps={:.2}\n",
             self.batches,
             self.pjrt_requests,
             self.simulated_requests,
             self.total_served(),
-            self.shed_requests
+            self.shed_requests,
+            self.uptime_ns() as f64 / 1e6,
+            self.throughput_rps(),
         );
         out
     }
@@ -136,5 +225,39 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.total_served(), 0);
         assert!(m.latency(OperatorKind::Causal).is_none());
+    }
+
+    #[test]
+    fn manual_clock_gives_exact_throughput() {
+        let clock = ManualClock::new();
+        let mut m = Metrics::with_clock(Arc::new(clock.clone()));
+        m.record(OperatorKind::Causal, 1e6);
+        m.record(OperatorKind::Causal, 1e6);
+        m.record(OperatorKind::Linear, 1e6);
+        assert_eq!(m.throughput_rps(), 0.0, "no time has passed");
+        clock.advance_ns(2_000_000_000);
+        assert_eq!(m.uptime_ns(), 2_000_000_000);
+        assert_eq!(m.throughput_rps(), 1.5);
+        let snap = m.snapshot();
+        assert!(snap.contains("uptime_ms=2000.000"), "{snap}");
+        assert!(snap.contains("rps=1.50"), "{snap}");
+    }
+
+    #[test]
+    fn manual_clock_starts_where_it_is_set() {
+        let clock = ManualClock::new();
+        clock.set_ns(5_000);
+        let m = Metrics::with_clock(Arc::new(clock.clone()));
+        assert_eq!(m.uptime_ns(), 0, "uptime is measured from construction");
+        clock.advance_ns(1_000);
+        assert_eq!(m.uptime_ns(), 1_000);
+    }
+
+    #[test]
+    fn wall_clock_is_monotonic() {
+        let c = WallClock::new();
+        let a = c.now_ns();
+        let b = c.now_ns();
+        assert!(b >= a);
     }
 }

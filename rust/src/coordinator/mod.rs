@@ -31,7 +31,7 @@ pub mod workload_gen;
 
 pub use batcher::{Batch, Batcher};
 pub use chunking::{optimal_chunk, ChunkPlan};
-pub use metrics::Metrics;
+pub use metrics::{Clock, ManualClock, Metrics, WallClock};
 pub use router::{BackendKind, Router};
 pub use server::{Coordinator, CoordinatorConfig, Request, Response};
 pub use state::{SessionKind, StateManager};

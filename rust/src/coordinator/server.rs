@@ -17,8 +17,8 @@
 //! zero coordinator changes.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
@@ -29,7 +29,7 @@ use crate::runtime::executor::{Executor, ExecutorHandle};
 use crate::runtime::Tensor;
 
 use super::batcher::Batcher;
-use super::metrics::Metrics;
+use super::metrics::{Clock, Metrics, WallClock};
 use super::router::{BackendKind, Router};
 use super::state::StateManager;
 
@@ -88,6 +88,11 @@ pub struct CoordinatorConfig {
     /// after each batch — they re-prefill if they return — so a
     /// long-lived server's session map stays bounded.
     pub max_tracked_sessions: usize,
+    /// Time source for queue ages, batching windows, uptime and
+    /// throughput. `None` ⇒ monotonic [`WallClock`]; tests inject a
+    /// [`super::ManualClock`] for deterministic latency/throughput
+    /// assertions.
+    pub clock: Option<Arc<dyn Clock>>,
 }
 
 impl Default for CoordinatorConfig {
@@ -112,6 +117,7 @@ impl CoordinatorConfig {
             max_batch: 8,
             max_wait_ns: 2_000_000, // 2 ms batching window
             max_tracked_sessions: 65_536,
+            clock: None,
         }
     }
 }
@@ -119,7 +125,9 @@ impl CoordinatorConfig {
 struct Job {
     request: Request,
     reply: mpsc::Sender<Result<Response>>,
-    enqueued: Instant,
+    /// Serve-loop clock reading at intake (stamped by the serving thread,
+    /// which owns the clock — the submitting thread leaves it zero).
+    enqueued_ns: u64,
 }
 
 enum Ctl {
@@ -163,7 +171,7 @@ impl Coordinator {
     pub fn submit(&self, request: Request) -> Result<Response> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Ctl::Submit(Job { request, reply, enqueued: Instant::now() }))
+            .send(Ctl::Submit(Job { request, reply, enqueued_ns: 0 }))
             .map_err(|_| anyhow!("coordinator stopped"))?;
         rx.recv().map_err(|_| anyhow!("coordinator dropped reply"))?
     }
@@ -174,7 +182,7 @@ impl Coordinator {
         for request in requests {
             let (reply, rx) = mpsc::channel();
             self.tx
-                .send(Ctl::Submit(Job { request, reply, enqueued: Instant::now() }))
+                .send(Ctl::Submit(Job { request, reply, enqueued_ns: 0 }))
                 .map_err(|_| anyhow!("coordinator stopped"))?;
             rxs.push(rx);
         }
@@ -206,8 +214,9 @@ fn serve_loop(
     exec: Option<ExecutorHandle>,
     router: Router,
 ) {
+    let clock: Arc<dyn Clock> = cfg.clock.clone().unwrap_or_else(|| Arc::new(WallClock::new()));
     let mut batcher = Batcher::new(cfg.max_batch, cfg.max_wait_ns);
-    let mut metrics = Metrics::new();
+    let mut metrics = Metrics::with_clock(clock.clone());
     // Spills/refills are priced with the same calibrated beta_eff the
     // roofline reports, so eviction time on responses is commensurate
     // with simulated operator latencies.
@@ -217,8 +226,9 @@ fn serve_loop(
     );
     let mut jobs: std::collections::HashMap<u64, Job> = Default::default();
     let mut next_id: u64 = 0;
-    let t0 = Instant::now();
+    let t0 = clock.now_ns();
 
+    let clock_d = clock.clone();
     let dispatch = |batch: super::batcher::Batch,
                     jobs: &mut std::collections::HashMap<u64, Job>,
                     metrics: &mut Metrics,
@@ -318,7 +328,7 @@ fn serve_loop(
                     )),
                 },
             };
-            metrics.record(spec.op, job.enqueued.elapsed().as_nanos() as f64);
+            metrics.record(spec.op, clock_d.now_ns().saturating_sub(job.enqueued_ns) as f64);
             let _ = job.reply.send(result);
         }
         // Keep the session map bounded: forget LRU spilled sessions once
@@ -329,9 +339,10 @@ fn serve_loop(
     loop {
         // Wait up to the batching window for the next control message.
         let msg = rx.recv_timeout(std::time::Duration::from_nanos(cfg.max_wait_ns));
-        let now_ns = t0.elapsed().as_nanos() as u64;
+        let now_ns = clock.now_ns().saturating_sub(t0);
         match msg {
-            Ok(Ctl::Submit(job)) => {
+            Ok(Ctl::Submit(mut job)) => {
+                job.enqueued_ns = clock.now_ns();
                 let id = next_id;
                 next_id += 1;
                 let spec = job.request.spec;
@@ -369,7 +380,7 @@ fn serve_loop(
         // their refill when their turn comes; age breaks ties so no
         // signature starves).
         let due = batcher
-            .poll_expired_prefer(t0.elapsed().as_nanos() as u64, |s| state.is_resident(s));
+            .poll_expired_prefer(clock.now_ns().saturating_sub(t0), |s| state.is_resident(s));
         for batch in due {
             dispatch(batch, &mut jobs, &mut metrics, &mut state);
         }
@@ -475,6 +486,34 @@ mod tests {
             })
             .unwrap();
         assert_eq!(r.operator, "linear", "registry attribution on the response");
+    }
+
+    #[test]
+    fn manual_clock_makes_throughput_deterministic() {
+        use super::super::metrics::ManualClock;
+        let clock = ManualClock::new();
+        let c = Coordinator::new(CoordinatorConfig {
+            max_batch: 1, // dispatch on push: no dependence on the frozen clock
+            max_wait_ns: 100_000,
+            clock: Some(Arc::new(clock.clone())),
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        for i in 0..3 {
+            c.submit(Request {
+                spec: WorkloadSpec::new(OperatorKind::Linear, 512),
+                session: i,
+                inputs: None,
+            })
+            .unwrap();
+        }
+        clock.advance_ns(2_000_000_000);
+        let snap = c.metrics_snapshot().unwrap();
+        assert!(snap.contains("uptime_ms=2000.000"), "{snap}");
+        assert!(snap.contains("rps=1.50"), "{snap}");
+        // The clock never ticked while requests were in flight, so the
+        // measured queue latency is exactly zero.
+        assert!(snap.contains("mean=0.000 ms"), "{snap}");
     }
 
     #[test]

@@ -9,4 +9,5 @@ pub mod npu;
 pub mod ops;
 pub mod report;
 pub mod runtime;
+pub mod testkit;
 pub mod util;

@@ -76,4 +76,98 @@ mod tests {
         m.insert(2, entry(4, 1, false));
         assert_eq!(lru_victim(&m, 0), Some(2));
     }
+
+    #[test]
+    fn property_victim_is_evictable_and_true_lru() {
+        use crate::util::check::{forall, Rng};
+        forall(
+            "lru victim",
+            60,
+            |rng: &mut Rng| {
+                let n = rng.range(0, 12);
+                let tables: Vec<(u64, u64, u64, bool)> = (0..n)
+                    .map(|id| (id, rng.below(6), rng.below(3), rng.bool()))
+                    .collect();
+                let protect = rng.below(n + 2); // sometimes protects nobody
+                (tables, protect)
+            },
+            |(rows, protect)| {
+                let mut m = HashMap::new();
+                for &(id, touch, pages, pinned) in rows {
+                    m.insert(id, entry(touch, pages, pinned));
+                }
+                let victim = lru_victim(&m, *protect);
+                let evictable: Vec<&(u64, u64, u64, bool)> = rows
+                    .iter()
+                    .filter(|(id, _, pages, pinned)| id != protect && *pages > 0 && !pinned)
+                    .collect();
+                match victim {
+                    None if evictable.is_empty() => Ok(()),
+                    None => Err(format!("no victim despite evictable rows {evictable:?}")),
+                    Some(v) => {
+                        let Some(&&(_, touch, pages, pinned)) =
+                            evictable.iter().find(|r| r.0 == v)
+                        else {
+                            return Err(format!(
+                                "victim {v} is protected, pinned, or holds no pages"
+                            ));
+                        };
+                        debug_assert!(pages > 0 && !pinned);
+                        // True LRU: nothing evictable was touched earlier,
+                        // and ties break toward the smaller id.
+                        for &&(id, t, ..) in &evictable {
+                            if (t, id) < (touch, v) {
+                                return Err(format!(
+                                    "victim {v} (touch {touch}) skipped older \
+                                     evictable {id} (touch {t})"
+                                ));
+                            }
+                        }
+                        Ok(())
+                    }
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn property_repeated_eviction_drains_in_lru_order() {
+        use crate::util::check::{forall, Rng};
+        forall(
+            "lru drain order",
+            40,
+            |rng: &mut Rng| {
+                let n = rng.range(1, 10);
+                (0..n)
+                    .map(|id| (id, rng.below(4), rng.below(100) < 25))
+                    .collect::<Vec<(u64, u64, bool)>>()
+            },
+            |rows| {
+                let mut m = HashMap::new();
+                for &(id, touch, pinned) in rows {
+                    m.insert(id, entry(touch, 1, pinned));
+                }
+                let mut drained = Vec::new();
+                while let Some(v) = lru_victim(&m, u64::MAX) {
+                    if m[&v].pinned {
+                        return Err(format!("evicted pinned session {v}"));
+                    }
+                    drained.push((m[&v].last_touch, v));
+                    if let Some(t) = m.get_mut(&v) {
+                        t.resident = false;
+                        t.resident_pages = 0;
+                    }
+                }
+                if m.values().any(|t| t.resident && !t.pinned) {
+                    return Err("drain stopped with evictable sessions left".into());
+                }
+                let mut sorted = drained.clone();
+                sorted.sort_unstable();
+                if drained != sorted {
+                    return Err(format!("drain order not LRU: {drained:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
 }

@@ -100,6 +100,19 @@ impl MemStats {
     }
 }
 
+/// Read-only snapshot of one session's page-table row, for external
+/// invariant checking ([`crate::testkit::invariants`]) and debugging.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SessionAudit {
+    pub id: u64,
+    pub resident: bool,
+    pub pinned: bool,
+    pub resident_pages: u64,
+    pub logical_bytes: u64,
+    /// Logical LRU clock value of the last touch (monotonic, not wall time).
+    pub last_touch: u64,
+}
+
 /// Paged session-memory manager.
 #[derive(Clone, Debug)]
 pub struct SessionMemory {
@@ -315,6 +328,27 @@ impl SessionMemory {
     /// Sum of logical state bytes across all open sessions.
     pub fn total_logical_bytes(&self) -> u64 {
         self.tables.values().map(|t| t.logical_bytes).sum()
+    }
+
+    /// Snapshot every open session's page-table row, sorted by id. The
+    /// conformance suite cross-checks these rows against the pool counters
+    /// (page conservation, pin safety, LRU order) without reaching into
+    /// private state.
+    pub fn audit(&self) -> Vec<SessionAudit> {
+        let mut rows: Vec<SessionAudit> = self
+            .tables
+            .iter()
+            .map(|(&id, t)| SessionAudit {
+                id,
+                resident: t.resident,
+                pinned: t.pinned,
+                resident_pages: t.resident_pages,
+                logical_bytes: t.logical_bytes,
+                last_touch: t.last_touch,
+            })
+            .collect();
+        rows.sort_by_key(|r| r.id);
+        rows
     }
 
     pub fn stats(&self) -> &MemStats {

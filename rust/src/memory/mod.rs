@@ -26,7 +26,7 @@ pub mod page_table;
 pub mod pool;
 pub mod spill;
 
-pub use manager::{AdmitError, Admission, MemStats, SessionMemory};
+pub use manager::{AdmitError, Admission, MemStats, SessionAudit, SessionMemory};
 pub use page_table::PageTable;
 pub use pool::PagePool;
 pub use spill::SpillModel;

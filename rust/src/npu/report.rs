@@ -137,6 +137,17 @@ impl ExecReport {
         }
     }
 
+    /// One stable line of the quantities the conformance suite pins in
+    /// golden fixtures: label, exact simulated span, DMA traffic and
+    /// logical op count. Everything here is deterministic simulator
+    /// output, so byte-exact fixture diffs are meaningful.
+    pub fn conformance_line(&self) -> String {
+        format!(
+            "{} span_ns={:.3} dma_bytes={} logical_ops={}",
+            self.label, self.span_ns, self.dma_bytes, self.logical_ops
+        )
+    }
+
     /// Achieved operational intensity, ops/byte (roofline x-coordinate).
     pub fn intensity(&self) -> f64 {
         if self.dma_bytes == 0 {
@@ -226,6 +237,18 @@ mod tests {
         let want = (2u64 * 256 * 256 * 256) as f64 / r.span_ns;
         assert!((r.achieved_gops() - want).abs() < 1e-9);
         assert!(r.compute_utilization(NpuConfig::default().peak_fp16_gops()) < 1.0);
+    }
+
+    #[test]
+    fn conformance_line_is_stable_and_complete() {
+        let r = report_for(|b| {
+            b.push_simple(PrimOp::MatMul { m: 128, n: 128, k: 128 }, vec![]);
+        });
+        let line = r.conformance_line();
+        assert!(line.starts_with("t span_ns="), "{line}");
+        assert!(line.contains(&format!("dma_bytes={}", r.dma_bytes)), "{line}");
+        assert!(line.contains(&format!("logical_ops={}", r.logical_ops)), "{line}");
+        assert_eq!(line, r.conformance_line(), "same report, same line");
     }
 
     #[test]

@@ -142,6 +142,35 @@ pub fn sweep_report(contexts: &[usize], hw: &NpuConfig, sim: &SimConfig) -> Stri
     sweep_report_with(registry::global(), contexts, hw, sim)
 }
 
+/// Machine-diffable snapshot of every registered operator's simulated
+/// cost at each context: one line per (operator, context) with the exact
+/// span, DMA traffic, logical ops and [`BoundClass`]. This is what the
+/// conformance suite pins in `rust/tests/golden/` — any cost-model change
+/// shows up as a byte diff here, with `--bless` as the intentional-change
+/// path.
+pub fn conformance_snapshot(
+    reg: &OperatorRegistry,
+    contexts: &[usize],
+    hw: &NpuConfig,
+    sim: &SimConfig,
+) -> String {
+    let mut out = String::new();
+    for op in reg.iter() {
+        for &n in contexts {
+            let spec = WorkloadSpec::new(op.kind(), n);
+            let r = npu::run(&op.lower(&spec, hw, sim), hw, sim);
+            out += &format!(
+                "{} n={} {} class={}\n",
+                op.name(),
+                n,
+                r.conformance_line(),
+                classify(&r)
+            );
+        }
+    }
+    out
+}
+
 /// Max concurrently resident sessions for one operator at context `n`,
 /// given the pool geometry in `mem`.
 pub fn max_sessions_at(op: &dyn CausalOperator, n: usize, mem: &MemoryConfig) -> u64 {
@@ -273,6 +302,20 @@ mod tests {
         assert_eq!(causal[1].state_bytes, 4 * causal[0].state_bytes, "KV grows O(N)");
         let text = sweep_report(&[256], &hw, &sim);
         assert!(text.contains("State"), "{text}");
+    }
+
+    #[test]
+    fn conformance_snapshot_is_deterministic_and_complete() {
+        let (hw, sim) = cfg();
+        let reg = registry::global();
+        let a = conformance_snapshot(reg, &[128, 256], &hw, &sim);
+        let b = conformance_snapshot(reg, &[128, 256], &hw, &sim);
+        assert_eq!(a, b, "two runs must be byte-identical");
+        assert_eq!(a.lines().count(), reg.len() * 2);
+        for op in reg.iter() {
+            assert!(a.contains(&format!("{} n=128 ", op.name())), "{a}");
+        }
+        assert!(a.contains("class="), "{a}");
     }
 
     #[test]

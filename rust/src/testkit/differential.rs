@@ -1,0 +1,246 @@
+//! Differential checker: the batched serve path vs. direct lowering.
+//!
+//! The coordinator's serve loop and the `ops::lower`/`lower_decode` entry
+//! points are two roads to the same simulated cost; a refactor that bends
+//! one but not the other silently invalidates every serving-layer number.
+//! [`check`] lowers every workload kind through **both** and asserts the
+//! simulated cycle counts ([`ExecReport::span_ns`]) and the paper-taxonomy
+//! [`crate::ops::BoundClass`] agree *exactly* — the simulator is
+//! deterministic, so any
+//! difference is a real divergence, not noise. Registry entries that are
+//! not their kind's canonical lowering (e.g. `retentive-chunked`) are not
+//! reachable through kind-keyed serving, so for those — and for decode
+//! graphs, which have no serve path — the checker verifies graph validity
+//! and lowering determinism instead.
+//!
+//! [`check_against`] runs the serve and direct sides on *different*
+//! hardware configs. With identical configs it is the conformance check;
+//! with a perturbed config on one side it must report divergences — the
+//! suite's proof that the harness has teeth (see
+//! `rust/tests/conformance.rs`).
+
+use anyhow::Result;
+
+use crate::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+use crate::coordinator::Request;
+use crate::npu::{self, ExecReport};
+use crate::ops;
+use crate::ops::registry::{self, classify};
+
+use super::workload::deterministic_coordinator;
+
+/// One disagreement between the serve path and direct lowering.
+#[derive(Clone, Debug)]
+pub struct Divergence {
+    pub operator: String,
+    pub n: usize,
+    pub what: String,
+}
+
+impl std::fmt::Display for Divergence {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} at N={}: {}", self.operator, self.n, self.what)
+    }
+}
+
+/// Result of a differential run.
+#[derive(Clone, Debug, Default)]
+pub struct DiffReport {
+    /// Individual comparisons performed.
+    pub cases: usize,
+    pub divergences: Vec<Divergence>,
+}
+
+impl DiffReport {
+    pub fn is_clean(&self) -> bool {
+        self.divergences.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "differential check: {} cases, {} divergences\n",
+            self.cases,
+            self.divergences.len()
+        );
+        for d in &self.divergences {
+            out += &format!("  {d}\n");
+        }
+        out
+    }
+}
+
+/// Run the differential check with one config for both sides — the
+/// conformance configuration; a clean report means serve and direct
+/// agree on every registry operator.
+pub fn check(hw: &NpuConfig, sim: &SimConfig, contexts: &[usize]) -> Result<DiffReport> {
+    check_against(hw, sim, hw, sim, contexts)
+}
+
+/// Run the serve path on `(hw_serve, sim_serve)` and the direct path on
+/// `(hw_direct, sim_direct)`. Identical configs must produce a clean
+/// report; a perturbed direct config must not.
+pub fn check_against(
+    hw_serve: &NpuConfig,
+    sim_serve: &SimConfig,
+    hw_direct: &NpuConfig,
+    sim_direct: &SimConfig,
+    contexts: &[usize],
+) -> Result<DiffReport> {
+    let reg = registry::global();
+    let mut rep = DiffReport::default();
+    // Budget sized for the grid: state admission must never shed here —
+    // a shed response has no sim_report to compare.
+    let coord = deterministic_coordinator(hw_serve, sim_serve, 1 << 30)?;
+    let mut session = 0u64;
+
+    // Serve path vs direct kind-canonical lowering, every kind x context.
+    for &kind in &OperatorKind::ALL {
+        let canonical = reg.for_kind(kind).name();
+        for &n in contexts {
+            let spec = WorkloadSpec::new(kind, n);
+            session += 1;
+            let resp = coord.submit(Request { spec, session, inputs: None })?;
+            let direct = npu::run(&ops::lower(&spec, hw_direct, sim_direct), hw_direct, sim_direct);
+            rep.cases += 1;
+            let mut diverge = |what: String| {
+                rep.divergences.push(Divergence { operator: canonical.into(), n, what });
+            };
+            if resp.operator != canonical {
+                diverge(format!(
+                    "serve path attributed `{}`, registry canon is `{canonical}`",
+                    resp.operator
+                ));
+                continue;
+            }
+            let Some(served) = resp.sim_report.as_ref() else {
+                diverge("serve path returned no simulator report".into());
+                continue;
+            };
+            compare_reports(served, &direct, &mut diverge);
+            if resp.backend_ns != served.span_ns {
+                diverge(format!(
+                    "response backend_ns {} != its own report span {}",
+                    resp.backend_ns, served.span_ns
+                ));
+            }
+        }
+    }
+
+    // Every registry entry (canonical or variant): prefill + decode
+    // graphs validate, simulate to positive spans, and lower
+    // deterministically; canonical entries must also match the module
+    // entry points they claim to be.
+    for op in reg.iter() {
+        let canonical = reg.for_kind(op.kind()).name() == op.name();
+        for &n in contexts {
+            let spec = WorkloadSpec::new(op.kind(), n);
+            rep.cases += 1;
+            let mut diverge = |what: String| {
+                rep.divergences.push(Divergence { operator: op.name().into(), n, what });
+            };
+            for (phase, graph, again) in [
+                (
+                    "prefill",
+                    op.lower(&spec, hw_direct, sim_direct),
+                    op.lower(&spec, hw_direct, sim_direct),
+                ),
+                (
+                    "decode",
+                    op.lower_decode(&spec, hw_direct, sim_direct),
+                    op.lower_decode(&spec, hw_direct, sim_direct),
+                ),
+            ] {
+                if let Err(e) = graph.validate() {
+                    diverge(format!("{phase} graph invalid: {e}"));
+                    continue;
+                }
+                let r1 = npu::run(&graph, hw_direct, sim_direct);
+                let r2 = npu::run(&again, hw_direct, sim_direct);
+                if r1.span_ns <= 0.0 {
+                    diverge(format!("{phase} span is not positive: {}", r1.span_ns));
+                }
+                if r1.span_ns != r2.span_ns {
+                    diverge(format!(
+                        "{phase} lowering not deterministic: {} vs {}",
+                        r1.span_ns, r2.span_ns
+                    ));
+                }
+                if canonical {
+                    let via_module = match phase {
+                        "prefill" => ops::lower(&spec, hw_direct, sim_direct),
+                        _ => ops::lower_decode(&spec, hw_direct, sim_direct),
+                    };
+                    let rm = npu::run(&via_module, hw_direct, sim_direct);
+                    if rm.span_ns != r1.span_ns {
+                        diverge(format!(
+                            "{phase}: ops module entry point disagrees with the \
+                             registry entry ({} vs {})",
+                            rm.span_ns, r1.span_ns
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    Ok(rep)
+}
+
+fn compare_reports(served: &ExecReport, direct: &ExecReport, diverge: &mut impl FnMut(String)) {
+    if served.span_ns != direct.span_ns {
+        diverge(format!(
+            "cycle counts differ: serve {} ns vs direct {} ns",
+            served.span_ns, direct.span_ns
+        ));
+    }
+    if classify(served) != classify(direct) {
+        diverge(format!(
+            "BoundClass differs: serve {} vs direct {}",
+            classify(served),
+            classify(direct)
+        ));
+    }
+    if served.dma_bytes != direct.dma_bytes {
+        diverge(format!(
+            "DMA bytes differ: serve {} vs direct {}",
+            served.dma_bytes, direct.dma_bytes
+        ));
+    }
+    if served.logical_ops != direct.logical_ops {
+        diverge(format!(
+            "logical ops differ: serve {} vs direct {}",
+            served.logical_ops, direct.logical_ops
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_grid_is_clean() {
+        let rep = check(&NpuConfig::default(), &SimConfig::default(), &[128]).unwrap();
+        assert!(rep.is_clean(), "{}", rep.render());
+        // 5 kinds + 6 registry entries, one context each.
+        assert_eq!(rep.cases, 11);
+    }
+
+    #[test]
+    fn perturbed_dma_setup_is_detected() {
+        let hw = NpuConfig::default();
+        let mut bent = hw.clone();
+        bent.dma_setup_ns *= 2.0;
+        let rep = check_against(&hw, &SimConfig::default(), &bent, &SimConfig::default(), &[256])
+            .unwrap();
+        assert!(
+            !rep.is_clean(),
+            "doubling dma_setup_ns must diverge serve from direct"
+        );
+    }
+
+    #[test]
+    fn divergences_render_with_context() {
+        let d = Divergence { operator: "causal".into(), n: 512, what: "boom".into() };
+        assert_eq!(d.to_string(), "causal at N=512: boom");
+    }
+}

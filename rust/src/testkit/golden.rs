@@ -1,0 +1,168 @@
+//! Golden-fixture facility: snapshot report output for pinned seeds and
+//! diff it against checked-in fixtures.
+//!
+//! Workflow:
+//!
+//! - A **missing** fixture is written (blessed) on first run and the
+//!   comparison passes with a notice — so a fresh checkout that gained a
+//!   new golden test never fails spuriously; the generated file is then
+//!   committed to pin the behavior.
+//! - A **present** fixture must match exactly (modulo a trailing-newline
+//!   normalization). A mismatch renders a line diff and the bless hint.
+//! - Regeneration after an *intentional* behavior change:
+//!   `npuperf selftest --bless`, or `NPUPERF_BLESS=1 cargo test` — both
+//!   rewrite the fixture with current output; review the `git diff` and
+//!   commit.
+//!
+//! CI guards the committed fixtures with `git diff --exit-code -- \
+//! rust/tests/golden` after the suite runs: drift in a tracked fixture
+//! fails the build, while freshly blessed (untracked) files do not.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// How a comparison concluded (both variants pass the test).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Fixture existed and matched.
+    Match,
+    /// Fixture was written from current output (missing, or bless mode).
+    Blessed,
+}
+
+/// The checked-in fixture directory: `rust/tests/golden/` at the repo
+/// root, resolved from the crate manifest so tests work from any cwd.
+pub fn default_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust").join("tests").join("golden")
+}
+
+fn env_bless() -> bool {
+    std::env::var("NPUPERF_BLESS").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Trailing-whitespace-insensitive form used for the equality check, so a
+/// fixture edited by tools that strip or add a final newline still
+/// matches.
+fn normalize(s: &str) -> String {
+    let mut out: String = s.lines().map(|l| l.trim_end()).collect::<Vec<_>>().join("\n");
+    out.push('\n');
+    out
+}
+
+/// Compare `actual` against the fixture `name` inside `dir`.
+///
+/// Returns `Ok` on match or bless (see [`Outcome`]); `Err` carries a
+/// rendered diff when a present fixture disagrees and blessing is off.
+pub fn compare_in(dir: &Path, name: &str, actual: &str, bless: bool) -> Result<Outcome, String> {
+    let path = dir.join(name);
+    let want = normalize(actual);
+    match fs::read_to_string(&path) {
+        Ok(existing) if normalize(&existing) == want => Ok(Outcome::Match),
+        Ok(_) if bless || env_bless() => {
+            write_fixture(&path, &want)?;
+            Ok(Outcome::Blessed)
+        }
+        Ok(existing) => Err(render_diff(&path, &normalize(&existing), &want)),
+        Err(_) => {
+            // First run: bless the fixture so new golden tests are
+            // adoptable without a bootstrap step; commit the file to pin.
+            write_fixture(&path, &want)?;
+            Ok(Outcome::Blessed)
+        }
+    }
+}
+
+/// [`compare_in`] against the default checked-in fixture directory.
+pub fn compare(name: &str, actual: &str, bless: bool) -> Result<Outcome, String> {
+    compare_in(&default_dir(), name, actual, bless)
+}
+
+fn write_fixture(path: &Path, content: &str) -> Result<(), String> {
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent).map_err(|e| format!("creating {parent:?}: {e}"))?;
+    }
+    fs::write(path, content).map_err(|e| format!("writing {path:?}: {e}"))
+}
+
+fn render_diff(path: &Path, expected: &str, actual: &str) -> String {
+    let exp: Vec<&str> = expected.lines().collect();
+    let act: Vec<&str> = actual.lines().collect();
+    let mut out = format!("golden mismatch: {}\n", path.display());
+    let mut shown = 0;
+    for i in 0..exp.len().max(act.len()) {
+        let (e, a) = (exp.get(i).copied(), act.get(i).copied());
+        if e != a {
+            out += &format!(
+                "  line {}:\n    fixture: {}\n    actual:  {}\n",
+                i + 1,
+                e.unwrap_or("<missing>"),
+                a.unwrap_or("<missing>"),
+            );
+            shown += 1;
+            if shown == 8 {
+                out += "  ... (further differences elided)\n";
+                break;
+            }
+        }
+    }
+    if exp.len() != act.len() {
+        out += &format!("  line counts differ: fixture {} vs actual {}\n", exp.len(), act.len());
+    }
+    out += "  re-bless after an intentional change: `npuperf selftest --bless` \
+            or NPUPERF_BLESS=1, then commit the fixture\n";
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("npuperf-golden-{}-{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn missing_fixture_is_blessed_then_matches() {
+        let dir = scratch("bless");
+        assert_eq!(compare_in(&dir, "a.txt", "hello\n", false), Ok(Outcome::Blessed));
+        assert_eq!(compare_in(&dir, "a.txt", "hello\n", false), Ok(Outcome::Match));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mismatch_renders_a_line_diff() {
+        let dir = scratch("diff");
+        compare_in(&dir, "a.txt", "one\ntwo\n", false).unwrap();
+        let err = compare_in(&dir, "a.txt", "one\nTWO\n", false).unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("fixture: two"), "{err}");
+        assert!(err.contains("actual:  TWO"), "{err}");
+        assert!(err.contains("bless"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bless_flag_rewrites_a_present_fixture() {
+        let dir = scratch("rebless");
+        compare_in(&dir, "a.txt", "old\n", false).unwrap();
+        assert_eq!(compare_in(&dir, "a.txt", "new\n", true), Ok(Outcome::Blessed));
+        assert_eq!(compare_in(&dir, "a.txt", "new\n", false), Ok(Outcome::Match));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn trailing_newline_is_not_significant() {
+        let dir = scratch("newline");
+        compare_in(&dir, "a.txt", "x\ny", false).unwrap();
+        assert_eq!(compare_in(&dir, "a.txt", "x\ny\n", false), Ok(Outcome::Match));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn default_dir_points_into_the_repo() {
+        assert!(default_dir().ends_with("rust/tests/golden"));
+    }
+}

@@ -1,0 +1,419 @@
+//! Reusable invariant checkers for the serving stack.
+//!
+//! Three families, each usable standalone from any test and all driven by
+//! `npuperf selftest`:
+//!
+//! - **Session-memory conservation** ([`memory_conservation`],
+//!   [`memory_workout`]): page accounting balances (resident page sum ==
+//!   pool pages in use), the pool never exceeds capacity, pinned sessions
+//!   are never evicted, and every eviction picks the true LRU victim —
+//!   verified against an independent oracle built from
+//!   [`SessionMemory::audit`] *pre-state*, not from the manager's own
+//!   post-hoc claims.
+//! - **Batcher fairness** ([`batcher_fairness`]): expired batches release
+//!   oldest waiter first, nothing eligible is left behind (no
+//!   starvation), nothing releases early, and no request is lost or
+//!   duplicated.
+//! - **Footprint monotonicity** ([`footprint_monotonicity`],
+//!   [`footprint_table`]): every operator's state curve is monotone in
+//!   position, and the built-ins keep their paper shapes — KV grows
+//!   O(N·d), retention/SSM state stays constant, Toeplitz is band-capped.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::config::{OperatorKind, WorkloadSpec};
+use crate::coordinator::Batcher;
+use crate::memory::{AdmitError, MemoryConfig, SessionAudit, SessionMemory};
+use crate::ops::registry::OperatorRegistry;
+
+use super::prng::SplitMix64;
+
+// ---- Session-memory conservation ---------------------------------------
+
+/// Check the page-accounting invariants of `mem`'s current state.
+///
+/// Cheap enough to run after every mutation in a workout loop.
+pub fn memory_conservation(mem: &SessionMemory) -> Result<(), String> {
+    let cfg = mem.config();
+    let pool = mem.pool();
+    let rows = mem.audit();
+
+    if pool.used_pages() > pool.total_pages() {
+        return Err(format!(
+            "pool over capacity: {} used of {} pages",
+            pool.used_pages(),
+            pool.total_pages()
+        ));
+    }
+    let resident_sum: u64 = rows.iter().filter(|r| r.resident).map(|r| r.resident_pages).sum();
+    if resident_sum != pool.used_pages() {
+        return Err(format!(
+            "page leak: sessions hold {resident_sum} pages but the pool has {} in use",
+            pool.used_pages()
+        ));
+    }
+    for r in &rows {
+        if r.resident && r.resident_pages == 0 {
+            return Err(format!("session {} resident with zero pages", r.id));
+        }
+        if !r.resident && r.resident_pages != 0 {
+            return Err(format!(
+                "session {} spilled but still holds {} pages",
+                r.id, r.resident_pages
+            ));
+        }
+        if r.resident && r.resident_pages != cfg.pages_for(r.logical_bytes).max(1) {
+            return Err(format!(
+                "session {}: {} resident pages for {} logical bytes (want {})",
+                r.id,
+                r.resident_pages,
+                r.logical_bytes,
+                cfg.pages_for(r.logical_bytes).max(1)
+            ));
+        }
+    }
+    let resident_rows = rows.iter().filter(|r| r.resident).count();
+    if resident_rows != mem.resident_sessions() {
+        return Err(format!(
+            "resident-session count drift: audit {} vs manager {}",
+            resident_rows,
+            mem.resident_sessions()
+        ));
+    }
+    if mem.stats().peak_resident_bytes > pool.total_bytes() {
+        return Err(format!(
+            "peak resident {} exceeds pool capacity {}",
+            mem.stats().peak_resident_bytes,
+            pool.total_bytes()
+        ));
+    }
+    Ok(())
+}
+
+/// LRU oracle over a pre-mutation audit: the victim the policy *must*
+/// pick next, excluding sessions already evicted this admission.
+fn lru_from_audit(rows: &[SessionAudit], excluded: &HashSet<u64>) -> Option<u64> {
+    rows.iter()
+        .filter(|r| !excluded.contains(&r.id) && r.resident && !r.pinned && r.resident_pages > 0)
+        .min_by_key(|r| (r.last_touch, r.id))
+        .map(|r| r.id)
+}
+
+/// Seeded random workout of [`SessionMemory`]: `steps` mixed
+/// open/admit/pin/unpin/reset/close/shed operations over a small pool,
+/// checking after every step that conservation holds, that no pinned
+/// session is ever evicted, and that each eviction matches the
+/// independent LRU oracle.
+pub fn memory_workout(seed: u64, steps: usize) -> Result<String, String> {
+    const PAGE: u64 = 64 * 1024;
+    let mut mem = SessionMemory::new(MemoryConfig {
+        page_bytes: PAGE,
+        pool_bytes: 16 * PAGE, // small pool so eviction pressure is constant
+        beta_eff_gbps: 3.2,
+        spill_setup_ns: 1_500.0,
+    });
+    let mut rng = SplitMix64::new(seed);
+    let ids: [u64; 8] = [1, 2, 3, 4, 5, 6, 7, 8];
+    let mut open: HashSet<u64> = HashSet::new();
+    let mut pinned: HashSet<u64> = HashSet::new();
+    let (mut admits, mut evictions, mut rejections) = (0u64, 0u64, 0u64);
+
+    for step in 0..steps {
+        let id = *rng.choose(&ids);
+        let ctx = |what: &str| format!("seed {seed} step {step} session {id}: {what}");
+        match rng.below(100) {
+            0..=54 => {
+                if !open.contains(&id) {
+                    mem.open(id);
+                    open.insert(id);
+                }
+                let bytes = rng.below(6) * PAGE + rng.below(PAGE);
+                let pre = mem.audit();
+                match mem.admit(id, bytes) {
+                    Ok(adm) => {
+                        admits += 1;
+                        evictions += adm.evicted.len() as u64;
+                        let mut excluded: HashSet<u64> = HashSet::from([id]);
+                        for &victim in &adm.evicted {
+                            if pinned.contains(&victim) {
+                                return Err(ctx(&format!("evicted pinned session {victim}")));
+                            }
+                            let expect = lru_from_audit(&pre, &excluded);
+                            if expect != Some(victim) {
+                                return Err(ctx(&format!(
+                                    "evicted {victim} but the LRU oracle says {expect:?}"
+                                )));
+                            }
+                            if mem.is_resident(victim) {
+                                return Err(ctx(&format!(
+                                    "victim {victim} still resident after eviction"
+                                )));
+                            }
+                            excluded.insert(victim);
+                        }
+                        if !mem.is_resident(id) {
+                            return Err(ctx("admitted session is not resident"));
+                        }
+                    }
+                    Err(AdmitError::FootprintExceedsPool { .. }) => rejections += 1,
+                    Err(AdmitError::PoolPinned { .. }) => {
+                        rejections += 1;
+                        if pinned.is_empty() {
+                            return Err(ctx("PoolPinned rejection with no pinned session"));
+                        }
+                    }
+                    Err(e) => return Err(ctx(&format!("unexpected admit error: {e}"))),
+                }
+            }
+            55..=64 => {
+                if mem.pin(id) {
+                    pinned.insert(id);
+                }
+            }
+            65..=74 => {
+                if mem.unpin(id) {
+                    pinned.remove(&id);
+                }
+            }
+            75..=82 => {
+                // Reset clears the pin: a fresh context does not inherit
+                // latency-critical status.
+                mem.reset(id);
+                pinned.remove(&id);
+            }
+            83..=90 => {
+                mem.close(id);
+                open.remove(&id);
+                pinned.remove(&id);
+            }
+            _ => {
+                if let Some(shed) = mem.shed_spilled_lru() {
+                    if pinned.contains(&shed) {
+                        return Err(ctx(&format!("GC shed pinned session {shed}")));
+                    }
+                    open.remove(&shed);
+                }
+            }
+        }
+        memory_conservation(&mem).map_err(|e| ctx(&e))?;
+    }
+    Ok(format!(
+        "{steps} steps: {admits} admits, {evictions} evictions, {rejections} rejections"
+    ))
+}
+
+// ---- Batcher fairness ---------------------------------------------------
+
+/// Seeded random workout of the [`Batcher`]: checks that expired batches
+/// release **oldest waiter first**, that every release waited at least the
+/// configured window, that no eligible batch is left queued after a poll
+/// (no starvation), and that every pushed request id is released exactly
+/// once.
+pub fn batcher_fairness(seed: u64, events: usize) -> Result<String, String> {
+    let mut rng = SplitMix64::new(seed);
+    let max_batch = rng.range(2, 6) as usize;
+    let max_wait = rng.range(50, 200);
+    let mut b = Batcher::new(max_batch, max_wait);
+
+    // Independent oracle: per-signature oldest queued push time.
+    let mut oldest: HashMap<WorkloadSpec, u64> = HashMap::new();
+    let mut released: Vec<u64> = Vec::new();
+    let mut pushed: u64 = 0;
+    let mut t: u64 = 0;
+    let contexts = [128usize, 256, 512];
+
+    for step in 0..events {
+        t += rng.below(40);
+        let ctx = |what: &str| format!("seed {seed} step {step} t={t}: {what}");
+        if rng.below(100) < 70 {
+            let spec = WorkloadSpec::new(*rng.choose(&OperatorKind::ALL), *rng.choose(&contexts));
+            let id = pushed;
+            pushed += 1;
+            oldest.entry(spec).or_insert(t);
+            if let Some(batch) = b.push(id, spec, id, t) {
+                if batch.request_ids.len() != max_batch {
+                    return Err(ctx("push released a non-full batch"));
+                }
+                oldest.remove(&batch.spec);
+                released.extend(batch.request_ids);
+            }
+        } else {
+            let mut prev_oldest = 0u64;
+            for batch in b.poll_expired(t) {
+                let Some(&o) = oldest.get(&batch.spec) else {
+                    return Err(ctx("released a batch the oracle never saw"));
+                };
+                if t.saturating_sub(o) < max_wait {
+                    return Err(ctx(&format!(
+                        "released after only {} ns of a {} ns window",
+                        t.saturating_sub(o),
+                        max_wait
+                    )));
+                }
+                if o < prev_oldest {
+                    return Err(ctx(&format!(
+                        "younger batch (queued at {prev_oldest}) released before \
+                         older one (queued at {o})"
+                    )));
+                }
+                prev_oldest = o;
+                oldest.remove(&batch.spec);
+                released.extend(batch.request_ids);
+            }
+            // Starvation check: everything due must have been released.
+            for (spec, &o) in &oldest {
+                if t.saturating_sub(o) >= max_wait {
+                    return Err(ctx(&format!(
+                        "starved: {spec:?} queued at {o} still waiting after poll"
+                    )));
+                }
+            }
+        }
+    }
+    for batch in b.flush() {
+        released.extend(batch.request_ids);
+    }
+    released.sort_unstable();
+    let want: Vec<u64> = (0..pushed).collect();
+    if released != want {
+        return Err(format!(
+            "seed {seed}: request ids lost or duplicated ({} released of {pushed})",
+            released.len()
+        ));
+    }
+    Ok(format!(
+        "{events} events, max_batch={max_batch}, max_wait={max_wait} ns, \
+         {pushed} requests conserved"
+    ))
+}
+
+// ---- Footprint monotonicity --------------------------------------------
+
+/// Check every registered operator's state-footprint curve: monotone
+/// non-decreasing in position, and — for the built-in names — the paper's
+/// shape: `causal` grows linearly (O(N·d) KV), `retentive` /
+/// `retentive-chunked` / `linear` / `fourier` are context-constant, and
+/// `toeplitz` saturates at its band. Unknown (custom) operators get the
+/// monotonicity check only.
+pub fn footprint_monotonicity(reg: &OperatorRegistry) -> Result<String, String> {
+    let positions: [usize; 11] = [0, 1, 16, 64, 128, 256, 512, 1024, 4096, 16384, 1 << 20];
+    for op in reg.iter() {
+        let spec = WorkloadSpec::new(op.kind(), 4096);
+        let fp = |p: usize| op.state_footprint(&spec, p);
+        let mut prev = 0u64;
+        for &p in &positions {
+            let f = fp(p);
+            if f < prev {
+                return Err(format!(
+                    "{}: footprint shrinks with position ({} at {p} < {prev})",
+                    op.name(),
+                    f
+                ));
+            }
+            prev = f;
+        }
+        match op.name() {
+            "causal" => {
+                if fp(2048) != 2 * fp(1024) || fp(8192) != 8 * fp(1024) {
+                    return Err(format!(
+                        "causal KV must grow O(N·d): fp(1024)={} fp(2048)={} fp(8192)={}",
+                        fp(1024),
+                        fp(2048),
+                        fp(8192)
+                    ));
+                }
+            }
+            "retentive" | "retentive-chunked" | "linear" | "fourier" => {
+                if fp(1) != fp(1 << 20) {
+                    return Err(format!(
+                        "{} state must be context-constant: fp(1)={} fp(2^20)={}",
+                        op.name(),
+                        fp(1),
+                        fp(1 << 20)
+                    ));
+                }
+            }
+            "toeplitz" => {
+                if fp(1 << 20) != fp(4096) {
+                    return Err(format!(
+                        "toeplitz state must saturate at the band: fp(4096)={} fp(2^20)={}",
+                        fp(4096),
+                        fp(1 << 20)
+                    ));
+                }
+                if fp(16) >= fp(1 << 20) {
+                    return Err(format!(
+                        "toeplitz ring buffer should still grow below the band: \
+                         fp(16)={} fp(2^20)={}",
+                        fp(16),
+                        fp(1 << 20)
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(format!("{} operators x {} positions", reg.len(), positions.len()))
+}
+
+/// Hand-checkable footprint table over the pinned conformance grid —
+/// every entry is closed-form arithmetic from the operator definitions,
+/// so the checked-in fixture (`rust/tests/golden/footprints.txt`) can be
+/// verified with pencil and paper.
+pub fn footprint_table(reg: &OperatorRegistry) -> String {
+    let mut out = String::new();
+    for op in reg.iter() {
+        for n in [256usize, 1024, 8192] {
+            let spec = WorkloadSpec::new(op.kind(), n);
+            out += &format!("{} n={} bytes={}\n", op.name(), n, op.state_footprint(&spec, n));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::registry;
+
+    #[test]
+    fn memory_workout_passes_pinned_seeds() {
+        for seed in [0, 1, 42] {
+            memory_workout(seed, 300).unwrap();
+        }
+    }
+
+    #[test]
+    fn batcher_fairness_passes_pinned_seeds() {
+        for seed in [0, 1, 42] {
+            batcher_fairness(seed, 300).unwrap();
+        }
+    }
+
+    #[test]
+    fn builtin_footprints_are_monotone_and_shaped() {
+        footprint_monotonicity(registry::global()).unwrap();
+    }
+
+    #[test]
+    fn footprint_table_is_closed_form() {
+        let table = footprint_table(registry::global());
+        // causal KV at n=1024: 2 sides * 1024 tokens * 64 dims * 2 B fp16.
+        assert!(table.contains("causal n=1024 bytes=262144"), "{table}");
+        // retentive d*d f32 accumulator: 64*64*4, context-independent.
+        assert!(table.contains("retentive n=8192 bytes=16384"), "{table}");
+        // toeplitz band cap: 2 * 128 * 64 * 2 at every n >= band.
+        assert!(table.contains("toeplitz n=8192 bytes=32768"), "{table}");
+    }
+
+    #[test]
+    fn conservation_accepts_a_fresh_manager() {
+        let mem = SessionMemory::new(MemoryConfig {
+            page_bytes: 64 * 1024,
+            pool_bytes: 1024 * 1024,
+            beta_eff_gbps: 3.2,
+            spill_setup_ns: 1_500.0,
+        });
+        memory_conservation(&mem).unwrap();
+    }
+}

@@ -1,0 +1,189 @@
+//! Seeded request-stream generation and coordinator replay.
+//!
+//! [`stream`] derives a request sequence purely from a [`SplitMix64`]
+//! seed — no wall clock anywhere — and [`replay`] drives it through a
+//! [`Coordinator`] one request at a time. With the deterministic
+//! coordinator configuration ([`deterministic_coordinator`]: batch size
+//! 1, so every request dispatches immediately in submission order) the
+//! full outcome sequence — operator attribution, simulated span, spill
+//! charging, shed decisions — is a pure function of the seed, which is
+//! what lets the conformance suite assert *exact* equality between two
+//! replays of the same stream.
+
+use anyhow::Result;
+
+use crate::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+use crate::coordinator::{Coordinator, CoordinatorConfig, Request};
+
+use super::prng::SplitMix64;
+
+/// Shape of a generated request stream.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    pub seed: u64,
+    pub requests: usize,
+    /// Session ids are drawn from `[0, sessions)`.
+    pub sessions: u64,
+    pub contexts: Vec<usize>,
+}
+
+impl StreamConfig {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            seed,
+            requests: 48,
+            sessions: 12,
+            contexts: vec![128, 256, 512, 1024, 2048],
+        }
+    }
+}
+
+/// Generate the deterministic request stream for `cfg`.
+pub fn stream(cfg: &StreamConfig) -> Vec<Request> {
+    let mut rng = SplitMix64::new(cfg.seed);
+    (0..cfg.requests)
+        .map(|_| Request {
+            spec: WorkloadSpec::new(*rng.choose(&OperatorKind::ALL), *rng.choose(&cfg.contexts)),
+            session: rng.below(cfg.sessions),
+            inputs: None,
+        })
+        .collect()
+}
+
+/// What one replayed request produced. `PartialEq` over the *exact*
+/// simulated numbers: the simulator is deterministic, so two replays of
+/// one stream must agree bit-for-bit, not approximately.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Outcome {
+    Served {
+        operator: &'static str,
+        backend_ns: f64,
+        spill_ns: f64,
+        batch_size: usize,
+    },
+    /// Refused (session-memory admission control, or a serve error).
+    Shed(String),
+}
+
+/// A coordinator whose replay outcomes depend only on the request stream:
+/// batch size 1 dispatches each request immediately at submission order,
+/// so batching composition — and therefore session LRU order and spill
+/// charging — cannot vary with thread timing. `state_budget_bytes`
+/// bounds the session pool to make spills/sheds reachable in-test.
+pub fn deterministic_coordinator(
+    hw: &NpuConfig,
+    sim: &SimConfig,
+    state_budget_bytes: u64,
+) -> Result<Coordinator> {
+    Coordinator::new(CoordinatorConfig {
+        max_batch: 1,
+        max_wait_ns: 100_000,
+        state_budget_bytes,
+        ..CoordinatorConfig::for_hw(hw.clone(), sim.clone())
+    })
+}
+
+/// Replay `requests` through `coord` sequentially, capturing outcomes.
+pub fn replay(coord: &Coordinator, requests: &[Request]) -> Vec<Outcome> {
+    requests
+        .iter()
+        .map(|r| match coord.submit(r.clone()) {
+            Ok(resp) => Outcome::Served {
+                operator: resp.operator,
+                backend_ns: resp.backend_ns,
+                spill_ns: resp.spill_ns,
+                batch_size: resp.batch_size,
+            },
+            Err(e) => Outcome::Shed(e.to_string()),
+        })
+        .collect()
+}
+
+/// Stable one-line-per-request rendering of a replay (for reports and
+/// golden snapshots).
+pub fn signature(outcomes: &[Outcome]) -> String {
+    let mut out = String::new();
+    for (i, o) in outcomes.iter().enumerate() {
+        match o {
+            Outcome::Served { operator, backend_ns, spill_ns, batch_size } => {
+                out += &format!(
+                    "{i}: ok op={operator} span_ns={backend_ns:.3} \
+                     spill_ns={spill_ns:.3} batch={batch_size}\n"
+                );
+            }
+            Outcome::Shed(why) => out += &format!("{i}: shed {why}\n"),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_is_deterministic_per_seed() {
+        let cfg = StreamConfig::new(7);
+        let (a, b) = (stream(&cfg), stream(&cfg));
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.spec, y.spec);
+            assert_eq!(x.session, y.session);
+        }
+    }
+
+    #[test]
+    fn seeds_change_the_stream() {
+        let a = stream(&StreamConfig::new(1));
+        let b = stream(&StreamConfig::new(2));
+        assert!(a.iter().zip(&b).any(|(x, y)| x.spec != y.spec || x.session != y.session));
+    }
+
+    #[test]
+    fn stream_respects_the_context_menu() {
+        let cfg = StreamConfig::new(3);
+        for r in stream(&cfg) {
+            assert!(cfg.contexts.contains(&r.spec.n));
+            assert!(r.session < cfg.sessions);
+        }
+    }
+
+    #[test]
+    fn replay_serves_a_small_stream() {
+        let hw = NpuConfig::default();
+        let sim = SimConfig::default();
+        let coord = deterministic_coordinator(&hw, &sim, 64 * 1024 * 1024).unwrap();
+        let cfg = StreamConfig { requests: 8, ..StreamConfig::new(5) };
+        let outcomes = replay(&coord, &stream(&cfg));
+        assert_eq!(outcomes.len(), 8);
+        for o in &outcomes {
+            match o {
+                Outcome::Served { backend_ns, batch_size, .. } => {
+                    assert!(*backend_ns > 0.0);
+                    assert_eq!(*batch_size, 1);
+                }
+                Outcome::Shed(why) => panic!("unexpected shed: {why}"),
+            }
+        }
+    }
+
+    #[test]
+    fn over_pool_footprints_are_shed() {
+        let hw = NpuConfig::default();
+        let sim = SimConfig::default();
+        // 4-page pool (256 KiB): causal at n=8192 needs 2 MiB of KV.
+        let coord = deterministic_coordinator(&hw, &sim, 256 * 1024).unwrap();
+        let out = replay(
+            &coord,
+            &[Request {
+                spec: WorkloadSpec::new(OperatorKind::Causal, 8192),
+                session: 1,
+                inputs: None,
+            }],
+        );
+        match &out[0] {
+            Outcome::Shed(why) => assert!(why.contains("admission control"), "{why}"),
+            other => panic!("expected shed, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Conformance suite: the testkit's deterministic checks as `cargo test`
+//! targets — differential serve-vs-direct agreement, seeded invariant
+//! workouts, replay determinism, selftest end-to-end, and the
+//! harness-has-teeth proof (a perturbed cost constant must be detected).
+
+use npuperf::config::{NpuConfig, SimConfig};
+use npuperf::testkit::{self, differential, invariants, workload, SelftestOptions};
+
+const SEEDS: [u64; 3] = [1, 2, 3];
+
+#[test]
+fn differential_serve_vs_direct_is_clean() {
+    let rep =
+        differential::check(&NpuConfig::default(), &SimConfig::default(), &[256, 1024]).unwrap();
+    assert!(rep.is_clean(), "{}", rep.render());
+    assert!(rep.cases > 0);
+}
+
+#[test]
+fn perturbed_cost_constant_is_detected() {
+    // The teeth test: serve on the default config, lower directly on a
+    // config whose DMA descriptor-setup cost was doubled. Every lowering
+    // issues transfers, so the simulated spans must diverge — a harness
+    // that stays green here would also miss a real cost-model regression.
+    let hw = NpuConfig::default();
+    let sim = SimConfig::default();
+    let mut bent = hw.clone();
+    bent.dma_setup_ns *= 2.0;
+    let rep = differential::check_against(&hw, &sim, &bent, &sim, &[512]).unwrap();
+    assert!(!rep.is_clean(), "a doubled dma_setup_ns must be detected");
+    assert!(
+        rep.divergences.iter().any(|d| d.what.contains("cycle counts differ")),
+        "{}",
+        rep.render()
+    );
+}
+
+#[test]
+fn perturbed_sim_config_is_detected() {
+    // Same teeth, different knob: disabling double buffering serializes
+    // compute behind transfers, which must change simulated spans.
+    let hw = NpuConfig::default();
+    let sim = SimConfig::default();
+    let bent = sim.clone().with_double_buffer(false);
+    let rep = differential::check_against(&hw, &sim, &hw, &bent, &[2048]).unwrap();
+    assert!(!rep.is_clean(), "disabling double buffering must be detected");
+}
+
+#[test]
+fn replay_same_seed_is_identical_across_coordinators() {
+    let hw = NpuConfig::default();
+    let sim = SimConfig::default();
+    for seed in SEEDS {
+        let reqs = workload::stream(&workload::StreamConfig::new(seed));
+        let run = || {
+            let coord =
+                workload::deterministic_coordinator(&hw, &sim, 8 * 1024 * 1024).unwrap();
+            workload::replay(&coord, &reqs)
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b, "seed {seed}: two fresh coordinators must agree exactly");
+        assert_eq!(
+            workload::signature(&a),
+            workload::signature(&b),
+            "seed {seed}: rendered signatures must agree too"
+        );
+    }
+}
+
+#[test]
+fn replay_different_seeds_diverge() {
+    let hw = NpuConfig::default();
+    let sim = SimConfig::default();
+    let run = |seed: u64| {
+        let coord = workload::deterministic_coordinator(&hw, &sim, 8 * 1024 * 1024).unwrap();
+        workload::replay(&coord, &workload::stream(&workload::StreamConfig::new(seed)))
+    };
+    assert_ne!(run(1), run(2), "different seeds must produce different outcome streams");
+}
+
+#[test]
+fn memory_invariants_hold_across_seeds() {
+    for seed in SEEDS {
+        invariants::memory_workout(seed, 500).unwrap();
+    }
+}
+
+#[test]
+fn batcher_fairness_holds_across_seeds() {
+    for seed in SEEDS {
+        invariants::batcher_fairness(seed, 500).unwrap();
+    }
+}
+
+#[test]
+fn footprint_curves_keep_their_paper_shapes() {
+    invariants::footprint_monotonicity(npuperf::ops::registry::global()).unwrap();
+}
+
+#[test]
+fn selftest_end_to_end_blesses_then_matches() {
+    let dir = std::env::temp_dir()
+        .join(format!("npuperf-conformance-selftest-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = SelftestOptions {
+        seeds: vec![1],
+        contexts: vec![128, 256],
+        bless: false,
+        golden_dir: Some(dir.clone()),
+    };
+    let hw = NpuConfig::default();
+    let sim = SimConfig::default();
+    let first = testkit::selftest(&hw, &sim, &opts);
+    assert!(first.passed(), "{}", first.render());
+    assert!(first.render().contains("blessed"), "{}", first.render());
+    let second = testkit::selftest(&hw, &sim, &opts);
+    assert!(second.passed(), "{}", second.render());
+    assert!(
+        second.render().contains("matches pinned fixture"),
+        "{}",
+        second.render()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

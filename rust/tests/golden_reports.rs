@@ -1,0 +1,63 @@
+//! Golden snapshot tests for the report layer: pin the rendered output of
+//! the paper-table and sweep/capacity reports under the default
+//! `NpuConfig`/`SimConfig`, so any change to formatting *or* to the
+//! underlying cost model shows up as a reviewable byte diff.
+//!
+//! Regeneration after an intentional change: `NPUPERF_BLESS=1 cargo test`
+//! or `npuperf selftest --bless`, then commit the fixture
+//! (rust/tests/golden/README.md).
+
+use npuperf::config::NpuConfig;
+use npuperf::memory::MemoryConfig;
+use npuperf::ops::registry;
+use npuperf::report::{sweep, tables};
+use npuperf::testkit::golden::{self, Outcome};
+use npuperf::testkit::invariants;
+
+fn check(name: &str, actual: &str) {
+    match golden::compare(name, actual, false) {
+        Ok(_) => {}
+        Err(e) => panic!("{e}"),
+    }
+}
+
+#[test]
+fn table1_matches_golden() {
+    // Table 1 is rendered straight from the hardware description — no
+    // simulation — so this pins the spec sheet and its formatting.
+    check("table1.txt", &tables::table1(&NpuConfig::default()));
+}
+
+#[test]
+fn sweep_report_matches_golden() {
+    let text = sweep::sweep_report(
+        &[512, 2048],
+        &NpuConfig::default(),
+        &npuperf::config::SimConfig::default(),
+    );
+    check("sweep_512_2048.txt", &text);
+}
+
+#[test]
+fn capacity_report_matches_golden() {
+    // from_hw (not calibrated) keeps the fixture independent of the
+    // calibration microbenchmarks' exact β_eff digits.
+    let mem = MemoryConfig::from_hw(&NpuConfig::default());
+    let text = sweep::capacity_report_with(registry::global(), &[512, 8192], &mem);
+    check("capacity_512_8192.txt", &text);
+}
+
+#[test]
+fn footprint_fixture_is_checked_in_and_matches() {
+    // Strict: this fixture ships with the repo (it is hand-computable
+    // closed-form arithmetic), so `Blessed` here means a broken checkout,
+    // not a first run.
+    let table = invariants::footprint_table(registry::global());
+    match golden::compare("footprints.txt", &table, false) {
+        Ok(Outcome::Match) => {}
+        Ok(Outcome::Blessed) => {
+            panic!("footprints.txt was missing — it must be committed with the repo")
+        }
+        Err(e) => panic!("{e}"),
+    }
+}

@@ -4,7 +4,7 @@
 
 use npuperf::config::{OperatorKind, WorkloadSpec};
 use npuperf::coordinator::{
-    BackendKind, Coordinator, CoordinatorConfig, Request,
+    BackendKind, Coordinator, CoordinatorConfig, ManualClock, Request,
 };
 use npuperf::runtime::{Golden, Manifest};
 
@@ -127,6 +127,36 @@ fn session_state_tracked_across_requests() {
     let snap = coord.metrics_snapshot().unwrap();
     assert!(snap.contains("sessions=1"), "one logical session: {snap}");
     assert!(snap.contains("total=4"), "{snap}");
+}
+
+#[test]
+fn injected_clock_makes_serving_metrics_deterministic() {
+    // The serving thread reads time only through the injected clock, so a
+    // frozen ManualClock yields exact uptime/throughput numbers — the
+    // point of the injectable-clock refactor. max_batch=1 dispatches each
+    // request on push, so nothing depends on the (frozen) batching window.
+    let clock = ManualClock::new();
+    let coord = Coordinator::new(CoordinatorConfig {
+        max_batch: 1,
+        max_wait_ns: 100_000,
+        clock: Some(std::sync::Arc::new(clock.clone())),
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    for i in 0..4 {
+        coord
+            .submit(Request {
+                spec: WorkloadSpec::new(OperatorKind::Retentive, 1024),
+                session: i,
+                inputs: None,
+            })
+            .unwrap();
+    }
+    clock.advance_ns(8_000_000_000); // exactly 8 s on the fake clock
+    let snap = coord.metrics_snapshot().unwrap();
+    assert!(snap.contains("uptime_ms=8000.000"), "{snap}");
+    assert!(snap.contains("rps=0.50"), "{snap}");
+    assert!(snap.contains("mean=0.000 ms"), "queue age never ticked: {snap}");
 }
 
 #[test]
