@@ -13,7 +13,9 @@
 //! npuperf rank <N>               # cost-model operator ranking (§V)
 //! npuperf chunking <N>           # chunked-prefill plan sweep (§V)
 //! npuperf validate [dir]         # golden-validate every artifact via PJRT
-//! npuperf serve [dir]            # demo serving loop over the artifacts
+//! npuperf serve [dir] [--requests K --seed S] [--deterministic]
+//!               [--trace-out F] [--metrics-out F] [--events-out F]
+//! npuperf obs <file>             # validate an exported observability artifact
 //! npuperf selftest [--seeds A,B,C] [--contexts A,B] [--bless]
 //! npuperf hw                     # table 1
 //! ```
@@ -399,42 +401,196 @@ pub fn run(args: &[String]) -> Result<String> {
             Ok(out)
         }
         "serve" => {
-            // Positional artifact dir; flags like --hw are not a dir.
-            let dir = rest
-                .first()
-                .filter(|s| !s.starts_with("--"))
-                .map(|s| s.to_string())
-                .unwrap_or_else(|| "artifacts".into());
+            // Positional artifact dir; flags like --hw are not a dir. An
+            // explicit dir must exist (Coordinator::new errors if not);
+            // with no dir, a missing ./artifacts falls back to a
+            // simulation-only deployment instead of failing.
+            let artifact_dir = match rest.first().filter(|s| !s.starts_with("--")) {
+                Some(d) => Some(std::path::PathBuf::from(d)),
+                None => {
+                    let p = std::path::PathBuf::from("artifacts");
+                    p.is_dir().then_some(p)
+                }
+            };
+            let requests_n: Option<usize> = match opt("--requests") {
+                Some(s) => {
+                    let k = s.parse().map_err(|e| anyhow!("bad --requests {s:?}: {e}"))?;
+                    if k == 0 {
+                        bail!("--requests must be positive");
+                    }
+                    Some(k)
+                }
+                None => None,
+            };
+            let seed: u64 = match opt("--seed") {
+                Some(s) => s.parse().map_err(|e| anyhow!("bad --seed {s:?}: {e}"))?,
+                None => 1,
+            };
+            let trace_out = opt("--trace-out").map(str::to_string);
+            let metrics_out = opt("--metrics-out").map(str::to_string);
+            let events_out = opt("--events-out").map(str::to_string);
+            let deterministic = flag("--deterministic");
             // Honor --hw/--sim overrides: the session-memory pool is
             // sized from the configured device, not the default one.
+            let base = CoordinatorConfig::for_hw(hw, sim);
+            // --deterministic mirrors testkit's deterministic
+            // coordinator: batch size 1 (dispatch at submission order)
+            // on a frozen ManualClock, so every latency/queue sample is
+            // exactly zero and the metrics exposition is a pure function
+            // of the seed — what the CI golden snapshot pins.
             let coord = Coordinator::new(CoordinatorConfig {
-                artifact_dir: Some(dir.into()),
-                ..CoordinatorConfig::for_hw(hw, sim)
+                artifact_dir,
+                trace: trace_out.is_some() || events_out.is_some(),
+                max_batch: if deterministic { 1 } else { base.max_batch },
+                max_wait_ns: if deterministic { 100_000 } else { base.max_wait_ns },
+                clock: if deterministic {
+                    Some(std::sync::Arc::new(coordinator::ManualClock::new())
+                        as std::sync::Arc<dyn coordinator::Clock>)
+                } else {
+                    None
+                },
+                ..base
             })?;
-            let mut reqs = Vec::new();
-            for (i, op) in OperatorKind::ALL.iter().enumerate() {
-                for n in [128usize, 256, 512, 2048] {
-                    reqs.push(Request {
-                        spec: WorkloadSpec::new(*op, n),
-                        session: i as u64 * 100 + n as u64,
-                        inputs: None,
-                    });
+            let reqs: Vec<Request> = match requests_n {
+                // Seeded stream: same generator as the conformance suite.
+                Some(k) => crate::testkit::workload::stream(
+                    &crate::testkit::workload::StreamConfig {
+                        requests: k,
+                        ..crate::testkit::workload::StreamConfig::new(seed)
+                    },
+                ),
+                // Legacy demo grid: every operator x a small context menu.
+                None => {
+                    let mut reqs = Vec::new();
+                    for (i, op) in OperatorKind::ALL.iter().enumerate() {
+                        for n in [128usize, 256, 512, 2048] {
+                            reqs.push(Request {
+                                spec: WorkloadSpec::new(*op, n),
+                                session: i as u64 * 100 + n as u64,
+                                inputs: None,
+                            });
+                        }
+                    }
+                    reqs
                 }
-            }
+            };
             let total = reqs.len();
             let t0 = std::time::Instant::now();
-            let responses = coord.submit_all(reqs)?;
+            let pendings = reqs
+                .into_iter()
+                .map(|r| coord.submit_async(r))
+                .collect::<Result<Vec<_>>>()?;
+            let (mut served, mut pjrt, mut shed) = (0usize, 0usize, 0usize);
+            for p in pendings {
+                match p.wait() {
+                    Ok(r) => {
+                        served += 1;
+                        if r.backend == coordinator::BackendKind::Pjrt {
+                            pjrt += 1;
+                        }
+                    }
+                    Err(_) => shed += 1,
+                }
+            }
             let wall = t0.elapsed().as_secs_f64();
-            let pjrt = responses
-                .iter()
-                .filter(|r| r.backend == coordinator::BackendKind::Pjrt)
-                .count();
-            Ok(format!(
-                "served {total} requests in {wall:.2}s ({:.1} req/s) — {pjrt} on PJRT, {} simulated\n\n{}",
-                total as f64 / wall,
-                total - pjrt,
-                coord.metrics_snapshot()?
-            ))
+            let mut out = format!(
+                "served {served}/{total} requests in {wall:.2}s ({:.1} req/s) — \
+                 {pjrt} on PJRT, {} simulated, {shed} shed\n",
+                total as f64 / wall.max(1e-9),
+                served - pjrt,
+            );
+            if trace_out.is_some() || events_out.is_some() {
+                let traces = coord.traces()?;
+                if let Some(path) = &trace_out {
+                    let json = crate::obs::chrome(&traces);
+                    std::fs::write(path, &json)?;
+                    out += &format!(
+                        "wrote merged timeline ({} request spans, {} bytes) to {path} — \
+                         open in chrome://tracing or Perfetto\n",
+                        traces.len(),
+                        json.len()
+                    );
+                }
+                if let Some(path) = &events_out {
+                    let log = crate::obs::jsonl(&traces);
+                    std::fs::write(path, &log)?;
+                    out += &format!("wrote {} JSONL events to {path}\n", log.lines().count());
+                }
+            }
+            if let Some(path) = &metrics_out {
+                let prom = coord.metrics_prometheus()?;
+                std::fs::write(path, &prom)?;
+                let samples = prom
+                    .lines()
+                    .filter(|l| !l.is_empty() && !l.starts_with('#'))
+                    .count();
+                out += &format!("wrote Prometheus exposition ({samples} samples) to {path}\n");
+            }
+            out += "\n";
+            out += &coord.metrics_snapshot()?;
+            Ok(out)
+        }
+        "obs" => {
+            let path = rest
+                .first()
+                .filter(|s| !s.starts_with("--"))
+                .ok_or_else(|| anyhow!("usage: npuperf obs <file>"))?;
+            let data = std::fs::read_to_string(path)
+                .map_err(|e| anyhow!("cannot read {path}: {e}"))?;
+            // Dispatch on extension first (".jsonl" event logs are many
+            // JSON documents, one per line, which a whole-file parse
+            // would reject as trailing content), then on leading byte.
+            let kind = if path.ends_with(".jsonl") {
+                "jsonl"
+            } else if path.ends_with(".json") {
+                "json"
+            } else if path.ends_with(".prom") || path.ends_with(".txt") {
+                "prom"
+            } else {
+                match data.trim_start().chars().next() {
+                    Some('[') | Some('{') => "json",
+                    _ => "prom",
+                }
+            };
+            match kind {
+                "jsonl" => {
+                    let mut events = 0usize;
+                    for (i, line) in data.lines().enumerate() {
+                        if line.trim().is_empty() {
+                            continue;
+                        }
+                        crate::obs::validate_json(line).map_err(|e| {
+                            anyhow!("{path}:{}: invalid JSONL event: {e}", i + 1)
+                        })?;
+                        events += 1;
+                    }
+                    Ok(format!("{path}: OK — {events} valid JSONL events"))
+                }
+                "json" => {
+                    crate::obs::validate_json(&data)
+                        .map_err(|e| anyhow!("{path}: invalid JSON: {e}"))?;
+                    let spans = data.matches("\"ph\":\"X\"").count();
+                    let meta = data.matches("\"ph\":\"M\"").count();
+                    if spans + meta > 0 {
+                        Ok(format!(
+                            "{path}: OK — Chrome trace with {spans} spans, \
+                             {meta} metadata records ({} bytes)",
+                            data.len()
+                        ))
+                    } else {
+                        Ok(format!("{path}: OK — valid JSON ({} bytes)", data.len()))
+                    }
+                }
+                _ => {
+                    let lint = crate::obs::lint_prometheus(&data)
+                        .map_err(|e| anyhow!("{path}: invalid Prometheus exposition: {e}"))?;
+                    Ok(format!(
+                        "{path}: OK — Prometheus exposition with {} samples, \
+                         {} histogram series, {} HELP lines",
+                        lint.samples, lint.histograms, lint.help_lines
+                    ))
+                }
+            }
         }
         other => bail!("unknown command {other:?}\n{HELP}"),
     }
@@ -464,7 +620,16 @@ commands:
   chunking <N>              chunked-prefill plan sweep
   plan-model [N]            whole-LLM deployment feasibility per operator
   validate [dir]            golden-validate AOT artifacts via PJRT
-  serve [dir]               demo serving run over the artifact inventory
+  serve [dir] [--requests K --seed S] [--deterministic]
+        [--trace-out F] [--metrics-out F] [--events-out F]
+                            serving run: seeded request stream (or the demo
+                            grid), optional merged Perfetto timeline, JSONL
+                            event log and Prometheus metrics exposition;
+                            --deterministic freezes the clock for byte-stable
+                            metrics (CI golden snapshots)
+  obs <file>                validate an exported artifact: Chrome trace /
+                            metrics JSON, JSONL event log, or Prometheus
+                            exposition
   hw                        hardware spec (table 1)
 global flags: --hw-config FILE | --hw key=value (repeatable) — what-if hardware";
 
@@ -600,6 +765,93 @@ mod tests {
     fn chunking_reports_optimum() {
         let out = run_cmd(&["chunking", "16384"]).unwrap();
         assert!(out.contains("optimal chunk: 2048"), "{out}");
+    }
+
+    /// Per-test scratch dir (tests run concurrently in one process, so
+    /// file names must not collide across tests).
+    fn scratch(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("npuperf-cli-{}-{tag}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn serve_writes_observability_artifacts() {
+        let dir = scratch("artifacts");
+        let trace = dir.join("serve.trace.json");
+        let prom = dir.join("serve.metrics.prom");
+        let events = dir.join("serve.events.jsonl");
+        let out = run_cmd(&[
+            "serve",
+            "--requests",
+            "8",
+            "--seed",
+            "1",
+            "--deterministic",
+            "--trace-out",
+            trace.to_str().unwrap(),
+            "--metrics-out",
+            prom.to_str().unwrap(),
+            "--events-out",
+            events.to_str().unwrap(),
+        ])
+        .unwrap();
+        assert!(out.contains("served 8/8"), "{out}");
+        assert!(out.contains("wrote merged timeline"), "{out}");
+        assert!(out.contains("Prometheus exposition"), "{out}");
+        // Each artifact passes its own inspector, and the inspector
+        // recognizes the trace as a Chrome trace specifically.
+        for p in [&trace, &events, &prom] {
+            let verdict = run_cmd(&["obs", p.to_str().unwrap()]).unwrap();
+            assert!(verdict.contains("OK"), "{verdict}");
+        }
+        let verdict = run_cmd(&["obs", trace.to_str().unwrap()]).unwrap();
+        assert!(verdict.contains("Chrome trace"), "{verdict}");
+    }
+
+    #[test]
+    fn serve_deterministic_metrics_are_byte_stable() {
+        let dir = scratch("stable");
+        let (a, b) = (dir.join("a.prom"), dir.join("b.prom"));
+        for p in [&a, &b] {
+            run_cmd(&[
+                "serve",
+                "--requests",
+                "6",
+                "--seed",
+                "42",
+                "--deterministic",
+                "--metrics-out",
+                p.to_str().unwrap(),
+            ])
+            .unwrap();
+        }
+        let (ta, tb) =
+            (std::fs::read_to_string(&a).unwrap(), std::fs::read_to_string(&b).unwrap());
+        assert!(!ta.is_empty());
+        assert_eq!(ta, tb, "frozen clock + seeded stream must reproduce bytes");
+    }
+
+    #[test]
+    fn serve_rejects_bad_request_counts() {
+        assert!(run_cmd(&["serve", "--requests", "0"]).is_err());
+        assert!(run_cmd(&["serve", "--requests", "nope"]).is_err());
+        assert!(run_cmd(&["serve", "--seed", "x", "--requests", "1"]).is_err());
+    }
+
+    #[test]
+    fn obs_rejects_malformed_artifacts() {
+        let dir = scratch("malformed");
+        let bad_json = dir.join("bad.json");
+        std::fs::write(&bad_json, "[{\"name\":\"x\",]\n").unwrap();
+        let err = run_cmd(&["obs", bad_json.to_str().unwrap()]).unwrap_err();
+        assert!(err.to_string().contains("invalid JSON"), "{err}");
+        let bad_prom = dir.join("bad.prom");
+        std::fs::write(&bad_prom, "npuperf_x{oops 3\n").unwrap();
+        let err = run_cmd(&["obs", bad_prom.to_str().unwrap()]).unwrap_err();
+        assert!(err.to_string().contains("Prometheus"), "{err}");
+        assert!(run_cmd(&["obs", dir.join("missing.json").to_str().unwrap()]).is_err());
+        assert!(run_cmd(&["obs"]).is_err(), "obs needs a file argument");
     }
 
     #[test]

@@ -1,17 +1,29 @@
-//! Serving metrics: per-operator latency summaries + throughput counters.
+//! Serving metrics: a facade over the [`crate::obs`] metrics registry.
 //!
-//! All time-derived numbers (uptime, throughput) are read off a [`Clock`]
-//! rather than `Instant::now()` directly, so tests drive a [`ManualClock`]
-//! and assert exact throughput/uptime values; production uses the
-//! monotonic [`WallClock`].
+//! All time-derived numbers (uptime, throughput, queue ages) are read off
+//! a [`Clock`] rather than `Instant::now()` directly, so tests drive a
+//! [`ManualClock`] and assert exact values; production uses the monotonic
+//! [`WallClock`].
+//!
+//! Every serving metric lives in one [`MetricsRegistry`]: the human
+//! snapshot, the Prometheus exposition ([`Metrics::prometheus`]), and the
+//! JSON dump ([`Metrics::json`]) all render from the same store and so
+//! cannot disagree. Latency distributions are log-bucketed
+//! [`crate::obs::Histogram`]s — bounded memory per series, unlike the
+//! full-sample `Summary` vectors this module used to keep per operator.
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::OperatorKind;
-use crate::util::stats::Summary;
+use crate::model::Ceilings;
+use crate::npu::ExecReport;
+use crate::obs::{self, Histogram, MetricsRegistry};
+use crate::ops::registry::classify;
+
+use super::router::BackendKind;
+use super::state::StateManager;
 
 /// Monotonic nanosecond time source for the serving stack.
 ///
@@ -75,21 +87,66 @@ impl Clock for ManualClock {
     }
 }
 
-/// Registry of per-operator serving metrics.
+/// Canonical metric names (labels noted per metric). Exported so tests
+/// and the `npuperf obs` command reference the same strings.
+pub mod names {
+    /// Counter `{operator, backend}`.
+    pub const SERVED: &str = "npuperf_requests_served_total";
+    /// Counter `{operator}`.
+    pub const SHED: &str = "npuperf_requests_shed_total";
+    /// Counter `{operator}`.
+    pub const BATCHES: &str = "npuperf_batches_total";
+    /// Histogram `{operator}` — requests per dispatched batch.
+    pub const BATCH_SIZE: &str = "npuperf_batch_size";
+    /// Histogram `{operator}` — enqueue-to-reply, ns.
+    pub const LATENCY: &str = "npuperf_request_latency_ns";
+    /// Histogram `{operator}` — enqueue-to-dispatch, ns.
+    pub const QUEUE: &str = "npuperf_request_queue_ns";
+    /// Histogram `{operator}` — session-memory spill/refill charge, ns.
+    pub const SPILL: &str = "npuperf_request_spill_ns";
+    /// Histogram `{operator, class}` — simulated makespan per batch, ns.
+    pub const SIM_SPAN: &str = "npuperf_sim_span_ns";
+    /// Counter `{operator, class}` — DMA traffic of simulated batches.
+    pub const DMA_BYTES: &str = "npuperf_npu_dma_bytes_total";
+    /// Counter `{operator, class}` — logical ops of simulated batches.
+    pub const LOGICAL_OPS: &str = "npuperf_npu_logical_ops_total";
+    /// Gauge `{operator, class}` — achieved GOP/s over the roofline
+    /// ceiling at the batch's operational intensity.
+    pub const ROOFLINE_UTIL: &str = "npuperf_npu_roofline_utilization";
+    /// Gauges mirrored from the session-memory pool.
+    pub const MEM_SESSIONS: &str = "npuperf_mem_sessions";
+    pub const MEM_RESIDENT_SESSIONS: &str = "npuperf_mem_resident_sessions";
+    pub const MEM_STATE_BYTES: &str = "npuperf_mem_state_bytes";
+    pub const MEM_RESIDENT_BYTES: &str = "npuperf_mem_resident_bytes";
+    pub const MEM_PAGES_USED: &str = "npuperf_mem_pool_pages_used";
+    pub const MEM_PAGES_TOTAL: &str = "npuperf_mem_pool_pages_total";
+    pub const MEM_SPILL_NS: &str = "npuperf_mem_spill_ns";
+    /// Counters mirrored absolutely from [`crate::memory::MemStats`] —
+    /// the pool keeps the running totals; the registry never double
+    /// counts.
+    pub const MEM_EVICTIONS: &str = "npuperf_mem_evictions_total";
+    pub const MEM_SPILLED_BYTES: &str = "npuperf_mem_spilled_bytes_total";
+    pub const MEM_REFILLED_BYTES: &str = "npuperf_mem_refilled_bytes_total";
+    pub const MEM_REJECTED: &str = "npuperf_mem_rejected_total";
+    pub const MEM_SHED_SESSIONS: &str = "npuperf_mem_shed_sessions_total";
+    /// Gauges derived from the injected clock at export time.
+    pub const UPTIME_NS: &str = "npuperf_uptime_ns";
+    pub const RPS: &str = "npuperf_throughput_rps";
+}
+
+fn backend_label(b: BackendKind) -> &'static str {
+    match b {
+        BackendKind::Pjrt => "pjrt",
+        BackendKind::Simulate => "simulate",
+    }
+}
+
+/// Registry of serving metrics, fed by the serve loop.
 #[derive(Debug)]
 pub struct Metrics {
     clock: Arc<dyn Clock>,
     start_ns: u64,
-    latency_ns: HashMap<OperatorKind, Summary>,
-    served: HashMap<OperatorKind, u64>,
-    pub batches: u64,
-    pub pjrt_requests: u64,
-    pub simulated_requests: u64,
-    /// Requests refused because their state footprint could not be paged
-    /// into the session-memory pool. (Eviction/spill counters live in
-    /// [`crate::memory::MemStats`] — one source of truth, surfaced by
-    /// the coordinator's snapshot.)
-    pub shed_requests: u64,
+    registry: MetricsRegistry,
 }
 
 impl Default for Metrics {
@@ -106,16 +163,34 @@ impl Metrics {
     /// Metrics driven by an external time source (tests: [`ManualClock`]).
     pub fn with_clock(clock: Arc<dyn Clock>) -> Self {
         let start_ns = clock.now_ns();
-        Self {
-            clock,
-            start_ns,
-            latency_ns: HashMap::new(),
-            served: HashMap::new(),
-            batches: 0,
-            pjrt_requests: 0,
-            simulated_requests: 0,
-            shed_requests: 0,
-        }
+        let mut registry = MetricsRegistry::new();
+        registry.describe(names::SERVED, "Requests served, by operator and backend");
+        registry.describe(names::SHED, "Requests shed by session-memory admission control");
+        registry.describe(names::BATCHES, "Batches dispatched, by operator");
+        registry.describe(names::BATCH_SIZE, "Requests per dispatched batch");
+        registry.describe(names::LATENCY, "Enqueue-to-reply latency, ns");
+        registry.describe(names::QUEUE, "Enqueue-to-dispatch queue age, ns");
+        registry.describe(names::SPILL, "Session-memory spill/refill charge per request, ns");
+        registry.describe(names::SIM_SPAN, "Simulated NPU makespan per batch, ns");
+        registry.describe(names::DMA_BYTES, "DMA bytes moved by simulated batches");
+        registry.describe(names::LOGICAL_OPS, "Logical ops executed by simulated batches");
+        registry
+            .describe(names::ROOFLINE_UTIL, "Achieved GOP/s over the roofline ceiling (0..1)");
+        registry.describe(names::MEM_SESSIONS, "Tracked sessions (resident + spilled)");
+        registry.describe(names::MEM_RESIDENT_SESSIONS, "Sessions resident in the pool");
+        registry.describe(names::MEM_STATE_BYTES, "Total tracked session-state bytes");
+        registry.describe(names::MEM_RESIDENT_BYTES, "Resident session-state bytes");
+        registry.describe(names::MEM_PAGES_USED, "Session-memory pool pages in use");
+        registry.describe(names::MEM_PAGES_TOTAL, "Session-memory pool page capacity");
+        registry.describe(names::MEM_SPILL_NS, "Cumulative spill+refill DMA time, ns");
+        registry.describe(names::MEM_EVICTIONS, "Sessions spilled out under pressure");
+        registry.describe(names::MEM_SPILLED_BYTES, "Bytes written out by evictions");
+        registry.describe(names::MEM_REFILLED_BYTES, "Bytes paged back in on refills");
+        registry.describe(names::MEM_REJECTED, "Admissions refused by the pool");
+        registry.describe(names::MEM_SHED_SESSIONS, "Spilled sessions dropped by capacity GC");
+        registry.describe(names::UPTIME_NS, "Serve-loop uptime on the injected clock, ns");
+        registry.describe(names::RPS, "Requests per second since startup");
+        Self { clock, start_ns, registry }
     }
 
     /// Current clock reading (same source throughput uses).
@@ -128,21 +203,116 @@ impl Metrics {
         self.clock.now_ns().saturating_sub(self.start_ns)
     }
 
-    pub fn record(&mut self, op: OperatorKind, latency_ns: f64) {
-        self.latency_ns.entry(op).or_default().push(latency_ns);
-        *self.served.entry(op).or_insert(0) += 1;
+    /// One dispatched batch of `size` requests.
+    pub fn record_batch(&mut self, op: OperatorKind, size: usize) {
+        self.registry.inc(names::BATCHES, &[("operator", op.name())], 1);
+        self.registry.observe(names::BATCH_SIZE, &[("operator", op.name())], size as f64);
+    }
+
+    /// One served request: queue age, spill charge, end-to-end latency.
+    pub fn record_request(
+        &mut self,
+        op: OperatorKind,
+        backend: BackendKind,
+        queue_ns: u64,
+        spill_ns: f64,
+        latency_ns: f64,
+    ) {
+        let op_label = [("operator", op.name())];
+        self.registry.inc(
+            names::SERVED,
+            &[("operator", op.name()), ("backend", backend_label(backend))],
+            1,
+        );
+        self.registry.observe(names::LATENCY, &op_label, latency_ns);
+        self.registry.observe(names::QUEUE, &op_label, queue_ns as f64);
+        self.registry.observe(names::SPILL, &op_label, spill_ns);
+    }
+
+    /// One request refused by session-memory admission control.
+    pub fn record_shed(&mut self, op: OperatorKind) {
+        self.registry.inc(names::SHED, &[("operator", op.name())], 1);
+    }
+
+    /// Cost-model metrics for one simulated batch: DMA traffic, logical
+    /// ops, makespan, and achieved-vs-roofline utilization, labeled by
+    /// operator and the paper's [`crate::ops::BoundClass`] taxonomy.
+    pub fn record_sim(&mut self, op: OperatorKind, report: &ExecReport, ceilings: &Ceilings) {
+        let class = classify(report).label();
+        let labels = [("class", class), ("operator", op.name())];
+        self.registry.inc(names::DMA_BYTES, &labels, report.dma_bytes);
+        self.registry.inc(names::LOGICAL_OPS, &labels, report.logical_ops);
+        self.registry.observe(names::SIM_SPAN, &labels, report.span_ns);
+        self.registry.set_gauge(
+            names::ROOFLINE_UTIL,
+            &labels,
+            report.roofline_utilization(ceilings.pi_eff_gops, ceilings.beta_eff_gbps),
+        );
+    }
+
+    /// Mirror the session-memory pool into the registry. [`MemStats`]
+    /// keeps the running totals; this copies them absolutely
+    /// ([`MetricsRegistry::set_counter`]) so there is exactly one
+    /// counting site for spills and evictions.
+    ///
+    /// [`MemStats`]: crate::memory::MemStats
+    pub fn observe_memory(&mut self, state: &StateManager) {
+        let stats = state.stats();
+        self.registry.set_gauge(names::MEM_SESSIONS, &[], state.len() as f64);
+        self.registry
+            .set_gauge(names::MEM_RESIDENT_SESSIONS, &[], state.resident_sessions() as f64);
+        self.registry.set_gauge(names::MEM_STATE_BYTES, &[], state.total_bytes() as f64);
+        self.registry.set_gauge(names::MEM_RESIDENT_BYTES, &[], state.resident_bytes() as f64);
+        self.registry.set_gauge(names::MEM_PAGES_USED, &[], state.pages_in_use() as f64);
+        self.registry.set_gauge(names::MEM_PAGES_TOTAL, &[], state.pool_pages() as f64);
+        self.registry.set_gauge(names::MEM_SPILL_NS, &[], stats.total_spill_ns());
+        self.registry.set_counter(names::MEM_EVICTIONS, &[], stats.evictions);
+        self.registry.set_counter(names::MEM_SPILLED_BYTES, &[], stats.spilled_bytes);
+        self.registry.set_counter(names::MEM_REFILLED_BYTES, &[], stats.refilled_bytes);
+        self.registry.set_counter(names::MEM_REJECTED, &[], stats.rejected);
+        self.registry.set_counter(names::MEM_SHED_SESSIONS, &[], stats.shed_sessions);
+    }
+
+    /// Refresh the clock-derived gauges (uptime, throughput) so an export
+    /// reflects the moment it was taken.
+    fn sync_derived(&mut self) {
+        self.registry.set_gauge(names::UPTIME_NS, &[], self.uptime_ns() as f64);
+        self.registry.set_gauge(names::RPS, &[], self.throughput_rps());
     }
 
     pub fn served(&self, op: OperatorKind) -> u64 {
-        self.served.get(&op).copied().unwrap_or(0)
+        self.registry.sum_counters(names::SERVED, &[("operator", op.name())])
     }
 
     pub fn total_served(&self) -> u64 {
-        self.served.values().sum()
+        self.registry.sum_counters(names::SERVED, &[])
     }
 
-    pub fn latency(&self, op: OperatorKind) -> Option<&Summary> {
-        self.latency_ns.get(&op)
+    pub fn batches(&self) -> u64 {
+        self.registry.sum_counters(names::BATCHES, &[])
+    }
+
+    pub fn shed_requests(&self) -> u64 {
+        self.registry.sum_counters(names::SHED, &[])
+    }
+
+    pub fn pjrt_requests(&self) -> u64 {
+        self.registry.sum_counters(names::SERVED, &[("backend", "pjrt")])
+    }
+
+    pub fn simulated_requests(&self) -> u64 {
+        self.registry.sum_counters(names::SERVED, &[("backend", "simulate")])
+    }
+
+    /// Latency histogram for one operator (None before its first reply).
+    pub fn latency(&self, op: OperatorKind) -> Option<&Histogram> {
+        self.registry.histogram(names::LATENCY, &[("operator", op.name())])
+    }
+
+    /// The underlying registry (conformance tests assert the expositions
+    /// against it directly).
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.registry
     }
 
     /// Requests per second since construction.
@@ -155,32 +325,73 @@ impl Metrics {
         }
     }
 
-    /// Human-readable snapshot (one line per operator).
+    /// Prometheus text exposition of every metric (refreshes the derived
+    /// gauges first).
+    pub fn prometheus(&mut self) -> String {
+        self.sync_derived();
+        obs::export::prometheus(&self.registry)
+    }
+
+    /// JSON snapshot of every metric (refreshes the derived gauges
+    /// first).
+    pub fn json(&mut self) -> String {
+        self.sync_derived();
+        obs::export::json(&self.registry)
+    }
+
+    /// Human-readable snapshot: one aligned latency row per operator
+    /// (mean/p50/p95/p99/max in ms), the throughput totals line, and —
+    /// once [`Metrics::observe_memory`] has run — the session-memory
+    /// line, single-sourced from [`crate::memory::MemStats`].
     pub fn snapshot(&self) -> String {
         let mut out = String::new();
-        let mut ops: Vec<_> = self.latency_ns.keys().copied().collect();
-        ops.sort();
-        for op in ops {
-            let s = &self.latency_ns[&op];
+        let ops = self.registry.histogram_label_values(names::LATENCY, "operator");
+        if !ops.is_empty() {
             out += &format!(
-                "{:<10} served={:<5} mean={:.3} ms  p50={:.3} ms  p99={:.3} ms\n",
-                op.name(),
-                self.served(op),
-                s.mean() / 1e6,
-                s.median() / 1e6,
-                s.percentile(99.0) / 1e6,
+                "{:<10} {:>6} {:>10} {:>10} {:>10} {:>10} {:>10}\n",
+                "operator", "served", "mean ms", "p50 ms", "p95 ms", "p99 ms", "max ms"
+            );
+        }
+        for op in &ops {
+            let Some(h) = self.registry.histogram(names::LATENCY, &[("operator", op)]) else {
+                continue;
+            };
+            out += &format!(
+                "{:<10} {:>6} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3}\n",
+                op,
+                h.count(),
+                h.mean() / 1e6,
+                h.quantile(50.0) / 1e6,
+                h.quantile(95.0) / 1e6,
+                h.quantile(99.0) / 1e6,
+                h.max() / 1e6,
             );
         }
         out += &format!(
             "batches={} pjrt={} simulated={} total={} shed={} uptime_ms={:.3} rps={:.2}\n",
-            self.batches,
-            self.pjrt_requests,
-            self.simulated_requests,
+            self.batches(),
+            self.pjrt_requests(),
+            self.simulated_requests(),
             self.total_served(),
-            self.shed_requests,
+            self.shed_requests(),
             self.uptime_ns() as f64 / 1e6,
             self.throughput_rps(),
         );
+        if self.registry.gauge(names::MEM_SESSIONS, &[]).is_some() {
+            let g = |name| self.registry.gauge(name, &[]).unwrap_or(0.0);
+            out += &format!(
+                "sessions={} resident={} state_bytes={} resident_bytes={} pages={}/{} \
+                 evictions={} spill_ms={:.3}\n",
+                g(names::MEM_SESSIONS) as u64,
+                g(names::MEM_RESIDENT_SESSIONS) as u64,
+                g(names::MEM_STATE_BYTES) as u64,
+                g(names::MEM_RESIDENT_BYTES) as u64,
+                g(names::MEM_PAGES_USED) as u64,
+                g(names::MEM_PAGES_TOTAL) as u64,
+                self.registry.counter(names::MEM_EVICTIONS, &[]),
+                g(names::MEM_SPILL_NS) / 1e6,
+            );
+        }
         out
     }
 }
@@ -192,32 +403,63 @@ mod tests {
     #[test]
     fn records_and_summarizes() {
         let mut m = Metrics::new();
-        m.record(OperatorKind::Causal, 1e6);
-        m.record(OperatorKind::Causal, 3e6);
-        m.record(OperatorKind::Linear, 5e5);
+        m.record_request(OperatorKind::Causal, BackendKind::Simulate, 0, 0.0, 1e6);
+        m.record_request(OperatorKind::Causal, BackendKind::Simulate, 0, 0.0, 3e6);
+        m.record_request(OperatorKind::Linear, BackendKind::Simulate, 0, 0.0, 5e5);
         assert_eq!(m.served(OperatorKind::Causal), 2);
         assert_eq!(m.total_served(), 3);
-        let s = m.latency(OperatorKind::Causal).unwrap();
-        assert_eq!(s.mean(), 2e6);
+        assert_eq!(m.simulated_requests(), 3);
+        assert_eq!(m.pjrt_requests(), 0);
+        let h = m.latency(OperatorKind::Causal).unwrap();
+        assert_eq!(h.mean(), 2e6);
+        assert_eq!(h.max(), 3e6);
     }
 
     #[test]
-    fn snapshot_mentions_all_ops() {
+    fn snapshot_rows_are_aligned_and_complete() {
         let mut m = Metrics::new();
-        m.record(OperatorKind::Toeplitz, 1e5);
-        m.record(OperatorKind::Fourier, 2e5);
+        m.record_request(OperatorKind::Toeplitz, BackendKind::Simulate, 0, 0.0, 1e5);
+        m.record_request(OperatorKind::Fourier, BackendKind::Simulate, 0, 0.0, 2e5);
         let snap = m.snapshot();
-        assert!(snap.contains("toeplitz"));
-        assert!(snap.contains("fourier"));
-        assert!(snap.contains("total=2"));
+        let header = snap.lines().next().unwrap();
+        assert!(header.starts_with("operator"), "{snap}");
+        for col in ["served", "mean ms", "p50 ms", "p95 ms", "p99 ms", "max ms"] {
+            assert!(header.contains(col), "missing column {col}: {snap}");
+        }
+        // Operators render in sorted order, one aligned row each, all
+        // rows the same width as the header.
+        let rows: Vec<&str> = snap.lines().skip(1).take(2).collect();
+        assert!(rows[0].starts_with("fourier"), "{snap}");
+        assert!(rows[1].starts_with("toeplitz"), "{snap}");
+        for row in rows {
+            assert_eq!(row.len(), header.len(), "misaligned row: {row:?}");
+        }
+        assert!(snap.contains("total=2"), "{snap}");
     }
 
     #[test]
     fn snapshot_reports_shed_requests() {
         let mut m = Metrics::new();
-        m.shed_requests = 1;
+        m.record_shed(OperatorKind::Causal);
         let snap = m.snapshot();
         assert!(snap.contains("shed=1"), "{snap}");
+    }
+
+    #[test]
+    fn snapshot_surfaces_quantiles_per_operator() {
+        let mut m = Metrics::new();
+        for _ in 0..10 {
+            // Equal samples make every reported quantile exact: 7 ms.
+            m.record_request(OperatorKind::Causal, BackendKind::Simulate, 0, 0.0, 7e6);
+        }
+        let snap = m.snapshot();
+        let row = snap.lines().find(|l| l.starts_with("causal")).unwrap();
+        let cols: Vec<&str> = row.split_whitespace().collect();
+        assert_eq!(cols[0], "causal");
+        assert_eq!(cols[1], "10");
+        for c in &cols[2..] {
+            assert_eq!(*c, "7.000", "mean/p50/p95/p99/max all exact: {row}");
+        }
     }
 
     #[test]
@@ -225,15 +467,18 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.total_served(), 0);
         assert!(m.latency(OperatorKind::Causal).is_none());
+        let snap = m.snapshot();
+        assert!(!snap.contains("operator "), "no table without samples: {snap}");
+        assert!(snap.contains("total=0"), "{snap}");
     }
 
     #[test]
     fn manual_clock_gives_exact_throughput() {
         let clock = ManualClock::new();
         let mut m = Metrics::with_clock(Arc::new(clock.clone()));
-        m.record(OperatorKind::Causal, 1e6);
-        m.record(OperatorKind::Causal, 1e6);
-        m.record(OperatorKind::Linear, 1e6);
+        m.record_request(OperatorKind::Causal, BackendKind::Simulate, 0, 0.0, 1e6);
+        m.record_request(OperatorKind::Causal, BackendKind::Simulate, 0, 0.0, 1e6);
+        m.record_request(OperatorKind::Linear, BackendKind::Simulate, 0, 0.0, 1e6);
         assert_eq!(m.throughput_rps(), 0.0, "no time has passed");
         clock.advance_ns(2_000_000_000);
         assert_eq!(m.uptime_ns(), 2_000_000_000);
@@ -259,5 +504,45 @@ mod tests {
         let a = c.now_ns();
         let b = c.now_ns();
         assert!(b >= a);
+    }
+
+    #[test]
+    fn prometheus_and_snapshot_read_the_same_registry() {
+        let clock = ManualClock::new();
+        let mut m = Metrics::with_clock(Arc::new(clock.clone()));
+        m.record_batch(OperatorKind::Causal, 2);
+        m.record_request(OperatorKind::Causal, BackendKind::Simulate, 10, 0.0, 1e6);
+        m.record_request(OperatorKind::Causal, BackendKind::Simulate, 10, 0.0, 1e6);
+        clock.advance_ns(1_000_000_000);
+        let prom = m.prometheus();
+        assert!(
+            prom.contains(
+                r#"npuperf_requests_served_total{backend="simulate",operator="causal"} 2"#
+            ),
+            "{prom}"
+        );
+        assert!(prom.contains(r#"npuperf_batches_total{operator="causal"} 1"#), "{prom}");
+        assert!(prom.contains("npuperf_uptime_ns 1000000000"), "{prom}");
+        assert!(prom.contains("npuperf_throughput_rps 2"), "{prom}");
+        crate::obs::lint_prometheus(&prom).expect("exposition lints clean");
+        let json = m.json();
+        crate::obs::validate_json(&json).expect("json snapshot parses");
+    }
+
+    #[test]
+    fn sim_metrics_carry_bound_class_labels() {
+        let hw = crate::config::NpuConfig::default();
+        let sim = crate::config::SimConfig::default();
+        let spec = crate::config::WorkloadSpec::new(OperatorKind::Causal, 1024);
+        let report = crate::npu::run(&crate::ops::lower(&spec, &hw, &sim), &hw, &sim);
+        let ceilings = crate::model::calibrate(&hw, &sim);
+        let mut m = Metrics::new();
+        m.record_sim(OperatorKind::Causal, &report, &ceilings);
+        let class = classify(&report).label();
+        let labels = [("class", class), ("operator", "causal")];
+        assert_eq!(m.registry().counter(names::DMA_BYTES, &labels), report.dma_bytes);
+        assert_eq!(m.registry().counter(names::LOGICAL_OPS, &labels), report.logical_ops);
+        let util = m.registry().gauge(names::ROOFLINE_UTIL, &labels).unwrap();
+        assert!(util > 0.0 && util <= 1.5, "roofline utilization plausible: {util}");
     }
 }

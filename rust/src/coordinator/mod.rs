@@ -33,6 +33,6 @@ pub use batcher::{Batch, Batcher};
 pub use chunking::{optimal_chunk, ChunkPlan};
 pub use metrics::{Clock, ManualClock, Metrics, WallClock};
 pub use router::{BackendKind, Router};
-pub use server::{Coordinator, CoordinatorConfig, Request, Response};
+pub use server::{Coordinator, CoordinatorConfig, Pending, Request, Response};
 pub use state::{SessionKind, StateManager};
 pub use workload_gen::{generate, GenRequest, Profile};

@@ -1,11 +1,11 @@
 //! The coordinator itself: request intake → dynamic batching → routed
-//! dispatch (PJRT executor thread or NPU simulator) → metrics.
+//! dispatch (PJRT executor thread or NPU simulator) → metrics + tracing.
 //!
 //! Synchronous request API over a background serving thread: callers get a
 //! [`Response`] per request; the serving loop owns the batcher, router,
-//! state manager and metrics. The PJRT runtime (when artifacts are
-//! available) is confined to its own executor thread — the coordinator
-//! only holds the cloneable channel handle.
+//! state manager, metrics, and the per-request [`Tracer`]. The PJRT
+//! runtime (when artifacts are available) is confined to its own executor
+//! thread — the coordinator only holds the cloneable channel handle.
 //!
 //! Simulated batches are lowered through the [operator
 //! registry](crate::ops::registry): the serve loop resolves the batch's
@@ -15,6 +15,12 @@
 //! ([`crate::ops::registry::init_global`] at startup) therefore changes
 //! what every kind serves — including swapping in a new operator — with
 //! zero coordinator changes.
+//!
+//! With `trace: true` every request accrues a span tree (queued → lower →
+//! admission → backend → respond, stamped on the injected [`Clock`], with
+//! the simulator's per-engine spans nested under the backend stage);
+//! [`Coordinator::traces`] hands the completed traces out for
+//! [`crate::obs::export::chrome`] to merge into one timeline.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -23,7 +29,9 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, Result};
 
 use crate::config::{NpuConfig, SimConfig, WorkloadSpec};
+use crate::model;
 use crate::npu::{self, ExecReport};
+use crate::obs::{engine_spans, RequestTrace, Tracer};
 use crate::ops::registry;
 use crate::runtime::executor::{Executor, ExecutorHandle};
 use crate::runtime::Tensor;
@@ -61,6 +69,13 @@ pub struct Response {
     /// previously spilled state back in (priced at the calibrated
     /// effective DMA ceiling). Zero when the pool is uncontended.
     pub spill_ns: f64,
+    /// Enqueue-to-dispatch age on the injected [`Clock`], ns — how long
+    /// the request sat in the batching window. Exactly assertable under
+    /// a [`super::ManualClock`].
+    pub queue_ns: u64,
+    /// Trace identity of this request (also the span-tree key when the
+    /// coordinator runs with `trace: true`).
+    pub trace_id: u64,
     /// Full simulator report (simulate path only).
     pub sim_report: Option<ExecReport>,
     /// Batch size this request was served in.
@@ -88,6 +103,12 @@ pub struct CoordinatorConfig {
     /// after each batch — they re-prefill if they return — so a
     /// long-lived server's session map stays bounded.
     pub max_tracked_sessions: usize,
+    /// Collect per-request span trees (see [`Coordinator::traces`]).
+    /// Off by default: the untraced serve path pays one branch.
+    pub trace: bool,
+    /// Completed traces kept in memory; older requests beyond this are
+    /// counted as dropped rather than stored.
+    pub trace_capacity: usize,
     /// Time source for queue ages, batching windows, uptime and
     /// throughput. `None` ⇒ monotonic [`WallClock`]; tests inject a
     /// [`super::ManualClock`] for deterministic latency/throughput
@@ -117,6 +138,8 @@ impl CoordinatorConfig {
             max_batch: 8,
             max_wait_ns: 2_000_000, // 2 ms batching window
             max_tracked_sessions: 65_536,
+            trace: false,
+            trace_capacity: 4096,
             clock: None,
         }
     }
@@ -133,7 +156,22 @@ struct Job {
 enum Ctl {
     Submit(Job),
     Snapshot(mpsc::Sender<String>),
+    Prometheus(mpsc::Sender<String>),
+    JsonMetrics(mpsc::Sender<String>),
+    Traces(mpsc::Sender<Vec<RequestTrace>>),
     Shutdown,
+}
+
+/// An in-flight request handed back by [`Coordinator::submit_async`].
+pub struct Pending {
+    rx: mpsc::Receiver<Result<Response>>,
+}
+
+impl Pending {
+    /// Block until the serve loop replies.
+    pub fn wait(self) -> Result<Response> {
+        self.rx.recv().map_err(|_| anyhow!("coordinator dropped reply"))?
+    }
 }
 
 /// The L3 coordinator.
@@ -169,32 +207,55 @@ impl Coordinator {
 
     /// Submit a request and wait for its response.
     pub fn submit(&self, request: Request) -> Result<Response> {
+        self.submit_async(request)?.wait()
+    }
+
+    /// Submit a request without waiting: the caller holds a [`Pending`]
+    /// and can keep driving the clock (or submitting) while the request
+    /// sits in the batching window.
+    pub fn submit_async(&self, request: Request) -> Result<Pending> {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(Ctl::Submit(Job { request, reply, enqueued_ns: 0 }))
             .map_err(|_| anyhow!("coordinator stopped"))?;
-        rx.recv().map_err(|_| anyhow!("coordinator dropped reply"))?
+        Ok(Pending { rx })
     }
 
     /// Submit many requests concurrently; preserves input order.
     pub fn submit_all(&self, requests: Vec<Request>) -> Result<Vec<Response>> {
-        let mut rxs = Vec::with_capacity(requests.len());
+        let mut pending = Vec::with_capacity(requests.len());
         for request in requests {
-            let (reply, rx) = mpsc::channel();
-            self.tx
-                .send(Ctl::Submit(Job { request, reply, enqueued_ns: 0 }))
-                .map_err(|_| anyhow!("coordinator stopped"))?;
-            rxs.push(rx);
+            pending.push(self.submit_async(request)?);
         }
-        rxs.into_iter()
-            .map(|rx| rx.recv().map_err(|_| anyhow!("coordinator dropped reply"))?)
-            .collect()
+        pending.into_iter().map(|p| p.wait()).collect()
     }
 
-    /// Metrics snapshot (formatted).
+    /// Metrics snapshot (formatted for humans).
     pub fn metrics_snapshot(&self) -> Result<String> {
+        self.fetch(Ctl::Snapshot)
+    }
+
+    /// Prometheus text exposition of every serving metric.
+    pub fn metrics_prometheus(&self) -> Result<String> {
+        self.fetch(Ctl::Prometheus)
+    }
+
+    /// JSON snapshot of every serving metric.
+    pub fn metrics_json(&self) -> Result<String> {
+        self.fetch(Ctl::JsonMetrics)
+    }
+
+    /// Completed request traces (empty unless configured with
+    /// `trace: true`).
+    pub fn traces(&self) -> Result<Vec<RequestTrace>> {
         let (tx, rx) = mpsc::channel();
-        self.tx.send(Ctl::Snapshot(tx)).map_err(|_| anyhow!("coordinator stopped"))?;
+        self.tx.send(Ctl::Traces(tx)).map_err(|_| anyhow!("coordinator stopped"))?;
+        rx.recv().map_err(|_| anyhow!("coordinator dropped reply"))
+    }
+
+    fn fetch(&self, make: impl FnOnce(mpsc::Sender<String>) -> Ctl) -> Result<String> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(make(tx)).map_err(|_| anyhow!("coordinator stopped"))?;
         rx.recv().map_err(|_| anyhow!("coordinator dropped reply"))
     }
 }
@@ -217,6 +278,10 @@ fn serve_loop(
     let clock: Arc<dyn Clock> = cfg.clock.clone().unwrap_or_else(|| Arc::new(WallClock::new()));
     let mut batcher = Batcher::new(cfg.max_batch, cfg.max_wait_ns);
     let mut metrics = Metrics::with_clock(clock.clone());
+    let mut tracer = Tracer::new(cfg.trace, cfg.trace_capacity);
+    // Roofline ceilings for the achieved-utilization gauge, calibrated
+    // once against this deployment's hardware model.
+    let ceilings = model::calibrate(&cfg.hw, &cfg.sim);
     // Spills/refills are priced with the same calibrated beta_eff the
     // roofline reports, so eviction time on responses is commensurate
     // with simulated operator latencies.
@@ -232,30 +297,46 @@ fn serve_loop(
     let dispatch = |batch: super::batcher::Batch,
                     jobs: &mut std::collections::HashMap<u64, Job>,
                     metrics: &mut Metrics,
-                    state: &mut StateManager| {
-        metrics.batches += 1;
+                    state: &mut StateManager,
+                    tracer: &mut Tracer| {
+        let dispatch_ns = clock_d.now_ns();
         let backend = router.route(&batch.spec);
         let size = batch.request_ids.len();
+        metrics.record_batch(batch.spec.op, size);
         // Simulate path: resolve the batch's operator through the registry
         // and lower once per batch signature. A kind missing from a custom
         // registry leaves this as None and each request in the batch gets
         // an error reply — never a panic on the long-lived serving thread.
         // The PJRT path never touches the registry: it executes a
         // precompiled artifact keyed by the workload kind.
-        let (sim_operator, sim_report) = if backend == BackendKind::Simulate {
-            match registry::global().try_for_kind(batch.spec.op) {
-                Some(op_impl) => {
-                    let g = op_impl.lower(&batch.spec, &cfg.hw, &cfg.sim);
-                    (Some(op_impl.name()), Some(npu::run(&g, &cfg.hw, &cfg.sim)))
-                }
-                None => (None, None),
-            }
+        let sim = if backend == BackendKind::Simulate {
+            registry::global().try_for_kind(batch.spec.op).map(|op_impl| {
+                let lower_start_ns = clock_d.now_ns();
+                let g = op_impl.lower(&batch.spec, &cfg.hw, &cfg.sim);
+                let strace = npu::simulate(&g, &cfg.hw, &cfg.sim);
+                let report = ExecReport::from_trace(&g, &strace);
+                let lower_end_ns = clock_d.now_ns();
+                metrics.record_sim(batch.spec.op, &report, &ceilings);
+                let spans =
+                    if tracer.enabled() { engine_spans(&g, &strace) } else { Vec::new() };
+                (op_impl.name(), report, spans, lower_start_ns, lower_end_ns)
+            })
         } else {
-            (None, None)
+            None
         };
         for id in batch.request_ids {
             let Some(job) = jobs.remove(&id) else { continue };
             let spec = job.request.spec;
+            let queue_ns = dispatch_ns.saturating_sub(job.enqueued_ns);
+            tracer.stage(id, "queued", job.enqueued_ns, dispatch_ns);
+            // The request timeline cursor: real clock until the backend,
+            // then dilated by model time (spill charge, simulated
+            // makespan) so nested engine spans tile their stage exactly.
+            let mut cursor = dispatch_ns;
+            if let Some((_, _, _, l0, l1)) = &sim {
+                tracer.stage(id, "lower", *l0, *l1);
+                cursor = *l1;
+            }
             // Admission control: page the session's state in before the
             // request runs (`admit` never evicts the session it is
             // admitting; explicit pinning is the hook for concurrent
@@ -265,9 +346,16 @@ fn serve_loop(
             let session = job.request.session;
             state.open(session, spec.op, spec.d_head, spec.d_state);
             let spill_ns = match state.touch(session, spec.n) {
-                Ok(adm) => adm.total_ns(),
+                Ok(adm) => {
+                    let ns = adm.total_ns();
+                    tracer.stage(id, "admission", cursor, cursor + ns as u64);
+                    cursor += ns as u64;
+                    ns
+                }
                 Err(e) => {
-                    metrics.shed_requests += 1;
+                    metrics.record_shed(spec.op);
+                    tracer.stage(id, "admission", cursor, cursor);
+                    tracer.finish(id, "shed");
                     let _ = job.reply.send(Err(anyhow!(
                         "request shed by session-memory admission control: {e}"
                     )));
@@ -289,7 +377,9 @@ fn serve_loop(
                         inputs,
                     ) {
                         Ok(out) => {
-                            metrics.pjrt_requests += 1;
+                            tracer.set_operator(id, spec.op.name());
+                            tracer.stage(id, "pjrt-execute", cursor, cursor + out.exec_ns as u64);
+                            cursor += out.exec_ns as u64;
                             Ok(Response {
                                 spec,
                                 // The artifact is a precompiled build of the
@@ -300,6 +390,8 @@ fn serve_loop(
                                 backend,
                                 backend_ns: out.exec_ns,
                                 spill_ns,
+                                queue_ns,
+                                trace_id: id,
                                 outputs: Some(out.outputs),
                                 sim_report: None,
                                 batch_size: size,
@@ -308,27 +400,42 @@ fn serve_loop(
                         Err(e) => Err(e),
                     }
                 }
-                BackendKind::Simulate => match (sim_operator, sim_report.as_ref()) {
-                    (Some(operator), Some(report)) => {
-                        metrics.simulated_requests += 1;
+                BackendKind::Simulate => match &sim {
+                    Some((operator, report, spans, _, _)) => {
+                        let operator = *operator;
+                        tracer.set_operator(id, operator);
+                        tracer.stage(id, "npu-simulate", cursor, cursor + report.span_ns as u64);
+                        tracer.attach_engine_spans(id, cursor, spans);
+                        cursor += report.span_ns as u64;
                         Ok(Response {
                             spec,
                             operator,
                             backend,
                             backend_ns: report.span_ns,
                             spill_ns,
+                            queue_ns,
+                            trace_id: id,
                             outputs: None,
                             sim_report: Some(report.clone()),
                             batch_size: size,
                         })
                     }
-                    _ => Err(anyhow!(
+                    None => Err(anyhow!(
                         "no operator registered for workload kind {}",
                         spec.op
                     )),
                 },
             };
-            metrics.record(spec.op, clock_d.now_ns().saturating_sub(job.enqueued_ns) as f64);
+            tracer.stage(id, "respond", cursor, cursor);
+            match &result {
+                Ok(_) => {
+                    let latency_ns =
+                        clock_d.now_ns().saturating_sub(job.enqueued_ns).max(queue_ns) as f64;
+                    metrics.record_request(spec.op, backend, queue_ns, spill_ns, latency_ns);
+                    tracer.finish(id, "served");
+                }
+                Err(_) => tracer.finish(id, "error"),
+            }
             let _ = job.reply.send(result);
         }
         // Keep the session map bounded: forget LRU spilled sessions once
@@ -347,28 +454,32 @@ fn serve_loop(
                 next_id += 1;
                 let spec = job.request.spec;
                 let session = job.request.session;
+                if tracer.enabled() {
+                    tracer.begin(id, session, format!("{} N={}", spec.op.name(), spec.n));
+                }
                 jobs.insert(id, job);
                 if let Some(batch) = batcher.push(id, spec, session, now_ns) {
-                    dispatch(batch, &mut jobs, &mut metrics, &mut state);
+                    dispatch(batch, &mut jobs, &mut metrics, &mut state, &mut tracer);
                 }
             }
             Ok(Ctl::Snapshot(tx)) => {
-                let mut snap = metrics.snapshot();
-                snap += &format!(
-                    "sessions={} resident={} state_bytes={} resident_bytes={} \
-                     evictions={} spill_ms={:.3}\n",
-                    state.len(),
-                    state.resident_sessions(),
-                    state.total_bytes(),
-                    state.resident_bytes(),
-                    state.evictions(),
-                    state.stats().total_spill_ns() / 1e6
-                );
-                let _ = tx.send(snap);
+                metrics.observe_memory(&state);
+                let _ = tx.send(metrics.snapshot());
+            }
+            Ok(Ctl::Prometheus(tx)) => {
+                metrics.observe_memory(&state);
+                let _ = tx.send(metrics.prometheus());
+            }
+            Ok(Ctl::JsonMetrics(tx)) => {
+                metrics.observe_memory(&state);
+                let _ = tx.send(metrics.json());
+            }
+            Ok(Ctl::Traces(tx)) => {
+                let _ = tx.send(tracer.snapshot());
             }
             Ok(Ctl::Shutdown) => {
                 for batch in batcher.flush() {
-                    dispatch(batch, &mut jobs, &mut metrics, &mut state);
+                    dispatch(batch, &mut jobs, &mut metrics, &mut state, &mut tracer);
                 }
                 break;
             }
@@ -382,7 +493,7 @@ fn serve_loop(
         let due = batcher
             .poll_expired_prefer(clock.now_ns().saturating_sub(t0), |s| state.is_resident(s));
         for batch in due {
-            dispatch(batch, &mut jobs, &mut metrics, &mut state);
+            dispatch(batch, &mut jobs, &mut metrics, &mut state, &mut tracer);
         }
     }
 }
@@ -473,6 +584,7 @@ mod tests {
         assert!(snap.contains("causal"), "{snap}");
         assert!(snap.contains("total=3"), "{snap}");
         assert!(snap.contains("sessions=1"), "{snap}");
+        assert!(snap.contains("pages="), "{snap}");
     }
 
     #[test]
@@ -500,20 +612,83 @@ mod tests {
         })
         .unwrap();
         for i in 0..3 {
-            c.submit(Request {
-                spec: WorkloadSpec::new(OperatorKind::Linear, 512),
-                session: i,
-                inputs: None,
-            })
-            .unwrap();
+            let r = c
+                .submit(Request {
+                    spec: WorkloadSpec::new(OperatorKind::Linear, 512),
+                    session: i,
+                    inputs: None,
+                })
+                .unwrap();
+            // The clock never ticked while the request was in flight.
+            assert_eq!(r.queue_ns, 0, "frozen clock: no queue age");
         }
         clock.advance_ns(2_000_000_000);
         let snap = c.metrics_snapshot().unwrap();
         assert!(snap.contains("uptime_ms=2000.000"), "{snap}");
         assert!(snap.contains("rps=1.50"), "{snap}");
-        // The clock never ticked while requests were in flight, so the
-        // measured queue latency is exactly zero.
-        assert!(snap.contains("mean=0.000 ms"), "{snap}");
+        // Frozen clock ⇒ measured latency is exactly zero, in every column.
+        let row = snap.lines().find(|l| l.starts_with("linear")).unwrap();
+        let cols: Vec<&str> = row.split_whitespace().collect();
+        assert_eq!(cols[1], "3", "served count: {row}");
+        for col in &cols[2..] {
+            assert_eq!(*col, "0.000", "zero latency in every column: {row}");
+        }
+    }
+
+    #[test]
+    fn prometheus_and_traces_endpoints_respond() {
+        let c = Coordinator::new(CoordinatorConfig {
+            max_wait_ns: 100_000,
+            trace: true,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let r = c
+            .submit(Request {
+                spec: WorkloadSpec::new(OperatorKind::Causal, 512),
+                session: 1,
+                inputs: None,
+            })
+            .unwrap();
+        let prom = c.metrics_prometheus().unwrap();
+        assert!(
+            prom.contains(
+                r#"npuperf_requests_served_total{backend="simulate",operator="causal"} 1"#
+            ),
+            "{prom}"
+        );
+        crate::obs::lint_prometheus(&prom).expect("exposition lints");
+        let json = c.metrics_json().unwrap();
+        crate::obs::validate_json(&json).expect("json parses");
+        let traces = c.traces().unwrap();
+        assert_eq!(traces.len(), 1);
+        let t = &traces[0];
+        assert_eq!(t.trace_id, r.trace_id);
+        assert_eq!(t.outcome, "served");
+        assert_eq!(t.operator, Some("causal"));
+        let names: Vec<&str> = t.stages.iter().map(|s| s.name).collect();
+        for want in ["queued", "lower", "admission", "npu-simulate", "respond"] {
+            assert!(names.contains(&want), "missing stage {want}: {names:?}");
+        }
+        assert!(!t.engine_spans.is_empty(), "engine spans nested under the request");
+        // Engine spans sit inside the backend stage's extent.
+        let backend = t.stages.iter().find(|s| s.name == "npu-simulate").unwrap();
+        for es in &t.engine_spans {
+            assert!(es.start_ns >= backend.start_ns as f64 - 1e-6);
+            assert!(es.start_ns + es.dur_ns <= backend.end_ns as f64 + 1.0);
+        }
+    }
+
+    #[test]
+    fn untraced_coordinator_returns_no_traces() {
+        let c = sim_only();
+        c.submit(Request {
+            spec: WorkloadSpec::new(OperatorKind::Linear, 256),
+            session: 1,
+            inputs: None,
+        })
+        .unwrap();
+        assert!(c.traces().unwrap().is_empty());
     }
 
     #[test]

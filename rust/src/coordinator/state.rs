@@ -219,6 +219,16 @@ impl StateManager {
     pub fn memory(&self) -> &SessionMemory {
         &self.mem
     }
+
+    /// Session-memory pool pages currently in use (metrics passthrough).
+    pub fn pages_in_use(&self) -> u64 {
+        self.mem.pages_in_use()
+    }
+
+    /// Session-memory pool page capacity (metrics passthrough).
+    pub fn pool_pages(&self) -> u64 {
+        self.mem.pool().total_pages()
+    }
 }
 
 #[cfg(test)]

@@ -6,6 +6,7 @@ pub mod coordinator;
 pub mod memory;
 pub mod model;
 pub mod npu;
+pub mod obs;
 pub mod ops;
 pub mod report;
 pub mod runtime;

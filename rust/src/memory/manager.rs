@@ -362,6 +362,12 @@ impl SessionMemory {
     pub fn pool(&self) -> &PagePool {
         &self.pool
     }
+
+    /// Pages currently backing resident sessions (metrics convenience;
+    /// same number the pool reports).
+    pub fn pages_in_use(&self) -> u64 {
+        self.pool.used_pages()
+    }
 }
 
 #[cfg(test)]

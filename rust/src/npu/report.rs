@@ -156,6 +156,19 @@ impl ExecReport {
             self.logical_ops as f64 / self.dma_bytes as f64
         }
     }
+
+    /// Achieved GOP/s as a fraction of the roofline ceiling at this run's
+    /// operational intensity: `min(π_eff, β_eff · I)` with the calibrated
+    /// effective ceilings (paper §IV). 1.0 means the run sits on the
+    /// roofline; 0.0 when the ceiling degenerates (no traffic, no ops).
+    pub fn roofline_utilization(&self, pi_eff_gops: f64, beta_eff_gbps: f64) -> f64 {
+        let roof = pi_eff_gops.min(beta_eff_gbps * self.intensity());
+        if roof <= 0.0 {
+            0.0
+        } else {
+            self.achieved_gops() / roof
+        }
+    }
 }
 
 #[cfg(test)]
@@ -237,6 +250,26 @@ mod tests {
         let want = (2u64 * 256 * 256 * 256) as f64 / r.span_ns;
         assert!((r.achieved_gops() - want).abs() < 1e-9);
         assert!(r.compute_utilization(NpuConfig::default().peak_fp16_gops()) < 1.0);
+    }
+
+    #[test]
+    fn roofline_utilization_is_bounded_by_the_ceiling() {
+        let r = report_for(|b| {
+            let t = b.push_simple(
+                PrimOp::Transfer { bytes: 1 << 20, dir: TransferDir::Pull, fresh_alloc: true },
+                vec![],
+            );
+            b.push_simple(PrimOp::MatMul { m: 256, n: 256, k: 256 }, vec![t]);
+        });
+        // Against a generous ceiling the run sits below the roofline; the
+        // ratio scales inversely with the compute ceiling while the
+        // bandwidth leg is not binding.
+        let u = r.roofline_utilization(1e4, 1e4);
+        assert!(u > 0.0 && u <= 1.0, "below a generous roofline: {u}");
+        let tighter = r.roofline_utilization(5e3, 1e4);
+        assert!(tighter >= u, "halving the compute ceiling cannot lower the ratio");
+        // Degenerate ceilings report zero instead of dividing by zero.
+        assert_eq!(r.roofline_utilization(0.0, 0.0), 0.0);
     }
 
     #[test]

@@ -1,70 +1,43 @@
-//! Chrome-trace export of a simulation (`chrome://tracing` / Perfetto).
+//! Chrome-trace export of a single simulation (`chrome://tracing` /
+//! Perfetto).
 //!
 //! Emits the Trace Event Format (JSON array of complete "X" events), one
 //! track per NPU engine, so a simulated operator's schedule can be
 //! inspected visually: `npuperf trace <op> <N> --out trace.json`.
+//!
+//! Built on the shared [`crate::obs::export::ChromeTrace`] emitter — the
+//! same machinery the coordinator uses for merged multi-request
+//! timelines ([`crate::obs::export::chrome`]) — so comma discipline,
+//! escaping, and timestamp ordering are correct by construction (the
+//! hand-rolled predecessor emitted a trailing comma for empty graphs).
 
-use std::fmt::Write as _;
+use crate::obs::export::ChromeTrace;
+use crate::obs::trace::prim_label;
+use crate::ops::{Engine, OpGraph};
 
-use crate::ops::{Engine, OpGraph, PrimOp};
+use super::engine::{engine_index, SimTrace};
 
-use super::engine::SimTrace;
-
-fn prim_name(p: &PrimOp) -> String {
-    match p {
-        PrimOp::MatMul { m, n, k } => format!("matmul {m}x{n}x{k}"),
-        PrimOp::EltWise { kind, elems } => format!("eltwise {kind:?} {elems}"),
-        PrimOp::Softmax { rows, cols } => format!("softmax {rows}x{cols}"),
-        PrimOp::Transfer { bytes, dir, fresh_alloc } => {
-            format!("dma {dir:?} {bytes}B{}", if *fresh_alloc { " +alloc" } else { "" })
-        }
-        PrimOp::Concat { bytes } => format!("concat {bytes}B"),
-        PrimOp::HostOp { bytes } => format!("host {bytes}B"),
-    }
-}
-
-fn tid(e: Engine) -> u32 {
-    match e {
-        Engine::Dpu => 0,
-        Engine::Shave => 1,
-        Engine::Dma => 2,
-        Engine::Cpu => 3,
-    }
-}
-
-/// Render the trace as Chrome Trace Event JSON (timestamps in µs).
+/// Render the trace as Chrome Trace Event JSON (timestamps in µs), one
+/// thread per engine on a single process.
 pub fn to_chrome_trace(graph: &OpGraph, trace: &SimTrace) -> String {
-    let mut out = String::from("[\n");
-    // Thread-name metadata per engine.
+    let mut out = ChromeTrace::new();
+    // Thread-name metadata per engine (exactly one record each).
     for e in Engine::ALL {
-        let _ = writeln!(
-            out,
-            r#"  {{"name":"thread_name","ph":"M","pid":1,"tid":{},"args":{{"name":"{}"}}}},"#,
-            tid(e),
-            e.name()
-        );
+        out.thread_name(1, engine_index(e) as u32, e.name());
     }
-    let mut first = true;
     for node in &graph.nodes {
         let t = trace.timings[node.id];
-        if !first {
-            out.push_str(",\n");
-        }
-        first = false;
-        let _ = write!(
-            out,
-            r#"  {{"name":"{}","cat":"{}","ph":"X","pid":1,"tid":{},"ts":{:.3},"dur":{:.3},"args":{{"node":{},"deps":{}}}}}"#,
-            prim_name(&node.prim),
+        out.span(
+            1,
+            engine_index(node.prim.engine()) as u32,
+            &prim_label(&node.prim),
             node.prim.engine().name(),
-            tid(node.prim.engine()),
             t.start_ps as f64 / 1e6,
             (t.end_ps - t.start_ps) as f64 / 1e6,
-            node.id,
-            node.deps.len(),
+            &format!(r#"{{"node":{},"deps":{}}}"#, node.id, node.deps.len()),
         );
     }
-    out.push_str("\n]\n");
-    out
+    out.render()
 }
 
 #[cfg(test)]
@@ -72,16 +45,21 @@ mod tests {
     use super::*;
     use crate::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
     use crate::npu::engine::simulate;
+    use crate::obs::validate_json;
     use crate::ops;
+
+    fn render(op: OperatorKind, n: usize) -> (OpGraph, SimTrace, String) {
+        let hw = NpuConfig::default();
+        let sim = SimConfig::default();
+        let g = ops::lower(&WorkloadSpec::new(op, n), &hw, &sim);
+        let trace = simulate(&g, &hw, &sim);
+        let json = to_chrome_trace(&g, &trace);
+        (g, trace, json)
+    }
 
     #[test]
     fn trace_is_valid_json_shape() {
-        let hw = NpuConfig::default();
-        let sim = SimConfig::default();
-        let spec = WorkloadSpec::new(OperatorKind::Linear, 256);
-        let g = ops::lower(&spec, &hw, &sim);
-        let trace = simulate(&g, &hw, &sim);
-        let json = to_chrome_trace(&g, &trace);
+        let (g, _, json) = render(OperatorKind::Linear, 256);
         assert!(json.starts_with("[\n"));
         assert!(json.trim_end().ends_with(']'));
         // One X event per node + 4 metadata events.
@@ -90,18 +68,35 @@ mod tests {
         assert!(json.contains(r#""name":"SHAVE""#));
         // Balanced braces (cheap well-formedness check without serde).
         assert_eq!(json.matches('{').count(), json.matches('}').count());
+        validate_json(&json).expect("parses as JSON");
     }
 
     #[test]
     fn durations_match_sim() {
-        let hw = NpuConfig::default();
-        let sim = SimConfig::default();
-        let spec = WorkloadSpec::new(OperatorKind::Toeplitz, 256);
-        let g = ops::lower(&spec, &hw, &sim);
-        let trace = simulate(&g, &hw, &sim);
-        let json = to_chrome_trace(&g, &trace);
+        let (_, trace, json) = render(OperatorKind::Toeplitz, 256);
         let t0 = trace.timings[0];
         let dur_us = (t0.end_ps - t0.start_ps) as f64 / 1e6;
         assert!(json.contains(&format!(r#""dur":{dur_us:.3}"#)));
+    }
+
+    #[test]
+    fn timestamps_are_monotone() {
+        let (_, _, json) = render(OperatorKind::Causal, 512);
+        let mut last = f64::NEG_INFINITY;
+        for part in json.split(r#""ts":"#).skip(1) {
+            let ts: f64 = part.split(',').next().unwrap().parse().unwrap();
+            assert!(ts >= last, "events sorted by ts: {ts} after {last}");
+            last = ts;
+        }
+    }
+
+    #[test]
+    fn empty_graph_is_still_valid_json() {
+        let g = OpGraph { nodes: Vec::new(), logical_ops: 0, label: "empty".into() };
+        let trace = SimTrace::default();
+        let json = to_chrome_trace(&g, &trace);
+        validate_json(&json).expect("no trailing comma on empty graphs");
+        assert_eq!(json.matches(r#""ph":"M""#).count(), 4);
+        assert_eq!(json.matches(r#""ph":"X""#).count(), 0);
     }
 }

@@ -1,0 +1,668 @@
+//! Observability sinks: Chrome/Perfetto trace assembly, Prometheus text
+//! exposition, JSON metric snapshots, and a JSONL event log — plus the
+//! validators `npuperf obs` and CI run over the emitted artifacts.
+//!
+//! All emitters are hand-rolled (serde is not in the offline crate set)
+//! behind one shared [`ChromeTrace`] builder that owns the comma/escape
+//! discipline and sorts events by timestamp, so every producer —
+//! [`crate::npu::trace_dump`]'s single-op dump and the coordinator's
+//! merged multi-request timeline alike — emits valid JSON with monotone
+//! timestamps by construction.
+
+use std::fmt::Write as _;
+
+use super::metrics::{Histogram, MetricsRegistry};
+use super::trace::RequestTrace;
+use crate::npu::engine::engine_index;
+use crate::ops::Engine;
+
+/// Escape a string for inclusion inside a JSON string literal.
+pub fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+struct ChromeEvent {
+    ts_us: f64,
+    pid: u64,
+    tid: u32,
+    rendered: String,
+}
+
+/// Builder for Chrome Trace Event Format JSON (the `[...]` array form
+/// both `chrome://tracing` and Perfetto load).
+///
+/// Metadata records come first, then every `"X"` span sorted by
+/// `(ts, pid, tid)` — so timestamps are monotone in the emitted order
+/// and the array never carries a trailing comma, even when empty.
+#[derive(Default)]
+pub struct ChromeTrace {
+    meta: Vec<String>,
+    events: Vec<ChromeEvent>,
+}
+
+impl ChromeTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Name the process `pid` (one per request in merged timelines).
+    pub fn process_name(&mut self, pid: u64, name: &str) {
+        self.meta.push(format!(
+            r#"  {{"name":"process_name","ph":"M","pid":{pid},"args":{{"name":"{}"}}}}"#,
+            escape_json(name)
+        ));
+    }
+
+    /// Name the thread `(pid, tid)` (request track or engine track).
+    pub fn thread_name(&mut self, pid: u64, tid: u32, name: &str) {
+        self.meta.push(format!(
+            r#"  {{"name":"thread_name","ph":"M","pid":{pid},"tid":{tid},"args":{{"name":"{}"}}}}"#,
+            escape_json(name)
+        ));
+    }
+
+    /// Add one complete ("X") span; `args` is a pre-rendered JSON object
+    /// (empty string = no args field).
+    #[allow(clippy::too_many_arguments)]
+    pub fn span(
+        &mut self,
+        pid: u64,
+        tid: u32,
+        name: &str,
+        cat: &str,
+        ts_us: f64,
+        dur_us: f64,
+        args: &str,
+    ) {
+        let mut rendered = format!(
+            r#"  {{"name":"{}","cat":"{}","ph":"X","pid":{pid},"tid":{tid},"ts":{ts_us:.3},"dur":{dur_us:.3}"#,
+            escape_json(name),
+            escape_json(cat),
+        );
+        if !args.is_empty() {
+            let _ = write!(rendered, r#","args":{args}"#);
+        }
+        rendered.push('}');
+        self.events.push(ChromeEvent { ts_us, pid, tid, rendered });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.meta.is_empty() && self.events.is_empty()
+    }
+
+    /// Render the full JSON array.
+    pub fn render(mut self) -> String {
+        self.events.sort_by(|a, b| {
+            a.ts_us.total_cmp(&b.ts_us).then_with(|| (a.pid, a.tid).cmp(&(b.pid, b.tid)))
+        });
+        let lines: Vec<String> =
+            self.meta.into_iter().chain(self.events.into_iter().map(|e| e.rendered)).collect();
+        format!("[\n{}\n]\n", lines.join(",\n"))
+    }
+}
+
+fn ns_to_us(ns: f64) -> f64 {
+    ns / 1e3
+}
+
+/// Merge completed request traces into one Perfetto-loadable timeline.
+///
+/// Layout: one process per request (`pid = trace_id + 1`); tid 0 is the
+/// request lifecycle track, tids 1–4 are the DPU/SHAVE/DMA/CPU engine
+/// tracks (`1 + engine_index`), so the simulated engine spans nest under
+/// their request. All timestamps are rebased so the earliest stage in
+/// the collection lands at t=0.
+pub fn chrome(traces: &[RequestTrace]) -> String {
+    let t0 = traces.iter().map(|t| t.start_ns()).min().unwrap_or(0);
+    let t0 = if t0 == u64::MAX { 0 } else { t0 };
+    let mut out = ChromeTrace::new();
+    let mut ordered: Vec<&RequestTrace> = traces.iter().collect();
+    ordered.sort_by_key(|t| t.trace_id);
+    for tr in ordered {
+        let pid = tr.trace_id + 1;
+        out.process_name(
+            pid,
+            &format!(
+                "req {} {} session={} [{}]{}",
+                tr.trace_id,
+                tr.label,
+                tr.session,
+                tr.outcome,
+                tr.operator.map(|o| format!(" op={o}")).unwrap_or_default()
+            ),
+        );
+        out.thread_name(pid, 0, "request");
+        for s in &tr.stages {
+            out.span(
+                pid,
+                0,
+                s.name,
+                "stage",
+                ns_to_us(s.start_ns.saturating_sub(t0) as f64),
+                ns_to_us(s.dur_ns() as f64),
+                "",
+            );
+        }
+        let mut seen = [false; 4];
+        for es in &tr.engine_spans {
+            seen[engine_index(es.engine)] = true;
+        }
+        for e in Engine::ALL {
+            if seen[engine_index(e)] {
+                out.thread_name(pid, 1 + engine_index(e) as u32, e.name());
+            }
+        }
+        for es in &tr.engine_spans {
+            out.span(
+                pid,
+                1 + engine_index(es.engine) as u32,
+                &es.name,
+                es.engine.name(),
+                ns_to_us(es.start_ns - t0 as f64),
+                ns_to_us(es.dur_ns),
+                &format!(r#"{{"node":{},"deps":{}}}"#, es.node, es.deps),
+            );
+        }
+    }
+    out.render()
+}
+
+/// JSONL event log: one line per request header, stage, and engine span.
+pub fn jsonl(traces: &[RequestTrace]) -> String {
+    let mut out = String::new();
+    let mut ordered: Vec<&RequestTrace> = traces.iter().collect();
+    ordered.sort_by_key(|t| t.trace_id);
+    for tr in ordered {
+        let _ = writeln!(
+            out,
+            r#"{{"event":"request","trace_id":{},"session":{},"label":"{}","operator":{},"outcome":"{}"}}"#,
+            tr.trace_id,
+            tr.session,
+            escape_json(&tr.label),
+            tr.operator.map(|o| format!("\"{}\"", escape_json(o))).unwrap_or_else(|| "null".into()),
+            escape_json(tr.outcome),
+        );
+        for s in &tr.stages {
+            let _ = writeln!(
+                out,
+                r#"{{"event":"stage","trace_id":{},"name":"{}","start_ns":{},"dur_ns":{}}}"#,
+                tr.trace_id,
+                escape_json(s.name),
+                s.start_ns,
+                s.dur_ns(),
+            );
+        }
+        for es in &tr.engine_spans {
+            let _ = writeln!(
+                out,
+                r#"{{"event":"engine","trace_id":{},"engine":"{}","name":"{}","start_ns":{:.3},"dur_ns":{:.3},"node":{}}}"#,
+                tr.trace_id,
+                es.engine.name(),
+                escape_json(&es.name),
+                es.start_ns,
+                es.dur_ns,
+                es.node,
+            );
+        }
+    }
+    out
+}
+
+/// Prometheus text exposition of the whole registry: counters, gauges,
+/// then histograms (`_bucket`/`_sum`/`_count` with power-of-two `le`
+/// bounds), each preceded by its `# HELP`/`# TYPE` block. Deterministic:
+/// the registry iterates in `BTreeMap` order.
+pub fn prometheus(reg: &MetricsRegistry) -> String {
+    let mut out = String::new();
+    let header =
+        |out: &mut String, described: &mut Option<&'static str>, name: &'static str, kind: &str| {
+            if *described != Some(name) {
+                if let Some(help) = reg.help(name) {
+                    let _ = writeln!(out, "# HELP {name} {help}");
+                }
+                let _ = writeln!(out, "# TYPE {name} {kind}");
+                *described = Some(name);
+            }
+        };
+    let mut described: Option<&'static str> = None;
+    for (id, v) in reg.counters() {
+        header(&mut out, &mut described, id.name, "counter");
+        let _ = writeln!(out, "{}{} {v}", id.name, id.label_block());
+    }
+    described = None;
+    for (id, v) in reg.gauges() {
+        header(&mut out, &mut described, id.name, "gauge");
+        let _ = writeln!(out, "{}{} {v}", id.name, id.label_block());
+    }
+    described = None;
+    for (id, h) in reg.histograms() {
+        header(&mut out, &mut described, id.name, "histogram");
+        let base = &id.labels;
+        let hi = h.buckets().iter().rposition(|&c| c > 0).unwrap_or(0);
+        let mut cum = 0u64;
+        for (i, &c) in h.buckets().iter().enumerate().take(hi.min(63) + 1) {
+            cum += c;
+            let mut labels = base.clone();
+            labels.push(("le", format!("{}", Histogram::upper_bound(i))));
+            labels.sort();
+            let _ = writeln!(
+                out,
+                "{}_bucket{} {cum}",
+                id.name,
+                super::metrics::render_labels(&labels)
+            );
+        }
+        let mut labels = base.clone();
+        labels.push(("le", "+Inf".to_string()));
+        labels.sort();
+        let _ = writeln!(
+            out,
+            "{}_bucket{} {}",
+            id.name,
+            super::metrics::render_labels(&labels),
+            h.count()
+        );
+        let _ = writeln!(out, "{}_sum{} {}", id.name, id.label_block(), h.sum());
+        let _ = writeln!(out, "{}_count{} {}", id.name, id.label_block(), h.count());
+    }
+    out
+}
+
+/// JSON snapshot of the registry: counters/gauges as maps keyed by
+/// `name{labels}`, histograms with their summary statistics.
+pub fn json(reg: &MetricsRegistry) -> String {
+    let mut out = String::from("{\n  \"counters\": {");
+    let counters: Vec<String> = reg
+        .counters()
+        .map(|(id, v)| {
+            format!("\n    \"{}{}\": {v}", escape_json(id.name), escape_json(&id.label_block()))
+        })
+        .collect();
+    out += &counters.join(",");
+    out += "\n  },\n  \"gauges\": {";
+    let gauges: Vec<String> = reg
+        .gauges()
+        .map(|(id, v)| {
+            format!("\n    \"{}{}\": {v}", escape_json(id.name), escape_json(&id.label_block()))
+        })
+        .collect();
+    out += &gauges.join(",");
+    out += "\n  },\n  \"histograms\": {";
+    let hists: Vec<String> = reg
+        .histograms()
+        .map(|(id, h)| {
+            format!(
+                "\n    \"{}{}\": {{\"count\":{},\"sum\":{},\"min\":{},\"max\":{},\"p50\":{},\"p95\":{},\"p99\":{}}}",
+                escape_json(id.name),
+                escape_json(&id.label_block()),
+                h.count(),
+                h.sum(),
+                h.min(),
+                h.max(),
+                h.quantile(50.0),
+                h.quantile(95.0),
+                h.quantile(99.0),
+            )
+        })
+        .collect();
+    out += &hists.join(",");
+    out += "\n  }\n}\n";
+    out
+}
+
+/// Minimal JSON well-formedness check (recursive descent, no serde).
+/// Returns `Err` with a byte offset on the first syntax error.
+pub fn validate_json(text: &str) -> Result<(), String> {
+    let b = text.as_bytes();
+    let mut pos = 0usize;
+    skip_ws(b, &mut pos);
+    parse_value(b, &mut pos)?;
+    skip_ws(b, &mut pos);
+    if pos != b.len() {
+        return Err(format!("trailing content at byte {pos}"));
+    }
+    Ok(())
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<(), String> {
+    match b.get(*pos) {
+        None => Err(format!("unexpected end of input at byte {pos}")),
+        Some(b'{') => {
+            *pos += 1;
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(());
+            }
+            loop {
+                skip_ws(b, pos);
+                parse_string(b, pos)?;
+                skip_ws(b, pos);
+                expect(b, pos, b':')?;
+                skip_ws(b, pos);
+                parse_value(b, pos)?;
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(());
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at byte {pos}")),
+                }
+            }
+        }
+        Some(b'[') => {
+            *pos += 1;
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(());
+            }
+            loop {
+                skip_ws(b, pos);
+                parse_value(b, pos)?;
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(());
+                    }
+                    _ => return Err(format!("expected ',' or ']' at byte {pos}")),
+                }
+            }
+        }
+        Some(b'"') => parse_string(b, pos),
+        Some(b't') => expect_word(b, pos, "true"),
+        Some(b'f') => expect_word(b, pos, "false"),
+        Some(b'n') => expect_word(b, pos, "null"),
+        Some(c) if c.is_ascii_digit() || *c == b'-' => parse_number(b, pos),
+        Some(c) => Err(format!("unexpected byte {:?} at {pos}", *c as char)),
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, want: u8) -> Result<(), String> {
+    if b.get(*pos) == Some(&want) {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(format!("expected {:?} at byte {pos}", want as char))
+    }
+}
+
+fn expect_word(b: &[u8], pos: &mut usize, word: &str) -> Result<(), String> {
+    if b[*pos..].starts_with(word.as_bytes()) {
+        *pos += word.len();
+        Ok(())
+    } else {
+        Err(format!("expected `{word}` at byte {pos}"))
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<(), String> {
+    expect(b, pos, b'"')?;
+    while let Some(&c) = b.get(*pos) {
+        match c {
+            b'"' => {
+                *pos += 1;
+                return Ok(());
+            }
+            b'\\' => {
+                *pos += 2; // escape pair (\uXXXX hex digits pass the scan below)
+            }
+            _ => *pos += 1,
+        }
+    }
+    Err("unterminated string".to_string())
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<(), String> {
+    let start = *pos;
+    if b.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    while *pos < b.len()
+        && (b[*pos].is_ascii_digit() || matches!(b[*pos], b'.' | b'e' | b'E' | b'+' | b'-'))
+    {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&b[start..*pos]).map_err(|e| e.to_string())?;
+    text.parse::<f64>().map_err(|e| format!("bad number `{text}` at byte {start}: {e}"))?;
+    Ok(())
+}
+
+/// Summary of a linted Prometheus exposition.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PromLint {
+    pub samples: usize,
+    pub histograms: usize,
+    pub help_lines: usize,
+}
+
+/// Lint Prometheus text exposition format: every line must be a
+/// comment/blank or `name{labels} value`; `_bucket` runs must be
+/// cumulative with a final `+Inf` equal to the series' `_count`.
+pub fn lint_prometheus(text: &str) -> Result<PromLint, String> {
+    let mut lint = PromLint::default();
+    let mut bucket_run: Option<(String, u64)> = None; // (series key, last cum)
+    let mut inf_count: Option<(String, u64)> = None;
+    for (lineno, line) in text.lines().enumerate() {
+        let n = lineno + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            let rest = rest.trim_start();
+            if !(rest.starts_with("HELP ") || rest.starts_with("TYPE ") || rest.is_empty()) {
+                return Err(format!("line {n}: comment is neither HELP nor TYPE"));
+            }
+            lint.help_lines += 1;
+            continue;
+        }
+        let (series, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("line {n}: expected `name{{labels}} value`"))?;
+        let value: f64 =
+            value.parse().map_err(|e| format!("line {n}: bad sample value: {e}"))?;
+        let name = series.split('{').next().unwrap_or(series);
+        if name.is_empty()
+            || !name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+            || name.starts_with(|c: char| c.is_ascii_digit())
+        {
+            return Err(format!("line {n}: invalid metric name `{name}`"));
+        }
+        if series.contains('{') && !series.ends_with('}') {
+            return Err(format!("line {n}: unterminated label block"));
+        }
+        lint.samples += 1;
+        if let Some(base) = name.strip_suffix("_bucket") {
+            let le = series
+                .split("le=\"")
+                .nth(1)
+                .and_then(|s| s.split('"').next())
+                .ok_or_else(|| format!("line {n}: bucket without le label"))?;
+            let key = bucket_series_key(base, series);
+            match &mut bucket_run {
+                Some((k, last)) if *k == key => {
+                    if value < *last as f64 {
+                        return Err(format!("line {n}: bucket counts not cumulative"));
+                    }
+                    *last = value as u64;
+                }
+                _ => bucket_run = Some((key.clone(), value as u64)),
+            }
+            if le == "+Inf" {
+                lint.histograms += 1;
+                inf_count = Some((base.to_string(), value as u64));
+                bucket_run = None;
+            }
+        } else if let Some(base) = name.strip_suffix("_count") {
+            if let Some((inf_base, inf)) = &inf_count {
+                if inf_base == base && value as u64 != *inf {
+                    return Err(format!(
+                        "line {n}: {base}_count {value} != +Inf bucket {inf}"
+                    ));
+                }
+            }
+            inf_count = None;
+        }
+    }
+    Ok(lint)
+}
+
+/// Series identity for bucket-monotonicity: base name + labels minus le.
+fn bucket_series_key(base: &str, series: &str) -> String {
+    let labels = series.split('{').nth(1).unwrap_or("").trim_end_matches('}');
+    let kept: Vec<&str> =
+        labels.split(',').filter(|kv| !kv.starts_with("le=")).collect();
+    format!("{base}{{{}}}", kept.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{EngineSpan, Stage};
+
+    fn sample_trace() -> RequestTrace {
+        RequestTrace {
+            trace_id: 3,
+            session: 7,
+            label: "causal N=128".into(),
+            operator: Some("causal"),
+            outcome: "served",
+            stages: vec![
+                Stage { name: "queued", start_ns: 1000, end_ns: 2000 },
+                Stage { name: "respond", start_ns: 2500, end_ns: 2600 },
+            ],
+            engine_spans: vec![EngineSpan {
+                engine: Engine::Dpu,
+                name: "matmul 8x8x8".into(),
+                start_ns: 2000.0,
+                dur_ns: 300.0,
+                node: 0,
+                deps: 0,
+            }],
+        }
+    }
+
+    #[test]
+    fn chrome_merges_and_validates() {
+        let json = chrome(&[sample_trace()]);
+        validate_json(&json).unwrap();
+        assert!(json.contains(r#""process_name""#));
+        assert!(json.contains(r#""name":"request""#));
+        assert!(json.contains(r#""name":"DPU""#));
+        assert!(json.contains(r#""cat":"stage""#));
+        // Rebased to the earliest stage: queued starts at ts 0.
+        assert!(json.contains(r#""ts":0.000"#), "{json}");
+    }
+
+    #[test]
+    fn chrome_timestamps_are_monotone() {
+        let json = chrome(&[sample_trace()]);
+        let mut last = f64::NEG_INFINITY;
+        for part in json.split(r#""ts":"#).skip(1) {
+            let ts: f64 = part.split(',').next().unwrap().parse().unwrap();
+            assert!(ts >= last, "timestamps must be sorted: {ts} after {last}");
+            last = ts;
+        }
+        assert!(last > f64::NEG_INFINITY, "at least one event");
+    }
+
+    #[test]
+    fn empty_trace_set_is_valid_json() {
+        let json = chrome(&[]);
+        validate_json(&json).unwrap();
+        let empty = ChromeTrace::new();
+        assert!(empty.is_empty());
+        validate_json(&empty.render()).unwrap();
+    }
+
+    #[test]
+    fn jsonl_lines_each_parse() {
+        let text = jsonl(&[sample_trace()]);
+        assert_eq!(text.lines().count(), 4, "{text}");
+        for line in text.lines() {
+            validate_json(line).unwrap();
+        }
+    }
+
+    #[test]
+    fn prometheus_round_trips_the_registry() {
+        let mut reg = MetricsRegistry::new();
+        reg.describe("req_total", "requests served");
+        reg.inc("req_total", &[("operator", "causal")], 3);
+        reg.set_gauge("pool_pages", &[], 42.0);
+        reg.observe("latency_ns", &[("operator", "causal")], 100.0);
+        reg.observe("latency_ns", &[("operator", "causal")], 5000.0);
+        let text = prometheus(&reg);
+        let lint = lint_prometheus(&text).unwrap();
+        assert_eq!(lint.histograms, 1);
+        assert!(text.contains("# HELP req_total requests served"), "{text}");
+        assert!(text.contains("# TYPE req_total counter"), "{text}");
+        assert!(text.contains(r#"req_total{operator="causal"} 3"#), "{text}");
+        assert!(text.contains("pool_pages 42"), "{text}");
+        assert!(text.contains(r#"latency_ns_bucket{le="+Inf",operator="causal"} 2"#), "{text}");
+        assert!(text.contains(r#"latency_ns_count{operator="causal"} 2"#), "{text}");
+        assert!(text.contains(r#"latency_ns_sum{operator="causal"} 5100"#), "{text}");
+    }
+
+    #[test]
+    fn lint_rejects_malformed_expositions() {
+        assert!(lint_prometheus("no_value_here\n").is_err());
+        assert!(lint_prometheus("name bogus\n").is_err());
+        assert!(lint_prometheus("1badname 3\n").is_err());
+        assert!(lint_prometheus("# FOO not help\n").is_err());
+        let shrinking = "h_bucket{le=\"1\"} 5\nh_bucket{le=\"2\"} 3\nh_bucket{le=\"+Inf\"} 3\n";
+        assert!(lint_prometheus(shrinking).is_err(), "non-cumulative buckets");
+        let mismatched = "h_bucket{le=\"+Inf\"} 3\nh_count 4\n";
+        assert!(lint_prometheus(mismatched).is_err(), "+Inf != count");
+    }
+
+    #[test]
+    fn json_snapshot_is_valid() {
+        let mut reg = MetricsRegistry::new();
+        reg.inc("a_total", &[("k", "v")], 1);
+        reg.set_gauge("g", &[], 2.5);
+        reg.observe("h_ns", &[], 10.0);
+        let text = json(&reg);
+        validate_json(&text).unwrap();
+        assert!(text.contains(r#""a_total{k=\"v\"}""#), "{text}");
+        assert!(text.contains(r#""p50""#), "{text}");
+        let empty = json(&MetricsRegistry::new());
+        validate_json(&empty).unwrap();
+    }
+
+    #[test]
+    fn validate_json_catches_breakage() {
+        validate_json(r#"{"a":[1,2,{"b":null}],"c":"x\"y"}"#).unwrap();
+        assert!(validate_json("[1,2,]").is_err(), "trailing comma");
+        assert!(validate_json("{\"a\":}").is_err());
+        assert!(validate_json("[1,2] extra").is_err());
+        assert!(validate_json("").is_err());
+        assert!(validate_json("[\"unterminated]").is_err());
+    }
+}

@@ -1,0 +1,509 @@
+//! Metrics registry: counters, gauges, and log-bucketed histograms.
+//!
+//! The registry is the single store behind every serving metric — the
+//! coordinator's human snapshot, the Prometheus exposition, and the JSON
+//! dump all render from the same [`MetricsRegistry`], so they cannot
+//! disagree (asserted by the obs conformance section of the testkit).
+//!
+//! Histograms use power-of-two log buckets ([`Histogram`]): bounded
+//! memory regardless of sample count, replacing the full-sample vectors
+//! the coordinator metrics used to keep per operator. The price is
+//! quantile resolution — a reported quantile is exact on `count`, `sum`,
+//! `min`, and `max`, and within one bucket (a factor of 2) on
+//! interpolated quantiles; see the property tests.
+//!
+//! Series are keyed by metric name plus a sorted label list
+//! ([`SeriesId`]) and stored in `BTreeMap`s, so every export iterates in
+//! one deterministic order — a pinned-seed serve run produces a
+//! byte-identical exposition, which is what lets CI keep a golden
+//! `.prom` fixture.
+
+use std::collections::BTreeMap;
+
+/// Number of histogram buckets: bucket 0 holds `v <= 1`, bucket `i`
+/// holds `(2^(i-1), 2^i]`, bucket 64 catches everything above `2^63`.
+pub const HISTOGRAM_BUCKETS: usize = 65;
+
+/// Fixed-size log-bucketed histogram (power-of-two bucket bounds).
+///
+/// Values are nonnegative `f64`s (the serving stack records nanoseconds
+/// and byte counts); negative, NaN, and sub-1 values land in bucket 0.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    buckets: [u64; HISTOGRAM_BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: [0; HISTOGRAM_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: 0.0,
+        }
+    }
+
+    /// Bucket index for a value: 0 for `v <= 1` (and NaN / negatives),
+    /// otherwise the unique `i` with `2^(i-1) < ceil(v) <= 2^i`.
+    pub fn bucket_index(v: f64) -> usize {
+        if !(v > 1.0) {
+            return 0;
+        }
+        let c = v.ceil() as u64; // saturating cast
+        if c <= 1 {
+            0
+        } else {
+            64 - (c - 1).leading_zeros() as usize
+        }
+    }
+
+    /// Upper bound of bucket `i` (inclusive).
+    pub fn upper_bound(i: usize) -> f64 {
+        if i >= 64 {
+            u64::MAX as f64
+        } else {
+            (1u64 << i) as f64
+        }
+    }
+
+    /// Lower bound of bucket `i` (exclusive, except bucket 0 which
+    /// starts at 0).
+    pub fn lower_bound(i: usize) -> f64 {
+        if i == 0 {
+            0.0
+        } else {
+            Self::upper_bound(i - 1)
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        self.buckets[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Raw bucket counts (sum equals [`Histogram::count`]).
+    pub fn buckets(&self) -> &[u64; HISTOGRAM_BUCKETS] {
+        &self.buckets
+    }
+
+    /// Interpolated quantile, `q` in percent (`50.0` = median).
+    ///
+    /// Exact when all samples are equal (the result clamps to
+    /// `[min, max]`); otherwise within the power-of-two bucket holding
+    /// the target rank. Monotone in `q` by construction.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 100.0);
+        let target = q / 100.0 * self.count as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c;
+            if next as f64 >= target {
+                let lo = Self::lower_bound(i);
+                let hi = Self::upper_bound(i);
+                let frac = (target - cum as f64).max(0.0) / c as f64;
+                return (lo + (hi - lo) * frac).clamp(self.min, self.max);
+            }
+            cum = next;
+        }
+        self.max
+    }
+}
+
+/// One time series: a metric name plus its sorted label list. `Ord` over
+/// both gives the registry's deterministic export order.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SeriesId {
+    pub name: &'static str,
+    /// Sorted `(key, value)` pairs; empty for unlabeled series.
+    pub labels: Vec<(&'static str, String)>,
+}
+
+impl SeriesId {
+    pub fn new(name: &'static str, labels: &[(&'static str, &str)]) -> Self {
+        let mut labels: Vec<(&'static str, String)> =
+            labels.iter().map(|(k, v)| (*k, v.to_string())).collect();
+        labels.sort();
+        Self { name, labels }
+    }
+
+    /// Prometheus-style label block: `{k="v",..}`, empty when unlabeled.
+    pub fn label_block(&self) -> String {
+        render_labels(&self.labels)
+    }
+}
+
+pub(crate) fn render_labels(labels: &[(&'static str, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+/// Deterministically ordered store of counters, gauges and histograms.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<SeriesId, u64>,
+    gauges: BTreeMap<SeriesId, f64>,
+    histograms: BTreeMap<SeriesId, Histogram>,
+    help: BTreeMap<&'static str, &'static str>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Attach a `# HELP` line to a metric name (exported verbatim).
+    pub fn describe(&mut self, name: &'static str, help: &'static str) {
+        self.help.insert(name, help);
+    }
+
+    pub fn help(&self, name: &str) -> Option<&'static str> {
+        self.help.get(name).copied()
+    }
+
+    pub fn inc(&mut self, name: &'static str, labels: &[(&'static str, &str)], delta: u64) {
+        *self.counters.entry(SeriesId::new(name, labels)).or_insert(0) += delta;
+    }
+
+    /// Set a counter to an absolute cumulative value — for mirroring a
+    /// source that already keeps the running total (e.g.
+    /// [`crate::memory::MemStats`]), so there is exactly one counting
+    /// site.
+    pub fn set_counter(&mut self, name: &'static str, labels: &[(&'static str, &str)], v: u64) {
+        self.counters.insert(SeriesId::new(name, labels), v);
+    }
+
+    pub fn set_gauge(&mut self, name: &'static str, labels: &[(&'static str, &str)], v: f64) {
+        self.gauges.insert(SeriesId::new(name, labels), v);
+    }
+
+    pub fn observe(&mut self, name: &'static str, labels: &[(&'static str, &str)], v: f64) {
+        self.histograms.entry(SeriesId::new(name, labels)).or_default().record(v);
+    }
+
+    pub fn counter(&self, name: &'static str, labels: &[(&'static str, &str)]) -> u64 {
+        self.counters.get(&SeriesId::new(name, labels)).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &'static str, labels: &[(&'static str, &str)]) -> Option<f64> {
+        self.gauges.get(&SeriesId::new(name, labels)).copied()
+    }
+
+    pub fn histogram(
+        &self,
+        name: &'static str,
+        labels: &[(&'static str, &str)],
+    ) -> Option<&Histogram> {
+        self.histograms.get(&SeriesId::new(name, labels))
+    }
+
+    /// Sum every counter series of `name` whose labels include all of
+    /// `filter` (empty filter = all series of that name).
+    pub fn sum_counters(&self, name: &str, filter: &[(&str, &str)]) -> u64 {
+        self.counters
+            .iter()
+            .filter(|(id, _)| id.name == name && matches_filter(&id.labels, filter))
+            .map(|(_, v)| *v)
+            .sum()
+    }
+
+    /// Total count across every histogram series of `name` matching
+    /// `filter`.
+    pub fn sum_histogram_counts(&self, name: &str, filter: &[(&str, &str)]) -> u64 {
+        self.histograms
+            .iter()
+            .filter(|(id, _)| id.name == name && matches_filter(&id.labels, filter))
+            .map(|(_, h)| h.count())
+            .sum()
+    }
+
+    /// Distinct values of label `key` across every histogram series of
+    /// `name`, in deterministic (sorted) order.
+    pub fn histogram_label_values(&self, name: &str, key: &str) -> Vec<String> {
+        let mut out: Vec<String> = self
+            .histograms
+            .keys()
+            .filter(|id| id.name == name)
+            .flat_map(|id| {
+                id.labels.iter().filter(|(k, _)| *k == key).map(|(_, v)| v.clone())
+            })
+            .collect();
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    pub fn counters(&self) -> impl Iterator<Item = (&SeriesId, u64)> {
+        self.counters.iter().map(|(id, v)| (id, *v))
+    }
+
+    pub fn gauges(&self) -> impl Iterator<Item = (&SeriesId, f64)> {
+        self.gauges.iter().map(|(id, v)| (id, *v))
+    }
+
+    pub fn histograms(&self) -> impl Iterator<Item = (&SeriesId, &Histogram)> {
+        self.histograms.iter()
+    }
+}
+
+fn matches_filter(labels: &[(&'static str, String)], filter: &[(&str, &str)]) -> bool {
+    filter.iter().all(|(fk, fv)| labels.iter().any(|(k, v)| k == fk && v == fv))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{forall, Rng};
+    use crate::util::stats::Summary;
+
+    #[test]
+    fn bucket_bounds_cover_the_line() {
+        assert_eq!(Histogram::bucket_index(0.0), 0);
+        assert_eq!(Histogram::bucket_index(1.0), 0);
+        assert_eq!(Histogram::bucket_index(1.5), 1);
+        assert_eq!(Histogram::bucket_index(2.0), 1);
+        assert_eq!(Histogram::bucket_index(2.1), 2);
+        assert_eq!(Histogram::bucket_index(1024.0), 10);
+        assert_eq!(Histogram::bucket_index(1025.0), 11);
+        assert_eq!(Histogram::bucket_index(f64::NAN), 0);
+        assert_eq!(Histogram::bucket_index(-3.0), 0);
+        assert_eq!(Histogram::bucket_index(1e30), 64);
+    }
+
+    #[test]
+    fn property_bucket_bounds_are_monotone() {
+        for i in 1..HISTOGRAM_BUCKETS {
+            assert!(Histogram::upper_bound(i) > Histogram::upper_bound(i - 1));
+            assert_eq!(Histogram::lower_bound(i), Histogram::upper_bound(i - 1));
+        }
+    }
+
+    #[test]
+    fn property_values_land_inside_their_bucket() {
+        forall(
+            "histogram bucket containment",
+            200,
+            |rng: &mut Rng| (rng.below(1u64 << 40) as f64) * 1e-3,
+            |&v| {
+                let i = Histogram::bucket_index(v);
+                let (lo, hi) = (Histogram::lower_bound(i), Histogram::upper_bound(i));
+                // ceil(v) is what gets bucketed, so containment is on the
+                // rounded-up value.
+                let c = v.max(1.0).ceil();
+                if (i == 0 || c > lo) && c <= hi {
+                    Ok(())
+                } else {
+                    Err(format!("{v} -> bucket {i} ({lo}, {hi}]"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn property_count_conservation() {
+        forall(
+            "histogram count conservation",
+            50,
+            |rng: &mut Rng| {
+                (0..rng.range(1, 200)).map(|_| rng.below(1u64 << 30) as f64).collect::<Vec<_>>()
+            },
+            |vals| {
+                let mut h = Histogram::new();
+                for &v in vals {
+                    h.record(v);
+                }
+                let bucket_total: u64 = h.buckets().iter().sum();
+                if bucket_total == h.count() && h.count() == vals.len() as u64 {
+                    Ok(())
+                } else {
+                    Err(format!("buckets sum {bucket_total} != count {}", h.count()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn property_quantiles_are_ordered() {
+        forall(
+            "histogram quantile ordering",
+            50,
+            |rng: &mut Rng| {
+                (0..rng.range(1, 300)).map(|_| rng.below(1u64 << 45) as f64).collect::<Vec<_>>()
+            },
+            |vals| {
+                let mut h = Histogram::new();
+                for &v in vals {
+                    h.record(v);
+                }
+                let (p50, p95, p99) = (h.quantile(50.0), h.quantile(95.0), h.quantile(99.0));
+                if p50 <= p95 && p95 <= p99 && p99 <= h.max() {
+                    Ok(())
+                } else {
+                    Err(format!("p50={p50} p95={p95} p99={p99} max={}", h.max()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn property_quantile_tracks_exact_full_sample_path() {
+        // Cross-check against the old full-sample `Summary` path the
+        // histogram replaced: count-weighted moments must agree exactly
+        // (same additions in the same order), and a quantile must land
+        // within a factor of 2 of the target-rank order statistic —
+        // that sample's log bucket brackets it by construction.
+        forall(
+            "histogram vs exact quantiles",
+            40,
+            |rng: &mut Rng| {
+                (0..rng.range(5, 400)).map(|_| rng.below(1u64 << 40) as f64).collect::<Vec<_>>()
+            },
+            |vals| {
+                let mut h = Histogram::new();
+                let mut s = Summary::new();
+                for &v in vals {
+                    h.record(v);
+                    s.push(v);
+                }
+                if h.mean() != s.mean() || h.min() != s.min() || h.max() != s.max() {
+                    return Err(format!(
+                        "exact moments diverge: mean {} vs {}, min {} vs {}, max {} vs {}",
+                        h.mean(),
+                        s.mean(),
+                        h.min(),
+                        s.min(),
+                        h.max(),
+                        s.max()
+                    ));
+                }
+                let mut sorted = vals.clone();
+                sorted.sort_by(f64::total_cmp);
+                for q in [50.0, 95.0, 99.0] {
+                    let k =
+                        ((q / 100.0 * vals.len() as f64).ceil() as usize).clamp(1, vals.len()) - 1;
+                    let (x, approx) = (sorted[k], h.quantile(q));
+                    if approx < x / 2.0 - 1.0 || approx > 2.0 * x + 2.0 {
+                        return Err(format!("q{q}: histogram {approx} vs rank sample {x}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn identical_samples_make_quantiles_exact() {
+        let mut h = Histogram::new();
+        for _ in 0..10 {
+            h.record(777.0);
+        }
+        // min == max == 777 and quantiles clamp to [min, max].
+        for q in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(h.quantile(q), 777.0);
+        }
+        assert_eq!(h.mean(), 777.0);
+        assert_eq!(h.min(), 777.0);
+        assert_eq!(h.max(), 777.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_zeroed() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(50.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn registry_counters_and_labels() {
+        let mut r = MetricsRegistry::new();
+        r.inc("req_total", &[("operator", "causal")], 2);
+        r.inc("req_total", &[("operator", "linear")], 1);
+        r.inc("req_total", &[("operator", "causal")], 1);
+        assert_eq!(r.counter("req_total", &[("operator", "causal")]), 3);
+        assert_eq!(r.sum_counters("req_total", &[]), 4);
+        assert_eq!(r.sum_counters("req_total", &[("operator", "linear")]), 1);
+        assert_eq!(r.counter("req_total", &[("operator", "fourier")]), 0);
+    }
+
+    #[test]
+    fn registry_label_order_is_canonical() {
+        let a = SeriesId::new("m", &[("b", "2"), ("a", "1")]);
+        let b = SeriesId::new("m", &[("a", "1"), ("b", "2")]);
+        assert_eq!(a, b);
+        assert_eq!(a.label_block(), "{a=\"1\",b=\"2\"}");
+    }
+
+    #[test]
+    fn registry_histograms_observe() {
+        let mut r = MetricsRegistry::new();
+        r.observe("lat", &[("operator", "causal")], 100.0);
+        r.observe("lat", &[("operator", "causal")], 300.0);
+        let h = r.histogram("lat", &[("operator", "causal")]).unwrap();
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum(), 400.0);
+        assert_eq!(r.sum_histogram_counts("lat", &[]), 2);
+        assert_eq!(r.histogram_label_values("lat", "operator"), vec!["causal".to_string()]);
+    }
+
+    #[test]
+    fn set_counter_mirrors_absolute_totals() {
+        let mut r = MetricsRegistry::new();
+        r.set_counter("evictions_total", &[], 7);
+        r.set_counter("evictions_total", &[], 9);
+        assert_eq!(r.counter("evictions_total", &[]), 9, "absolute, not additive");
+    }
+}

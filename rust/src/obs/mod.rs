@@ -1,0 +1,26 @@
+//! Observability subsystem: per-request tracing, a bounded-memory
+//! metrics registry, and export sinks.
+//!
+//! Three layers, documented in `docs/OBSERVABILITY.md`:
+//!
+//! - [`trace`] — the span model. Each served request gets a
+//!   [`trace::RequestTrace`]: lifecycle stages stamped on the injected
+//!   [`crate::coordinator::Clock`] plus the per-engine spans of the NPU
+//!   simulation nested under the request.
+//! - [`metrics`] — [`metrics::MetricsRegistry`], the single store of
+//!   counters, gauges, and power-of-two log-bucketed
+//!   [`metrics::Histogram`]s, labeled by operator /
+//!   [`crate::ops::BoundClass`] / backend.
+//! - [`export`] — sinks over both: a merged Chrome/Perfetto timeline
+//!   ([`export::chrome`]), Prometheus text exposition
+//!   ([`export::prometheus`]), JSON snapshot ([`export::json`]), a JSONL
+//!   event log ([`export::jsonl`]), and the validators behind
+//!   `npuperf obs`.
+
+pub mod export;
+pub mod metrics;
+pub mod trace;
+
+pub use export::{chrome, json, jsonl, lint_prometheus, prometheus, validate_json, PromLint};
+pub use metrics::{Histogram, MetricsRegistry, SeriesId, HISTOGRAM_BUCKETS};
+pub use trace::{engine_spans, EngineSpan, RequestTrace, Stage, Tracer};

@@ -1,0 +1,294 @@
+//! Per-request span model for the serving stack.
+//!
+//! Every request the coordinator dispatches gets a [`RequestTrace`]: a
+//! flat list of lifecycle [`Stage`] spans (queued → lower → admission →
+//! backend → respond, all stamped on the injected
+//! [`crate::coordinator::Clock`]) plus the per-engine [`EngineSpan`]s of
+//! the NPU simulation, rebased onto the request's timeline at the moment
+//! its backend stage began. [`crate::obs::export::chrome`] renders a
+//! collection of these as one merged Perfetto-loadable timeline — the
+//! multi-request generalization of the single-op
+//! [`crate::npu::trace_dump`].
+//!
+//! One deliberate dilation: the backend stage's extent is the
+//! *simulated* span (model time), not the wall time the simulator took
+//! to run, so the nested engine spans tile their parent exactly and the
+//! timeline shows where the modeled NPU spent its nanoseconds. Under a
+//! frozen `ManualClock` every other stage has zero width and the
+//! timeline is exactly assertable.
+
+use std::collections::HashMap;
+
+use crate::npu::engine::{engine_index, ps_to_ns, SimTrace};
+use crate::ops::{Engine, OpGraph, PrimOp};
+
+/// Human label for a lowered primitive (shared with
+/// [`crate::npu::trace_dump`]).
+pub fn prim_label(p: &PrimOp) -> String {
+    match p {
+        PrimOp::MatMul { m, n, k } => format!("matmul {m}x{n}x{k}"),
+        PrimOp::EltWise { kind, elems } => format!("eltwise {kind:?} {elems}"),
+        PrimOp::Softmax { rows, cols } => format!("softmax {rows}x{cols}"),
+        PrimOp::Transfer { bytes, dir, fresh_alloc } => {
+            format!("dma {dir:?} {bytes}B{}", if *fresh_alloc { " +alloc" } else { "" })
+        }
+        PrimOp::Concat { bytes } => format!("concat {bytes}B"),
+        PrimOp::HostOp { bytes } => format!("host {bytes}B"),
+    }
+}
+
+/// One lifecycle stage of a request, on the serve-loop clock (ns).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Stage {
+    pub name: &'static str,
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+impl Stage {
+    pub fn dur_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+}
+
+/// One simulated primitive on one NPU engine, absolute ns on the
+/// request's timeline (already rebased by the tracer).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineSpan {
+    pub engine: Engine,
+    pub name: String,
+    pub start_ns: f64,
+    pub dur_ns: f64,
+    /// Node id in the lowered graph.
+    pub node: usize,
+    /// Dependency count (fan-in) of the node.
+    pub deps: usize,
+}
+
+/// Extract per-engine spans from a simulation trace, starting at 0 ns;
+/// the tracer rebases them onto the request timeline.
+pub fn engine_spans(graph: &OpGraph, trace: &SimTrace) -> Vec<EngineSpan> {
+    graph
+        .nodes
+        .iter()
+        .map(|node| {
+            let t = trace.timings[node.id];
+            EngineSpan {
+                engine: node.prim.engine(),
+                name: prim_label(&node.prim),
+                start_ns: ps_to_ns(t.start_ps),
+                dur_ns: ps_to_ns(t.end_ps.saturating_sub(t.start_ps)),
+                node: node.id,
+                deps: node.deps.len(),
+            }
+        })
+        .collect()
+}
+
+/// Full span tree of one request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestTrace {
+    pub trace_id: u64,
+    pub session: u64,
+    /// Workload label, e.g. `causal N=1024`.
+    pub label: String,
+    /// Registry operator that served it (set at lowering; `None` when
+    /// shed before lowering or served by a precompiled artifact).
+    pub operator: Option<&'static str>,
+    /// `served`, `shed`, or `error`.
+    pub outcome: &'static str,
+    pub stages: Vec<Stage>,
+    pub engine_spans: Vec<EngineSpan>,
+}
+
+impl RequestTrace {
+    /// Earliest stage start (ns); `u64::MAX` when empty.
+    pub fn start_ns(&self) -> u64 {
+        self.stages.iter().map(|s| s.start_ns).min().unwrap_or(u64::MAX)
+    }
+}
+
+/// Collects request traces on the serving thread. Every method is a
+/// no-op when disabled, so the untraced serve path pays one branch; the
+/// completed-trace buffer is capacity-bounded (overflow is counted, not
+/// stored).
+#[derive(Debug)]
+pub struct Tracer {
+    enabled: bool,
+    capacity: usize,
+    active: HashMap<u64, RequestTrace>,
+    done: Vec<RequestTrace>,
+    dropped: u64,
+}
+
+impl Tracer {
+    pub fn new(enabled: bool, capacity: usize) -> Self {
+        Self { enabled, capacity, active: HashMap::new(), done: Vec::new(), dropped: 0 }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Traces dropped because the completed buffer was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Open a trace at request intake.
+    pub fn begin(&mut self, trace_id: u64, session: u64, label: String) {
+        if !self.enabled {
+            return;
+        }
+        self.active.insert(
+            trace_id,
+            RequestTrace {
+                trace_id,
+                session,
+                label,
+                operator: None,
+                outcome: "open",
+                stages: Vec::new(),
+                engine_spans: Vec::new(),
+            },
+        );
+    }
+
+    /// Record one lifecycle stage on an open trace.
+    pub fn stage(&mut self, trace_id: u64, name: &'static str, start_ns: u64, end_ns: u64) {
+        if let Some(t) = self.active.get_mut(&trace_id) {
+            t.stages.push(Stage { name, start_ns, end_ns: end_ns.max(start_ns) });
+        }
+    }
+
+    pub fn set_operator(&mut self, trace_id: u64, operator: &'static str) {
+        if let Some(t) = self.active.get_mut(&trace_id) {
+            t.operator = Some(operator);
+        }
+    }
+
+    /// Attach simulated engine spans, rebased so the simulation's t=0
+    /// lands at `base_ns` on the request timeline.
+    pub fn attach_engine_spans(&mut self, trace_id: u64, base_ns: u64, spans: &[EngineSpan]) {
+        if let Some(t) = self.active.get_mut(&trace_id) {
+            t.engine_spans.extend(spans.iter().map(|s| EngineSpan {
+                start_ns: s.start_ns + base_ns as f64,
+                name: s.name.clone(),
+                ..*s
+            }));
+        }
+    }
+
+    /// Close a trace with its outcome and move it to the completed
+    /// buffer (or count it dropped when over capacity).
+    pub fn finish(&mut self, trace_id: u64, outcome: &'static str) {
+        let Some(mut t) = self.active.remove(&trace_id) else {
+            return;
+        };
+        t.outcome = outcome;
+        if self.done.len() >= self.capacity {
+            self.dropped += 1;
+        } else {
+            self.done.push(t);
+        }
+    }
+
+    /// Completed traces, in completion order.
+    pub fn snapshot(&self) -> Vec<RequestTrace> {
+        self.done.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
+    use crate::npu::engine::simulate;
+    use crate::ops;
+
+    fn lowered(op: OperatorKind, n: usize) -> (OpGraph, SimTrace) {
+        let (hw, sim) = (NpuConfig::default(), SimConfig::default());
+        let g = ops::lower(&WorkloadSpec::new(op, n), &hw, &sim);
+        let t = simulate(&g, &hw, &sim);
+        (g, t)
+    }
+
+    #[test]
+    fn engine_spans_cover_every_node() {
+        let (g, t) = lowered(OperatorKind::Linear, 256);
+        let spans = engine_spans(&g, &t);
+        assert_eq!(spans.len(), g.len());
+        for s in &spans {
+            assert!(s.dur_ns >= 0.0);
+            assert!(s.start_ns >= 0.0);
+        }
+        // Spans reflect the simulated schedule, ps -> ns.
+        let makespan = ps_to_ns(t.span_ps);
+        assert!(spans.iter().all(|s| s.start_ns + s.dur_ns <= makespan + 1e-6));
+    }
+
+    #[test]
+    fn tracer_records_a_full_lifecycle() {
+        let mut tr = Tracer::new(true, 16);
+        tr.begin(7, 3, "causal N=128".into());
+        tr.stage(7, "queued", 100, 200);
+        tr.set_operator(7, "causal");
+        let (g, t) = lowered(OperatorKind::Causal, 128);
+        let spans = engine_spans(&g, &t);
+        tr.attach_engine_spans(7, 200, &spans);
+        tr.stage(7, "respond", 200, 210);
+        tr.finish(7, "served");
+        let done = tr.snapshot();
+        assert_eq!(done.len(), 1);
+        let rt = &done[0];
+        assert_eq!(rt.trace_id, 7);
+        assert_eq!(rt.operator, Some("causal"));
+        assert_eq!(rt.outcome, "served");
+        assert_eq!(rt.stages.len(), 2);
+        assert_eq!(rt.engine_spans.len(), spans.len());
+        // Rebased onto the request timeline.
+        assert!(rt.engine_spans.iter().all(|s| s.start_ns >= 200.0));
+        assert_eq!(rt.start_ns(), 100);
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let mut tr = Tracer::new(false, 16);
+        tr.begin(1, 1, "x".into());
+        tr.stage(1, "queued", 0, 1);
+        tr.finish(1, "served");
+        assert!(tr.snapshot().is_empty());
+        assert_eq!(tr.dropped(), 0);
+    }
+
+    #[test]
+    fn capacity_bounds_completed_traces() {
+        let mut tr = Tracer::new(true, 2);
+        for id in 0..5 {
+            tr.begin(id, 0, "x".into());
+            tr.finish(id, "served");
+        }
+        assert_eq!(tr.snapshot().len(), 2);
+        assert_eq!(tr.dropped(), 3);
+    }
+
+    #[test]
+    fn backwards_stage_is_clamped() {
+        let mut tr = Tracer::new(true, 4);
+        tr.begin(1, 0, "x".into());
+        tr.stage(1, "weird", 50, 10);
+        tr.finish(1, "served");
+        let done = tr.snapshot();
+        assert_eq!(done[0].stages[0].dur_ns(), 0);
+    }
+
+    #[test]
+    fn engine_index_agrees_with_trace_dump_tids() {
+        // The chrome export puts engine tracks at tid 1 + engine_index;
+        // pin the mapping the fixtures rely on.
+        assert_eq!(engine_index(Engine::Dpu), 0);
+        assert_eq!(engine_index(Engine::Shave), 1);
+        assert_eq!(engine_index(Engine::Dma), 2);
+        assert_eq!(engine_index(Engine::Cpu), 3);
+    }
+}

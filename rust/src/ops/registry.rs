@@ -120,6 +120,15 @@ pub enum BoundClass {
 }
 
 impl BoundClass {
+    /// Every class, in taxonomy order — lets metrics consumers iterate
+    /// the label space without hardcoding it.
+    pub const ALL: [BoundClass; 4] = [
+        BoundClass::Memory,
+        BoundClass::Compute,
+        BoundClass::VectorCompute,
+        BoundClass::DataMovement,
+    ];
+
     /// Stable lower-case label used in reports.
     pub fn label(&self) -> &'static str {
         match self {
@@ -460,6 +469,17 @@ mod tests {
 
     fn cfg() -> (NpuConfig, SimConfig) {
         (NpuConfig::default(), SimConfig::default())
+    }
+
+    #[test]
+    fn bound_class_all_covers_every_label_once() {
+        assert_eq!(BoundClass::ALL.len(), 4);
+        let mut labels: Vec<&str> = BoundClass::ALL.iter().map(|c| c.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 4, "labels are distinct");
+        assert!(labels.contains(&"memory-bound"));
+        assert!(labels.contains(&"vector-compute-bound"));
     }
 
     #[test]

@@ -139,6 +139,8 @@ pub fn selftest(hw: &NpuConfig, sim: &SimConfig, opts: &SelftestOptions) -> Self
 
     section("replay-determinism", replay_section(hw, sim, &opts.seeds));
 
+    section("obs-conformance", obs_section(hw, sim, &opts.seeds));
+
     // Golden fixtures capture *default-config* output; with hardware
     // overrides in play the snapshot legitimately differs, so skip
     // rather than fail (the differential sections above still ran on the
@@ -212,6 +214,64 @@ fn replay_section(hw: &NpuConfig, sim: &SimConfig, seeds: &[u64]) -> Result<Stri
     let total = served + shed;
     Ok(format!(
         "{} seeds x 2 replays, {served}/{total} served, {shed} shed, outcomes identical",
+        seeds.len()
+    ))
+}
+
+/// Observability conformance: replay a traced stream on a frozen
+/// [`ManualClock`](crate::coordinator::ManualClock) and check every
+/// export surface — the merged Chrome timeline parses, the JSONL event
+/// log parses line by line, the Prometheus exposition lints, and its
+/// served counters agree with the replay's outcomes exactly.
+fn obs_section(hw: &NpuConfig, sim: &SimConfig, seeds: &[u64]) -> Result<String, String> {
+    use crate::coordinator::{Coordinator, CoordinatorConfig, ManualClock};
+    let mut spans = 0usize;
+    for &seed in seeds {
+        let cfg = workload::StreamConfig { requests: 12, ..workload::StreamConfig::new(seed) };
+        let coord = Coordinator::new(CoordinatorConfig {
+            max_batch: 1,
+            max_wait_ns: 100_000,
+            trace: true,
+            clock: Some(std::sync::Arc::new(ManualClock::new())),
+            ..CoordinatorConfig::for_hw(hw.clone(), sim.clone())
+        })
+        .map_err(|e| format!("seed {seed}: coordinator: {e}"))?;
+        let outcomes = workload::replay(&coord, &workload::stream(&cfg));
+        let served = outcomes
+            .iter()
+            .filter(|o| matches!(o, workload::Outcome::Served { .. }))
+            .count();
+        let traces = coord.traces().map_err(|e| format!("seed {seed}: traces: {e}"))?;
+        if traces.len() != outcomes.len() {
+            return Err(format!(
+                "seed {seed}: {} traces for {} requests",
+                traces.len(),
+                outcomes.len()
+            ));
+        }
+        let timeline = crate::obs::chrome(&traces);
+        crate::obs::validate_json(&timeline)
+            .map_err(|e| format!("seed {seed}: merged timeline: {e}"))?;
+        for line in crate::obs::jsonl(&traces).lines() {
+            crate::obs::validate_json(line).map_err(|e| format!("seed {seed}: event log: {e}"))?;
+        }
+        let prom = coord.metrics_prometheus().map_err(|e| format!("seed {seed}: {e}"))?;
+        crate::obs::lint_prometheus(&prom)
+            .map_err(|e| format!("seed {seed}: exposition: {e}"))?;
+        let total: u64 = prom
+            .lines()
+            .filter(|l| l.starts_with("npuperf_requests_served_total{"))
+            .filter_map(|l| l.rsplit_once(' ').and_then(|(_, v)| v.parse::<u64>().ok()))
+            .sum();
+        if total != served as u64 {
+            return Err(format!(
+                "seed {seed}: exposition counts {total} served, replay saw {served}"
+            ));
+        }
+        spans += timeline.matches("\"ph\":\"X\"").count();
+    }
+    Ok(format!(
+        "{} seeds, merged timelines valid, {spans} spans, expositions lint clean",
         seeds.len()
     ))
 }

@@ -156,7 +156,56 @@ fn injected_clock_makes_serving_metrics_deterministic() {
     let snap = coord.metrics_snapshot().unwrap();
     assert!(snap.contains("uptime_ms=8000.000"), "{snap}");
     assert!(snap.contains("rps=0.50"), "{snap}");
-    assert!(snap.contains("mean=0.000 ms"), "queue age never ticked: {snap}");
+    // The per-operator table row: 4 served, and every latency column
+    // (mean/p50/p95/p99/max) exactly zero — the clock never ticked while
+    // a request was in flight.
+    let row = snap
+        .lines()
+        .find(|l| l.starts_with("retentive"))
+        .unwrap_or_else(|| panic!("missing retentive row: {snap}"));
+    let cols: Vec<&str> = row.split_whitespace().collect();
+    assert_eq!(cols[1], "4", "{row}");
+    assert!(cols[2..].iter().all(|c| *c == "0.000"), "latency never ticked: {row}");
+}
+
+#[test]
+fn queue_age_is_exact_under_a_manual_clock() {
+    // A request that sits in an unfilled batch until the window expires
+    // is charged an enqueue-to-dispatch age of *exactly* the injected
+    // clock's movement: submit at t=0, advance by 5 ms (> the 2 ms
+    // window), and the expiry dispatch stamps queue_ns = 5 ms. The
+    // snapshot round trip is the FIFO barrier that guarantees the serve
+    // loop stamped enqueued_ns before the clock moves.
+    let clock = ManualClock::new();
+    let coord = Coordinator::new(CoordinatorConfig {
+        max_batch: 8, // never fills: expiry is the only dispatch path
+        max_wait_ns: 2_000_000,
+        clock: Some(std::sync::Arc::new(clock.clone())),
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let pending = coord
+        .submit_async(Request {
+            spec: WorkloadSpec::new(OperatorKind::Toeplitz, 512),
+            session: 3,
+            inputs: None,
+        })
+        .unwrap();
+    let _ = coord.metrics_snapshot().unwrap(); // barrier: Submit processed
+    clock.advance_ns(5_000_000);
+    let resp = pending.wait().unwrap();
+    assert_eq!(resp.queue_ns, 5_000_000, "exact enqueue-to-dispatch age");
+    // The queue histogram saw exactly that one sample; the exposition
+    // carries the same number.
+    let prom = coord.metrics_prometheus().unwrap();
+    assert!(
+        prom.contains(r#"npuperf_request_queue_ns_sum{operator="toeplitz"} 5000000"#),
+        "{prom}"
+    );
+    assert!(
+        prom.contains(r#"npuperf_request_queue_ns_count{operator="toeplitz"} 1"#),
+        "{prom}"
+    );
 }
 
 #[test]
