@@ -5,7 +5,7 @@
 //! npuperf table <1..8>           # one table
 //! npuperf figures                # figs 3-8
 //! npuperf sweep [--contexts A,B] # every registered operator x context grid
-//! npuperf capacity [--contexts A,B] # max resident sessions per op x context
+//! npuperf capacity [--contexts A,B] [--devices N] # max resident sessions per op x context
 //! npuperf operators              # list the operator registry
 //! npuperf simulate <op> <N> [--d-state D] [--offload] [--no-double-buffer]
 //! npuperf roofline               # calibation + fig 7
@@ -13,7 +13,7 @@
 //! npuperf rank <N>               # cost-model operator ranking (§V)
 //! npuperf chunking <N>           # chunked-prefill plan sweep (§V)
 //! npuperf validate [dir]         # golden-validate every artifact via PJRT
-//! npuperf serve [dir] [--requests K --seed S] [--deterministic]
+//! npuperf serve [dir] [--requests K --seed S] [--devices N] [--deterministic]
 //!               [--trace-out F] [--metrics-out F] [--events-out F]
 //! npuperf obs <file>             # validate an exported observability artifact
 //! npuperf selftest [--seeds A,B,C] [--contexts A,B] [--bless]
@@ -76,6 +76,23 @@ fn parse_contexts(rest: &[&str], default: &[usize]) -> Result<Vec<usize>> {
             contexts.sort_unstable();
             contexts.dedup();
             Ok(contexts)
+        }
+    }
+}
+
+/// Parse an optional `--devices N` flag (positive; 1 when absent).
+fn parse_devices(rest: &[&str]) -> Result<usize> {
+    match rest.iter().position(|a| *a == "--devices") {
+        None => Ok(1),
+        Some(i) => {
+            let s = rest
+                .get(i + 1)
+                .ok_or_else(|| anyhow!("--devices expects a positive device count"))?;
+            let n: usize = s.parse().map_err(|e| anyhow!("bad --devices {s:?}: {e}"))?;
+            if n == 0 {
+                bail!("--devices must be positive");
+            }
+            Ok(n)
         }
     }
 }
@@ -177,7 +194,8 @@ pub fn run(args: &[String]) -> Result<String> {
         }
         "capacity" => {
             let contexts = parse_contexts(&rest, &[512, 2048, 8192, 32768])?;
-            Ok(crate::report::sweep::capacity_report(&contexts, &hw, &sim))
+            let devices = parse_devices(&rest)?;
+            Ok(crate::report::sweep::capacity_fleet_report(&contexts, &hw, &sim, devices))
         }
         "selftest" => {
             let opts = crate::testkit::SelftestOptions {
@@ -430,6 +448,7 @@ pub fn run(args: &[String]) -> Result<String> {
             let metrics_out = opt("--metrics-out").map(str::to_string);
             let events_out = opt("--events-out").map(str::to_string);
             let deterministic = flag("--deterministic");
+            let devices = parse_devices(&rest)?;
             // Honor --hw/--sim overrides: the session-memory pool is
             // sized from the configured device, not the default one.
             let base = CoordinatorConfig::for_hw(hw, sim);
@@ -440,6 +459,7 @@ pub fn run(args: &[String]) -> Result<String> {
             // of the seed — what the CI golden snapshot pins.
             let coord = Coordinator::new(CoordinatorConfig {
                 artifact_dir,
+                devices,
                 trace: trace_out.is_some() || events_out.is_some(),
                 max_batch: if deterministic { 1 } else { base.max_batch },
                 max_wait_ns: if deterministic { 100_000 } else { base.max_wait_ns },
@@ -528,6 +548,10 @@ pub fn run(args: &[String]) -> Result<String> {
             }
             out += "\n";
             out += &coord.metrics_snapshot()?;
+            if devices > 1 {
+                out += "\n";
+                out += &crate::report::sweep::fleet_occupancy_report(&coord.fleet()?);
+            }
             Ok(out)
         }
         "obs" => {
@@ -602,8 +626,10 @@ commands:
   figures | masks [N]       paper figures 3-8
   sweep [--contexts A,B,C]  run every registered operator across a context
                             grid; per-cell bottleneck classification
-  capacity [--contexts A,B] max concurrently resident sessions per operator
-                            x context under the paged session-memory pool
+  capacity [--contexts A,B] [--devices N]
+                            max concurrently resident sessions per operator
+                            x context under the paged session-memory pool;
+                            --devices appends the linear fleet ceiling
   selftest [--seeds A,B,C] [--contexts A,B] [--bless]
                             deterministic conformance suite: differential
                             serve-vs-direct check, memory/batcher invariants,
@@ -620,11 +646,13 @@ commands:
   chunking <N>              chunked-prefill plan sweep
   plan-model [N]            whole-LLM deployment feasibility per operator
   validate [dir]            golden-validate AOT artifacts via PJRT
-  serve [dir] [--requests K --seed S] [--deterministic]
+  serve [dir] [--requests K --seed S] [--devices N] [--deterministic]
         [--trace-out F] [--metrics-out F] [--events-out F]
                             serving run: seeded request stream (or the demo
                             grid), optional merged Perfetto timeline, JSONL
                             event log and Prometheus metrics exposition;
+                            --devices sizes the execution fleet (session-
+                            affine placement, per-device occupancy table);
                             --deterministic freezes the clock for byte-stable
                             metrics (CI golden snapshots)
   obs <file>                validate an exported artifact: Chrome trace /
@@ -666,6 +694,23 @@ mod tests {
     fn capacity_rejects_malformed_contexts() {
         assert!(run_cmd(&["capacity", "--contexts", "12a"]).is_err());
         assert!(run_cmd(&["capacity", "--contexts"]).is_err());
+    }
+
+    #[test]
+    fn capacity_devices_appends_fleet_ceiling() {
+        let one = run_cmd(&["capacity", "--contexts", "512,8192"]).unwrap();
+        assert!(!one.contains("Fleet capacity"), "{one}");
+        let four = run_cmd(&["capacity", "--contexts", "512,8192", "--devices", "4"]).unwrap();
+        assert!(four.contains("Fleet capacity (4 devices"), "{four}");
+    }
+
+    #[test]
+    fn devices_flag_is_validated() {
+        assert_eq!(parse_devices(&["--devices", "4"]).unwrap(), 4);
+        assert_eq!(parse_devices(&[]).unwrap(), 1);
+        assert!(parse_devices(&["--devices", "0"]).is_err());
+        assert!(parse_devices(&["--devices", "x"]).is_err());
+        assert!(parse_devices(&["--devices"]).is_err());
     }
 
     #[test]
@@ -837,6 +882,26 @@ mod tests {
         assert!(run_cmd(&["serve", "--requests", "0"]).is_err());
         assert!(run_cmd(&["serve", "--requests", "nope"]).is_err());
         assert!(run_cmd(&["serve", "--seed", "x", "--requests", "1"]).is_err());
+        assert!(run_cmd(&["serve", "--requests", "1", "--devices", "0"]).is_err());
+    }
+
+    #[test]
+    fn serve_multi_device_prints_fleet_occupancy() {
+        let out = run_cmd(&[
+            "serve",
+            "--requests",
+            "12",
+            "--seed",
+            "1",
+            "--deterministic",
+            "--devices",
+            "4",
+        ])
+        .unwrap();
+        assert!(out.contains("served 12/12"), "{out}");
+        assert!(out.contains("devices=4"), "{out}");
+        assert!(out.contains("Fleet occupancy: 4 devices"), "{out}");
+        assert!(out.contains("d0") && out.contains("d3"), "{out}");
     }
 
     #[test]

@@ -1,0 +1,396 @@
+//! First-class device fleet: the execution layer under the coordinator.
+//!
+//! The paper models a *single* NPU; the serving stack's north star is a
+//! fleet of them. A [`Device`] owns everything execution needs that used
+//! to live implicitly in `serve_loop`'s locals: its simulated-NPU
+//! hardware model, the roofline [`Ceilings`] calibrated against it, its
+//! own paged [`StateManager`] session-memory pool (KV / recurrent state
+//! is **device-resident**), and a model-time `busy_until_ns` timeline
+//! that accumulates the simulated/backend nanoseconds of every batch it
+//! runs. The [`Fleet`] adds the placement policy on top:
+//!
+//! 1. **Session affinity first** — a batch lands on the device already
+//!    holding its sessions' state, because moving a session means paying
+//!    the [`crate::memory::SpillModel`] transfer cost twice (spill out of
+//!    the old pool, refill into the new one).
+//! 2. **Least-loaded otherwise** — a batch with no resident sessions
+//!    goes to the device whose `busy_until_ns` timeline ends earliest,
+//!    lowest id breaking ties.
+//!
+//! Both rules are pure functions of submission order and the injected
+//! [`crate::coordinator::Clock`] — no map-iteration order, no wall time —
+//! so testkit replays stay exactly deterministic, and a 1-device fleet
+//! reproduces the old single-device loop bit for bit.
+
+use std::collections::HashMap;
+
+use crate::config::{NpuConfig, SimConfig};
+use crate::memory::{MemoryConfig, SpillModel};
+use crate::model::{self, Ceilings};
+
+use super::server::CoordinatorConfig;
+use super::state::StateManager;
+
+/// Stable `device="dN"` label for metrics and traces. Ids 0..16 are
+/// interned constants; larger fleets leak one small string per device,
+/// once, at construction.
+pub fn device_label(id: usize) -> &'static str {
+    const LABELS: [&str; 16] = [
+        "d0", "d1", "d2", "d3", "d4", "d5", "d6", "d7", "d8", "d9", "d10", "d11", "d12",
+        "d13", "d14", "d15",
+    ];
+    match LABELS.get(id) {
+        Some(l) => l,
+        None => Box::leak(format!("d{id}").into_boxed_str()),
+    }
+}
+
+/// One execution device: hardware model, calibrated ceilings, resident
+/// session state, and a model-time occupancy timeline.
+#[derive(Debug)]
+pub struct Device {
+    /// Fleet index (also the `Response::device` attribution).
+    pub id: usize,
+    /// Interned `"dN"` metric/trace label.
+    pub label: &'static str,
+    /// This device's simulated-NPU hardware model.
+    pub hw: NpuConfig,
+    /// Simulator knobs paired with `hw`.
+    pub sim: SimConfig,
+    /// Roofline ceilings calibrated once against `hw`/`sim`.
+    pub ceilings: Ceilings,
+    /// Device-resident session-memory pool (KV / recurrent state).
+    pub state: StateManager,
+    /// Spill pricing for cross-device session migration.
+    spill: SpillModel,
+    /// Migration charges owed by sessions that just moved here, drained
+    /// into the next request's `spill_ns` by the dispatcher.
+    migration_debt: HashMap<u64, f64>,
+    /// End of this device's model-time timeline, ns on the serve clock.
+    busy_until_ns: u64,
+    /// Total model time executed (occupancy numerator), ns.
+    busy_ns_total: u64,
+    served: u64,
+    batches: u64,
+    migrations_in: u64,
+}
+
+impl Device {
+    /// Build device `id` for a deployment. Every device gets its own
+    /// session-memory pool of `cfg.state_budget_bytes` — the budget is
+    /// per device, mirroring per-device DRAM.
+    pub fn new(id: usize, cfg: &CoordinatorConfig) -> Self {
+        let mem = MemoryConfig::calibrated(&cfg.hw, &cfg.sim)
+            .with_pool_bytes(cfg.state_budget_bytes);
+        let spill = SpillModel { beta_eff_gbps: mem.beta_eff_gbps, setup_ns: mem.spill_setup_ns };
+        Self {
+            id,
+            label: device_label(id),
+            ceilings: model::calibrate(&cfg.hw, &cfg.sim),
+            state: StateManager::with_config(mem),
+            spill,
+            migration_debt: HashMap::new(),
+            hw: cfg.hw.clone(),
+            sim: cfg.sim.clone(),
+            busy_until_ns: 0,
+            busy_ns_total: 0,
+            served: 0,
+            batches: 0,
+            migrations_in: 0,
+        }
+    }
+
+    /// End of this device's model-time timeline (ns on the serve clock).
+    pub fn busy_until_ns(&self) -> u64 {
+        self.busy_until_ns
+    }
+
+    /// Total model time this device has executed, ns.
+    pub fn busy_ns_total(&self) -> u64 {
+        self.busy_ns_total
+    }
+
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    /// Sessions migrated onto this device from elsewhere in the fleet.
+    pub fn migrations_in(&self) -> u64 {
+        self.migrations_in
+    }
+
+    /// Extend the timeline by one batch's model time: the batch starts at
+    /// `dispatch_ns` or when the previous batch ends, whichever is later.
+    pub fn advance(&mut self, dispatch_ns: u64, model_ns: u64) {
+        self.busy_until_ns = self.busy_until_ns.max(dispatch_ns).saturating_add(model_ns);
+        self.busy_ns_total = self.busy_ns_total.saturating_add(model_ns);
+    }
+
+    /// Accounting hook for the dispatcher: one batch, `served` replies.
+    pub(crate) fn note_batch(&mut self, served: u64) {
+        self.batches += 1;
+        self.served += served;
+    }
+
+    /// Drain the migration transfer charge owed by `session` (ns). Zero
+    /// for sessions that did not just migrate here.
+    pub(crate) fn take_migration_debt(&mut self, session: u64) -> f64 {
+        self.migration_debt.remove(&session).unwrap_or(0.0)
+    }
+
+    fn owe_migration(&mut self, session: u64, bytes: u64) {
+        // Spill out of the old pool + refill into this one: two
+        // transfers at the calibrated DMA ceiling.
+        self.migrations_in += 1;
+        *self.migration_debt.entry(session).or_insert(0.0) +=
+            2.0 * self.spill.transfer_ns(bytes);
+    }
+
+    /// Read-only stat snapshot for exports and reports.
+    pub fn stat(&self) -> DeviceStat {
+        DeviceStat {
+            id: self.id,
+            label: self.label,
+            busy_until_ns: self.busy_until_ns,
+            busy_ns_total: self.busy_ns_total,
+            served: self.served,
+            batches: self.batches,
+            sessions: self.state.len(),
+            resident_sessions: self.state.resident_sessions(),
+            migrations_in: self.migrations_in,
+        }
+    }
+}
+
+/// Read-only per-device snapshot handed out by
+/// [`crate::coordinator::Coordinator::fleet`].
+#[derive(Clone, Debug)]
+pub struct DeviceStat {
+    pub id: usize,
+    pub label: &'static str,
+    /// End of the device's model-time timeline, ns.
+    pub busy_until_ns: u64,
+    /// Total model time executed, ns (occupancy numerator).
+    pub busy_ns_total: u64,
+    pub served: u64,
+    pub batches: u64,
+    /// Sessions tracked by the device's pool (resident + spilled).
+    pub sessions: usize,
+    pub resident_sessions: usize,
+    pub migrations_in: u64,
+}
+
+/// The device fleet plus the placement policy and session→device
+/// affinity map.
+#[derive(Debug)]
+pub struct Fleet {
+    devices: Vec<Device>,
+    /// Which device currently holds each session's state.
+    affinity: HashMap<u64, usize>,
+    migrations: u64,
+}
+
+impl Fleet {
+    /// A fleet of `cfg.devices.max(1)` identical devices.
+    pub fn new(cfg: &CoordinatorConfig) -> Self {
+        let count = cfg.devices.max(1);
+        Self {
+            devices: (0..count).map(|id| Device::new(id, cfg)).collect(),
+            affinity: HashMap::new(),
+            migrations: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+
+    pub fn device_mut(&mut self, id: usize) -> &mut Device {
+        &mut self.devices[id]
+    }
+
+    /// Sessions moved between devices so far (fleet-wide).
+    pub fn migrations(&self) -> u64 {
+        self.migrations
+    }
+
+    /// End of the latest device timeline — the fleet's aggregate
+    /// model-time makespan, ns.
+    pub fn makespan_ns(&self) -> u64 {
+        self.devices.iter().map(|d| d.busy_until_ns).max().unwrap_or(0)
+    }
+
+    /// Is `session`'s state resident on its affine device's pool?
+    pub fn is_resident(&self, session: u64) -> bool {
+        self.affinity
+            .get(&session)
+            .is_some_and(|&d| self.devices[d].state.is_resident(session))
+    }
+
+    /// Place one batch: session affinity first (majority vote over the
+    /// batch's sessions, in submission order; lowest device id breaks
+    /// ties), else least-loaded by `busy_until_ns` (lowest id on ties).
+    /// Sessions landing away from their previous device are migrated:
+    /// their state leaves the old pool and the transfer cost is owed to
+    /// the next request on the new device. Deterministic: votes are
+    /// tallied in a dense per-device array, never by map iteration.
+    pub fn place(&mut self, sessions: &[u64]) -> usize {
+        let mut votes = vec![0usize; self.devices.len()];
+        for s in sessions {
+            if let Some(&d) = self.affinity.get(s) {
+                votes[d] += 1;
+            }
+        }
+        let mut chosen = None;
+        let mut best = 0usize;
+        for (id, &v) in votes.iter().enumerate() {
+            if v > best {
+                best = v;
+                chosen = Some(id);
+            }
+        }
+        let chosen = chosen.unwrap_or_else(|| self.least_loaded());
+        for &s in sessions {
+            match self.affinity.insert(s, chosen) {
+                Some(prev) if prev != chosen => {
+                    let bytes = self.devices[prev].state.session_bytes(s).unwrap_or(0);
+                    self.devices[prev].state.close(s);
+                    self.devices[chosen].owe_migration(s, bytes);
+                    self.migrations += 1;
+                }
+                _ => {}
+            }
+        }
+        chosen
+    }
+
+    fn least_loaded(&self) -> usize {
+        let mut best = 0;
+        for (id, d) in self.devices.iter().enumerate().skip(1) {
+            if d.busy_until_ns < self.devices[best].busy_until_ns {
+                best = id;
+            }
+        }
+        best
+    }
+
+    /// Per-device stat snapshots, in device-id order.
+    pub fn stats(&self) -> Vec<DeviceStat> {
+        self.devices.iter().map(Device::stat).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OperatorKind;
+
+    fn fleet(n: usize) -> Fleet {
+        Fleet::new(&CoordinatorConfig { devices: n, ..CoordinatorConfig::default() })
+    }
+
+    #[test]
+    fn labels_are_stable_and_interned() {
+        assert_eq!(device_label(0), "d0");
+        assert_eq!(device_label(15), "d15");
+        assert_eq!(device_label(40), "d40");
+    }
+
+    #[test]
+    fn single_device_fleet_places_everything_on_d0() {
+        let mut f = fleet(1);
+        for s in 0..20u64 {
+            assert_eq!(f.place(&[s]), 0);
+        }
+        assert_eq!(f.migrations(), 0);
+    }
+
+    #[test]
+    fn least_loaded_spreads_distinct_sessions() {
+        // Satellite: four idle devices, four fresh sessions — each lands
+        // on the earliest-ending (then lowest-id) device, so busy work
+        // spreads round-robin as timelines grow.
+        let mut f = fleet(4);
+        for s in 0..4u64 {
+            let d = f.place(&[s]);
+            assert_eq!(d, s as usize, "fresh session {s} takes the idle lowest id");
+            f.device_mut(d).advance(0, 1_000 * (s + 1));
+        }
+        // Next fresh session goes to the device that frees up first (d0
+        // ends at 1000 ns, the earliest).
+        assert_eq!(f.place(&[99]), 0);
+    }
+
+    #[test]
+    fn session_affinity_beats_load() {
+        let mut f = fleet(2);
+        assert_eq!(f.place(&[7]), 0);
+        // Load d0 far beyond d1: affinity still wins for session 7.
+        f.device_mut(0).advance(0, 1_000_000);
+        assert_eq!(f.place(&[7]), 0, "resident state keeps the session on d0");
+        // A fresh session avoids the loaded device.
+        assert_eq!(f.place(&[8]), 1);
+        assert_eq!(f.migrations(), 0);
+    }
+
+    #[test]
+    fn majority_vote_migrates_the_minority_session() {
+        let mut f = fleet(2);
+        f.place(&[1]); // d0
+        f.device_mut(0).advance(0, 10);
+        f.place(&[2]); // d1 (least loaded)
+        // Open real state for session 2 on d1 so migration has bytes.
+        f.device_mut(1).state.open(2, OperatorKind::Causal, 64, 16);
+        f.device_mut(1).state.append(2, 1024);
+        // A batch with two d0-affine sessions and one d1 session: the
+        // majority pins it to d0 and session 2 migrates, owing transfer.
+        let chosen = f.place(&[1, 1, 2]);
+        assert_eq!(chosen, 0, "majority affinity wins");
+        assert_eq!(f.migrations(), 1);
+        let debt = f.device_mut(0).take_migration_debt(2);
+        assert!(debt > 0.0, "migrated session owes the 2x transfer cost: {debt}");
+        assert_eq!(f.device_mut(0).take_migration_debt(2), 0.0, "debt drains once");
+        assert_eq!(f.devices()[1].state.session_bytes(2), None, "state left the old pool");
+    }
+
+    #[test]
+    fn makespan_is_the_latest_timeline() {
+        let mut f = fleet(3);
+        f.device_mut(0).advance(0, 500);
+        f.device_mut(2).advance(100, 900);
+        assert_eq!(f.makespan_ns(), 1_000);
+        let stats = f.stats();
+        assert_eq!(stats.len(), 3);
+        assert_eq!(stats[2].busy_until_ns, 1_000);
+        assert_eq!(stats[2].busy_ns_total, 900);
+        assert_eq!(stats[1].busy_until_ns, 0);
+    }
+
+    #[test]
+    fn advance_queues_behind_the_running_batch() {
+        let mut d = Device::new(0, &CoordinatorConfig::default());
+        d.advance(100, 50); // idle device: starts at dispatch time
+        assert_eq!(d.busy_until_ns(), 150);
+        d.advance(120, 30); // dispatched while busy: queues behind
+        assert_eq!(d.busy_until_ns(), 180);
+        assert_eq!(d.busy_ns_total(), 80);
+    }
+
+    #[test]
+    fn zero_devices_clamps_to_one() {
+        let f = fleet(0);
+        assert_eq!(f.len(), 1);
+    }
+}

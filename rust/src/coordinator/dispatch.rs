@@ -1,0 +1,353 @@
+//! Batch dispatch: run one batch on one [`Device`].
+//!
+//! This is the execution stage of the serve pipeline, extracted from the
+//! ~200-line closure that used to live inside `serve_loop`. The
+//! [`Dispatcher`] owns the routing policy, the (optional) PJRT executor
+//! handle, and the injected [`Clock`]; each [`Dispatcher::dispatch`] call
+//! takes the batch the placement stage assigned plus a mutable [`Device`]
+//! and runs the whole per-batch path on it — registry lowering, NPU
+//! simulation (or PJRT execution), session-memory admission against the
+//! *device's* pool, tracing, metrics (labeled with the device), replies —
+//! then extends the device's model-time timeline by the batch's cost.
+//!
+//! Nothing here panics on the serving thread: a kind missing from a
+//! custom registry, a degenerate PJRT input shape, or an admission
+//! refusal each turn into an error reply for the affected requests.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::npu::{self, ExecReport};
+use crate::obs::{engine_spans, Tracer};
+use crate::ops::registry;
+use crate::runtime::executor::ExecutorHandle;
+use crate::runtime::Tensor;
+
+use super::batcher::Batch;
+use super::device::Device;
+use super::metrics::{Clock, Metrics};
+use super::router::{BackendKind, Router};
+use super::server::{Job, Response};
+
+/// Runs batches on devices: the execution stage of the serve pipeline.
+#[derive(Debug)]
+pub struct Dispatcher {
+    router: Router,
+    exec: Option<ExecutorHandle>,
+    clock: Arc<dyn Clock>,
+    /// Per-device cap on tracked sessions; the dispatcher GCs the
+    /// device's pool bookkeeping after every batch.
+    max_tracked_sessions: usize,
+}
+
+impl Dispatcher {
+    pub fn new(
+        router: Router,
+        exec: Option<ExecutorHandle>,
+        clock: Arc<dyn Clock>,
+        max_tracked_sessions: usize,
+    ) -> Self {
+        Self { router, exec, clock, max_tracked_sessions }
+    }
+
+    /// The routing policy (placement and reports read it too).
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Run `batch` on `device`: resolve jobs out of `jobs`, reply to each
+    /// request, record device-labeled metrics and trace stages, and
+    /// advance the device's model-time timeline.
+    pub fn dispatch(
+        &self,
+        batch: Batch,
+        device: &mut Device,
+        jobs: &mut HashMap<u64, Job>,
+        metrics: &mut Metrics,
+        tracer: &mut Tracer,
+    ) {
+        let dispatch_ns = self.clock.now_ns();
+        let backend = self.router.route(&batch.spec);
+        let size = batch.request_ids.len();
+        metrics.record_batch(batch.spec.op, device.label, size);
+        // Model time this batch occupies the device: the simulated (or
+        // PJRT) backend span plus every admission's spill/refill charge.
+        let mut model_ns: f64 = 0.0;
+        let mut served: u64 = 0;
+        // Simulate path: resolve the batch's operator through the registry
+        // and lower once per batch signature against **this device's**
+        // hardware model. A kind missing from a custom registry leaves
+        // this as None and each request in the batch gets an error reply —
+        // never a panic on the long-lived serving thread. The PJRT path
+        // never touches the registry: it executes a precompiled artifact
+        // keyed by the workload kind.
+        let sim = if backend == BackendKind::Simulate {
+            registry::global().try_for_kind(batch.spec.op).map(|op_impl| {
+                let lower_start_ns = self.clock.now_ns();
+                let g = op_impl.lower(&batch.spec, &device.hw, &device.sim);
+                let strace = npu::simulate(&g, &device.hw, &device.sim);
+                let report = ExecReport::from_trace(&g, &strace);
+                let lower_end_ns = self.clock.now_ns();
+                metrics.record_sim(batch.spec.op, device.label, &report, &device.ceilings);
+                let spans =
+                    if tracer.enabled() { engine_spans(&g, &strace) } else { Vec::new() };
+                (op_impl.name(), report, spans, lower_start_ns, lower_end_ns)
+            })
+        } else {
+            None
+        };
+        if let Some((_, report, _, _, _)) = &sim {
+            model_ns += report.span_ns;
+        }
+        for id in batch.request_ids {
+            let Some(job) = jobs.remove(&id) else { continue };
+            let spec = job.request.spec;
+            let queue_ns = dispatch_ns.saturating_sub(job.enqueued_ns);
+            tracer.stage(id, "queued", job.enqueued_ns, dispatch_ns);
+            tracer.set_device(id, device.label);
+            // The request timeline cursor: real clock until the backend,
+            // then dilated by model time (spill charge, simulated
+            // makespan) so nested engine spans tile their stage exactly.
+            let mut cursor = dispatch_ns;
+            if let Some((_, _, _, l0, l1)) = &sim {
+                tracer.stage(id, "lower", *l0, *l1);
+                cursor = *l1;
+            }
+            // Admission control: page the session's state in before the
+            // request runs (`admit` never evicts the session it is
+            // admitting; explicit pinning is the hook for concurrent
+            // dispatchers and latency-critical sessions, not needed on
+            // this serial path). A footprint the pool can never hold is
+            // shed with an error instead of growing state without bound.
+            // A session that just migrated here additionally owes its
+            // cross-device transfer time.
+            let session = job.request.session;
+            let migration_ns = device.take_migration_debt(session);
+            device.state.open(session, spec.op, spec.d_head, spec.d_state);
+            let spill_ns = match device.state.touch(session, spec.n) {
+                Ok(adm) => {
+                    let ns = adm.total_ns() + migration_ns;
+                    tracer.stage(id, "admission", cursor, cursor + ns as u64);
+                    cursor += ns as u64;
+                    model_ns += ns;
+                    ns
+                }
+                Err(e) => {
+                    metrics.record_shed(spec.op, device.label);
+                    tracer.stage(id, "admission", cursor, cursor);
+                    tracer.finish(id, "shed");
+                    let _ = job.reply.send(Err(anyhow!(
+                        "request shed by session-memory admission control: {e}"
+                    )));
+                    continue;
+                }
+            };
+            let result = match backend {
+                BackendKind::Pjrt => self.execute_pjrt(
+                    &job, id, device, spec, size, spill_ns, queue_ns, &mut cursor, tracer,
+                ),
+                BackendKind::Simulate => match &sim {
+                    Some((operator, report, spans, _, _)) => {
+                        let operator = *operator;
+                        tracer.set_operator(id, operator);
+                        tracer.stage(id, "npu-simulate", cursor, cursor + report.span_ns as u64);
+                        tracer.attach_engine_spans(id, cursor, spans);
+                        cursor += report.span_ns as u64;
+                        Ok(Response {
+                            spec,
+                            operator,
+                            backend,
+                            device: device.id,
+                            backend_ns: report.span_ns,
+                            spill_ns,
+                            queue_ns,
+                            trace_id: id,
+                            outputs: None,
+                            sim_report: Some(report.clone()),
+                            batch_size: size,
+                        })
+                    }
+                    None => Err(anyhow!(
+                        "no operator registered for workload kind {}",
+                        spec.op
+                    )),
+                },
+            };
+            if let Ok(r) = &result {
+                if backend == BackendKind::Pjrt {
+                    model_ns += r.backend_ns;
+                }
+            }
+            tracer.stage(id, "respond", cursor, cursor);
+            match &result {
+                Ok(_) => {
+                    let latency_ns =
+                        self.clock.now_ns().saturating_sub(job.enqueued_ns).max(queue_ns) as f64;
+                    metrics.record_request(
+                        spec.op,
+                        backend,
+                        device.label,
+                        queue_ns,
+                        spill_ns,
+                        latency_ns,
+                    );
+                    tracer.finish(id, "served");
+                    served += 1;
+                }
+                Err(_) => tracer.finish(id, "error"),
+            }
+            let _ = job.reply.send(result);
+        }
+        device.note_batch(served);
+        device.advance(dispatch_ns, model_ns as u64);
+        // Keep the session map bounded: forget LRU spilled sessions once
+        // the tracked count exceeds the configured cap.
+        let _ = device.state.gc(self.max_tracked_sessions);
+    }
+
+    /// PJRT leg of one request. Default inputs are built fallibly — a
+    /// degenerate spec turns into an error reply, never a panic on the
+    /// serving thread.
+    #[allow(clippy::too_many_arguments)]
+    fn execute_pjrt(
+        &self,
+        job: &Job,
+        id: u64,
+        device: &Device,
+        spec: crate::config::WorkloadSpec,
+        size: usize,
+        spill_ns: f64,
+        queue_ns: u64,
+        cursor: &mut u64,
+        tracer: &mut Tracer,
+    ) -> Result<Response> {
+        let inputs = match job.request.inputs.clone() {
+            Some(inputs) => inputs,
+            None => {
+                // Deterministic constants when the caller only wants timing.
+                let t = Tensor::new(vec![spec.n, spec.d_head], vec![0.1; spec.n * spec.d_head])
+                    .map_err(|e| {
+                        anyhow!(
+                            "cannot build default PJRT inputs for {} N={}: {e}",
+                            spec.op,
+                            spec.n
+                        )
+                    })?;
+                vec![t; 3]
+            }
+        };
+        let out = self
+            .exec
+            .as_ref()
+            .ok_or_else(|| anyhow!("PJRT backend routed without an executor"))?
+            .execute(&spec.artifact_name(), inputs)?;
+        tracer.set_operator(id, spec.op.name());
+        tracer.stage(id, "pjrt-execute", *cursor, *cursor + out.exec_ns as u64);
+        *cursor += out.exec_ns as u64;
+        Ok(Response {
+            spec,
+            // The artifact is a precompiled build of the kind's kernel
+            // family, independent of which lowering the registry
+            // currently maps the kind to — attribute it as such.
+            operator: spec.op.name(),
+            backend: BackendKind::Pjrt,
+            device: device.id,
+            backend_ns: out.exec_ns,
+            spill_ns,
+            queue_ns,
+            trace_id: id,
+            outputs: Some(out.outputs),
+            sim_report: None,
+            batch_size: size,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{OperatorKind, WorkloadSpec};
+    use crate::coordinator::server::CoordinatorConfig;
+    use crate::coordinator::ManualClock;
+    use crate::coordinator::Request;
+
+    fn job(spec: WorkloadSpec, session: u64) -> (Job, mpsc::Receiver<Result<Response>>) {
+        let (reply, rx) = mpsc::channel();
+        (Job { request: Request { spec, session, inputs: None }, reply, enqueued_ns: 0 }, rx)
+    }
+
+    fn batch(spec: WorkloadSpec, ids: Vec<u64>, sessions: Vec<u64>) -> Batch {
+        Batch { spec, request_ids: ids, sessions }
+    }
+
+    #[test]
+    fn dispatch_runs_one_batch_on_one_device() {
+        let cfg = CoordinatorConfig::default();
+        let clock: Arc<dyn Clock> = Arc::new(ManualClock::new());
+        let d = Dispatcher::new(Router::simulate_only(), None, clock, 1024);
+        let mut device = Device::new(0, &cfg);
+        let mut jobs = HashMap::new();
+        let mut metrics = Metrics::new();
+        let mut tracer = Tracer::new(false, 0);
+        let spec = WorkloadSpec::new(OperatorKind::Linear, 1024);
+        let (j, rx) = job(spec, 9);
+        jobs.insert(0, j);
+        let b = batch(spec, vec![0], vec![9]);
+        d.dispatch(b, &mut device, &mut jobs, &mut metrics, &mut tracer);
+        let r = rx.recv().unwrap().unwrap();
+        assert_eq!(r.device, 0);
+        assert_eq!(r.backend, BackendKind::Simulate);
+        assert!(r.backend_ns > 0.0);
+        assert_eq!(device.served(), 1);
+        assert_eq!(device.batches(), 1);
+        assert!(device.busy_until_ns() > 0, "model time extends the timeline");
+        assert_eq!(metrics.total_served(), 1);
+        assert_eq!(device.state.len(), 1, "session opened on the device's own pool");
+    }
+
+    #[test]
+    fn pjrt_route_without_executor_is_an_error_reply() {
+        // Router says PJRT but no executor handle exists: the request
+        // must get an error reply, not panic the dispatcher.
+        let cfg = CoordinatorConfig::default();
+        let clock: Arc<dyn Clock> = Arc::new(ManualClock::new());
+        let d = Dispatcher::new(Router::standard(), None, clock, 1024);
+        let mut device = Device::new(0, &cfg);
+        let mut jobs = HashMap::new();
+        let mut metrics = Metrics::new();
+        let mut tracer = Tracer::new(false, 0);
+        let spec = WorkloadSpec::new(OperatorKind::Causal, 256); // artifact context
+        let (j, rx) = job(spec, 1);
+        jobs.insert(0, j);
+        let b = batch(spec, vec![0], vec![1]);
+        d.dispatch(b, &mut device, &mut jobs, &mut metrics, &mut tracer);
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("without an executor"), "{err}");
+        assert_eq!(metrics.total_served(), 0);
+    }
+
+    #[test]
+    fn shed_request_reports_the_admission_error() {
+        let cfg = CoordinatorConfig {
+            state_budget_bytes: 64 * 1024, // pool far below a long KV footprint
+            ..CoordinatorConfig::default()
+        };
+        let clock: Arc<dyn Clock> = Arc::new(ManualClock::new());
+        let d = Dispatcher::new(Router::simulate_only(), None, clock, 1024);
+        let mut device = Device::new(0, &cfg);
+        let mut jobs = HashMap::new();
+        let mut metrics = Metrics::new();
+        let mut tracer = Tracer::new(false, 0);
+        let spec = WorkloadSpec::new(OperatorKind::Causal, 65_536);
+        let (j, rx) = job(spec, 4);
+        jobs.insert(0, j);
+        let b = batch(spec, vec![0], vec![4]);
+        d.dispatch(b, &mut device, &mut jobs, &mut metrics, &mut tracer);
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("admission control"), "{err}");
+        assert_eq!(metrics.shed_requests(), 1);
+    }
+}

@@ -22,8 +22,8 @@ use crate::npu::ExecReport;
 use crate::obs::{self, Histogram, MetricsRegistry};
 use crate::ops::registry::classify;
 
+use super::device::Fleet;
 use super::router::BackendKind;
-use super::state::StateManager;
 
 /// Monotonic nanosecond time source for the serving stack.
 ///
@@ -90,30 +90,50 @@ impl Clock for ManualClock {
 /// Canonical metric names (labels noted per metric). Exported so tests
 /// and the `npuperf obs` command reference the same strings.
 pub mod names {
-    /// Counter `{operator, backend}`.
+    /// Counter `{operator, backend, device}`.
     pub const SERVED: &str = "npuperf_requests_served_total";
-    /// Counter `{operator}`.
+    /// Counter `{operator, device}`.
     pub const SHED: &str = "npuperf_requests_shed_total";
-    /// Counter `{operator}`.
+    /// Counter `{operator, device}`.
     pub const BATCHES: &str = "npuperf_batches_total";
     /// Histogram `{operator}` — requests per dispatched batch.
+    /// Distributions aggregate across the fleet (per-device breakdowns
+    /// live on the counters/gauges, which carry a `device` label).
     pub const BATCH_SIZE: &str = "npuperf_batch_size";
-    /// Histogram `{operator}` — enqueue-to-reply, ns.
+    /// Histogram `{operator}` — enqueue-to-reply, ns (fleet-aggregate).
     pub const LATENCY: &str = "npuperf_request_latency_ns";
-    /// Histogram `{operator}` — enqueue-to-dispatch, ns.
+    /// Histogram `{operator}` — enqueue-to-dispatch, ns (fleet-aggregate).
     pub const QUEUE: &str = "npuperf_request_queue_ns";
-    /// Histogram `{operator}` — session-memory spill/refill charge, ns.
+    /// Histogram `{operator}` — session-memory spill/refill charge, ns
+    /// (fleet-aggregate).
     pub const SPILL: &str = "npuperf_request_spill_ns";
     /// Histogram `{operator, class}` — simulated makespan per batch, ns.
     pub const SIM_SPAN: &str = "npuperf_sim_span_ns";
-    /// Counter `{operator, class}` — DMA traffic of simulated batches.
+    /// Counter `{operator, class, device}` — DMA traffic of simulated
+    /// batches.
     pub const DMA_BYTES: &str = "npuperf_npu_dma_bytes_total";
-    /// Counter `{operator, class}` — logical ops of simulated batches.
+    /// Counter `{operator, class, device}` — logical ops of simulated
+    /// batches.
     pub const LOGICAL_OPS: &str = "npuperf_npu_logical_ops_total";
-    /// Gauge `{operator, class}` — achieved GOP/s over the roofline
-    /// ceiling at the batch's operational intensity.
+    /// Gauge `{operator, class, device}` — achieved GOP/s over the
+    /// roofline ceiling at the batch's operational intensity.
     pub const ROOFLINE_UTIL: &str = "npuperf_npu_roofline_utilization";
-    /// Gauges mirrored from the session-memory pool.
+    /// Gauge `{device}` — total model time the device has executed, ns
+    /// (the occupancy numerator).
+    pub const DEVICE_BUSY_NS: &str = "npuperf_device_busy_ns";
+    /// Gauge `{device}` — end of the device's model-time timeline, ns.
+    pub const DEVICE_BUSY_UNTIL_NS: &str = "npuperf_device_busy_until_ns";
+    /// Gauge (unlabeled) — devices in the fleet.
+    pub const FLEET_DEVICES: &str = "npuperf_fleet_devices";
+    /// Gauge (unlabeled) — latest device timeline end: the fleet's
+    /// aggregate model-time makespan, ns.
+    pub const FLEET_MAKESPAN_NS: &str = "npuperf_fleet_makespan_ns";
+    /// Counter `{device}` (plus an unlabeled fleet total) — sessions
+    /// migrated onto the device, paying the cross-device state transfer.
+    pub const MIGRATIONS: &str = "npuperf_sessions_migrated_total";
+    /// Gauges mirrored from the session-memory pools. Unlabeled series
+    /// are fleet-wide aggregates; the same names also carry per-device
+    /// `{device}` series on multi-pool fleets.
     pub const MEM_SESSIONS: &str = "npuperf_mem_sessions";
     pub const MEM_RESIDENT_SESSIONS: &str = "npuperf_mem_resident_sessions";
     pub const MEM_STATE_BYTES: &str = "npuperf_mem_state_bytes";
@@ -176,6 +196,12 @@ impl Metrics {
         registry.describe(names::LOGICAL_OPS, "Logical ops executed by simulated batches");
         registry
             .describe(names::ROOFLINE_UTIL, "Achieved GOP/s over the roofline ceiling (0..1)");
+        registry.describe(names::DEVICE_BUSY_NS, "Model time executed per device, ns");
+        registry
+            .describe(names::DEVICE_BUSY_UNTIL_NS, "End of the device's model-time timeline, ns");
+        registry.describe(names::FLEET_DEVICES, "Execution devices in the fleet");
+        registry.describe(names::FLEET_MAKESPAN_NS, "Fleet model-time makespan, ns");
+        registry.describe(names::MIGRATIONS, "Sessions migrated between devices");
         registry.describe(names::MEM_SESSIONS, "Tracked sessions (resident + spilled)");
         registry.describe(names::MEM_RESIDENT_SESSIONS, "Sessions resident in the pool");
         registry.describe(names::MEM_STATE_BYTES, "Total tracked session-state bytes");
@@ -203,17 +229,20 @@ impl Metrics {
         self.clock.now_ns().saturating_sub(self.start_ns)
     }
 
-    /// One dispatched batch of `size` requests.
-    pub fn record_batch(&mut self, op: OperatorKind, size: usize) {
-        self.registry.inc(names::BATCHES, &[("operator", op.name())], 1);
+    /// One dispatched batch of `size` requests on `device`.
+    pub fn record_batch(&mut self, op: OperatorKind, device: &'static str, size: usize) {
+        self.registry.inc(names::BATCHES, &[("device", device), ("operator", op.name())], 1);
         self.registry.observe(names::BATCH_SIZE, &[("operator", op.name())], size as f64);
     }
 
     /// One served request: queue age, spill charge, end-to-end latency.
+    /// Counters carry the serving device; latency distributions stay
+    /// fleet-aggregate per operator.
     pub fn record_request(
         &mut self,
         op: OperatorKind,
         backend: BackendKind,
+        device: &'static str,
         queue_ns: u64,
         spill_ns: f64,
         latency_ns: f64,
@@ -221,7 +250,11 @@ impl Metrics {
         let op_label = [("operator", op.name())];
         self.registry.inc(
             names::SERVED,
-            &[("operator", op.name()), ("backend", backend_label(backend))],
+            &[
+                ("operator", op.name()),
+                ("backend", backend_label(backend)),
+                ("device", device),
+            ],
             1,
         );
         self.registry.observe(names::LATENCY, &op_label, latency_ns);
@@ -230,19 +263,30 @@ impl Metrics {
     }
 
     /// One request refused by session-memory admission control.
-    pub fn record_shed(&mut self, op: OperatorKind) {
-        self.registry.inc(names::SHED, &[("operator", op.name())], 1);
+    pub fn record_shed(&mut self, op: OperatorKind, device: &'static str) {
+        self.registry.inc(names::SHED, &[("device", device), ("operator", op.name())], 1);
     }
 
     /// Cost-model metrics for one simulated batch: DMA traffic, logical
     /// ops, makespan, and achieved-vs-roofline utilization, labeled by
-    /// operator and the paper's [`crate::ops::BoundClass`] taxonomy.
-    pub fn record_sim(&mut self, op: OperatorKind, report: &ExecReport, ceilings: &Ceilings) {
+    /// operator, the paper's [`crate::ops::BoundClass`] taxonomy, and the
+    /// device the batch ran on.
+    pub fn record_sim(
+        &mut self,
+        op: OperatorKind,
+        device: &'static str,
+        report: &ExecReport,
+        ceilings: &Ceilings,
+    ) {
         let class = classify(report).label();
-        let labels = [("class", class), ("operator", op.name())];
+        let labels = [("class", class), ("device", device), ("operator", op.name())];
         self.registry.inc(names::DMA_BYTES, &labels, report.dma_bytes);
         self.registry.inc(names::LOGICAL_OPS, &labels, report.logical_ops);
-        self.registry.observe(names::SIM_SPAN, &labels, report.span_ns);
+        self.registry.observe(
+            names::SIM_SPAN,
+            &[("class", class), ("operator", op.name())],
+            report.span_ns,
+        );
         self.registry.set_gauge(
             names::ROOFLINE_UTIL,
             &labels,
@@ -250,27 +294,79 @@ impl Metrics {
         );
     }
 
-    /// Mirror the session-memory pool into the registry. [`MemStats`]
-    /// keeps the running totals; this copies them absolutely
+    /// Mirror the device fleet into the registry: per-device occupancy
+    /// gauges and session-memory series (`device="dN"`), plus unlabeled
+    /// fleet-wide aggregates under the historical single-device names.
+    /// [`MemStats`] keeps the running totals; this copies them absolutely
     /// ([`MetricsRegistry::set_counter`]) so there is exactly one
     /// counting site for spills and evictions.
     ///
     /// [`MemStats`]: crate::memory::MemStats
-    pub fn observe_memory(&mut self, state: &StateManager) {
-        let stats = state.stats();
-        self.registry.set_gauge(names::MEM_SESSIONS, &[], state.len() as f64);
-        self.registry
-            .set_gauge(names::MEM_RESIDENT_SESSIONS, &[], state.resident_sessions() as f64);
-        self.registry.set_gauge(names::MEM_STATE_BYTES, &[], state.total_bytes() as f64);
-        self.registry.set_gauge(names::MEM_RESIDENT_BYTES, &[], state.resident_bytes() as f64);
-        self.registry.set_gauge(names::MEM_PAGES_USED, &[], state.pages_in_use() as f64);
-        self.registry.set_gauge(names::MEM_PAGES_TOTAL, &[], state.pool_pages() as f64);
-        self.registry.set_gauge(names::MEM_SPILL_NS, &[], stats.total_spill_ns());
-        self.registry.set_counter(names::MEM_EVICTIONS, &[], stats.evictions);
-        self.registry.set_counter(names::MEM_SPILLED_BYTES, &[], stats.spilled_bytes);
-        self.registry.set_counter(names::MEM_REFILLED_BYTES, &[], stats.refilled_bytes);
-        self.registry.set_counter(names::MEM_REJECTED, &[], stats.rejected);
-        self.registry.set_counter(names::MEM_SHED_SESSIONS, &[], stats.shed_sessions);
+    pub fn observe_fleet(&mut self, fleet: &Fleet) {
+        let mut sessions = 0u64;
+        let mut resident_sessions = 0u64;
+        let mut state_bytes = 0u64;
+        let mut resident_bytes = 0u64;
+        let mut pages_used = 0u64;
+        let mut pages_total = 0u64;
+        let mut spill_ns = 0.0f64;
+        let mut evictions = 0u64;
+        let mut spilled_bytes = 0u64;
+        let mut refilled_bytes = 0u64;
+        let mut rejected = 0u64;
+        let mut shed_sessions = 0u64;
+        let multi = fleet.len() > 1;
+        for d in fleet.devices() {
+            let state = &d.state;
+            let stats = state.stats();
+            let dev = [("device", d.label)];
+            self.registry.set_gauge(names::DEVICE_BUSY_NS, &dev, d.busy_ns_total() as f64);
+            self.registry
+                .set_gauge(names::DEVICE_BUSY_UNTIL_NS, &dev, d.busy_until_ns() as f64);
+            self.registry.set_counter(names::MIGRATIONS, &dev, d.migrations_in());
+            if multi {
+                // Per-pool breakdowns only earn their exposition bytes on
+                // a real fleet; single-device deployments read the
+                // aggregates below.
+                self.registry.set_gauge(names::MEM_SESSIONS, &dev, state.len() as f64);
+                self.registry.set_gauge(
+                    names::MEM_RESIDENT_SESSIONS,
+                    &dev,
+                    state.resident_sessions() as f64,
+                );
+                self.registry
+                    .set_gauge(names::MEM_RESIDENT_BYTES, &dev, state.resident_bytes() as f64);
+                self.registry
+                    .set_gauge(names::MEM_PAGES_USED, &dev, state.pages_in_use() as f64);
+            }
+            sessions += state.len() as u64;
+            resident_sessions += state.resident_sessions() as u64;
+            state_bytes += state.total_bytes();
+            resident_bytes += state.resident_bytes();
+            pages_used += state.pages_in_use();
+            pages_total += state.pool_pages();
+            spill_ns += stats.total_spill_ns();
+            evictions += stats.evictions;
+            spilled_bytes += stats.spilled_bytes;
+            refilled_bytes += stats.refilled_bytes;
+            rejected += stats.rejected;
+            shed_sessions += stats.shed_sessions;
+        }
+        self.registry.set_gauge(names::MEM_SESSIONS, &[], sessions as f64);
+        self.registry.set_gauge(names::MEM_RESIDENT_SESSIONS, &[], resident_sessions as f64);
+        self.registry.set_gauge(names::MEM_STATE_BYTES, &[], state_bytes as f64);
+        self.registry.set_gauge(names::MEM_RESIDENT_BYTES, &[], resident_bytes as f64);
+        self.registry.set_gauge(names::MEM_PAGES_USED, &[], pages_used as f64);
+        self.registry.set_gauge(names::MEM_PAGES_TOTAL, &[], pages_total as f64);
+        self.registry.set_gauge(names::MEM_SPILL_NS, &[], spill_ns);
+        self.registry.set_counter(names::MEM_EVICTIONS, &[], evictions);
+        self.registry.set_counter(names::MEM_SPILLED_BYTES, &[], spilled_bytes);
+        self.registry.set_counter(names::MEM_REFILLED_BYTES, &[], refilled_bytes);
+        self.registry.set_counter(names::MEM_REJECTED, &[], rejected);
+        self.registry.set_counter(names::MEM_SHED_SESSIONS, &[], shed_sessions);
+        self.registry.set_gauge(names::FLEET_DEVICES, &[], fleet.len() as f64);
+        self.registry.set_gauge(names::FLEET_MAKESPAN_NS, &[], fleet.makespan_ns() as f64);
+        self.registry.set_counter(names::MIGRATIONS, &[], fleet.migrations());
     }
 
     /// Refresh the clock-derived gauges (uptime, throughput) so an export
@@ -341,8 +437,9 @@ impl Metrics {
 
     /// Human-readable snapshot: one aligned latency row per operator
     /// (mean/p50/p95/p99/max in ms), the throughput totals line, and —
-    /// once [`Metrics::observe_memory`] has run — the session-memory
-    /// line, single-sourced from [`crate::memory::MemStats`].
+    /// once [`Metrics::observe_fleet`] has run — the session-memory and
+    /// fleet lines, single-sourced from [`crate::memory::MemStats`] and
+    /// the device timelines.
     pub fn snapshot(&self) -> String {
         let mut out = String::new();
         let ops = self.registry.histogram_label_values(names::LATENCY, "operator");
@@ -392,6 +489,14 @@ impl Metrics {
                 g(names::MEM_SPILL_NS) / 1e6,
             );
         }
+        if let Some(devices) = self.registry.gauge(names::FLEET_DEVICES, &[]) {
+            out += &format!(
+                "devices={} makespan_ms={:.3} migrations={}\n",
+                devices as u64,
+                self.registry.gauge(names::FLEET_MAKESPAN_NS, &[]).unwrap_or(0.0) / 1e6,
+                self.registry.counter(names::MIGRATIONS, &[]),
+            );
+        }
         out
     }
 }
@@ -403,9 +508,9 @@ mod tests {
     #[test]
     fn records_and_summarizes() {
         let mut m = Metrics::new();
-        m.record_request(OperatorKind::Causal, BackendKind::Simulate, 0, 0.0, 1e6);
-        m.record_request(OperatorKind::Causal, BackendKind::Simulate, 0, 0.0, 3e6);
-        m.record_request(OperatorKind::Linear, BackendKind::Simulate, 0, 0.0, 5e5);
+        m.record_request(OperatorKind::Causal, BackendKind::Simulate, "d0", 0, 0.0, 1e6);
+        m.record_request(OperatorKind::Causal, BackendKind::Simulate, "d0", 0, 0.0, 3e6);
+        m.record_request(OperatorKind::Linear, BackendKind::Simulate, "d0", 0, 0.0, 5e5);
         assert_eq!(m.served(OperatorKind::Causal), 2);
         assert_eq!(m.total_served(), 3);
         assert_eq!(m.simulated_requests(), 3);
@@ -418,8 +523,8 @@ mod tests {
     #[test]
     fn snapshot_rows_are_aligned_and_complete() {
         let mut m = Metrics::new();
-        m.record_request(OperatorKind::Toeplitz, BackendKind::Simulate, 0, 0.0, 1e5);
-        m.record_request(OperatorKind::Fourier, BackendKind::Simulate, 0, 0.0, 2e5);
+        m.record_request(OperatorKind::Toeplitz, BackendKind::Simulate, "d0", 0, 0.0, 1e5);
+        m.record_request(OperatorKind::Fourier, BackendKind::Simulate, "d0", 0, 0.0, 2e5);
         let snap = m.snapshot();
         let header = snap.lines().next().unwrap();
         assert!(header.starts_with("operator"), "{snap}");
@@ -440,7 +545,7 @@ mod tests {
     #[test]
     fn snapshot_reports_shed_requests() {
         let mut m = Metrics::new();
-        m.record_shed(OperatorKind::Causal);
+        m.record_shed(OperatorKind::Causal, "d0");
         let snap = m.snapshot();
         assert!(snap.contains("shed=1"), "{snap}");
     }
@@ -450,7 +555,7 @@ mod tests {
         let mut m = Metrics::new();
         for _ in 0..10 {
             // Equal samples make every reported quantile exact: 7 ms.
-            m.record_request(OperatorKind::Causal, BackendKind::Simulate, 0, 0.0, 7e6);
+            m.record_request(OperatorKind::Causal, BackendKind::Simulate, "d0", 0, 0.0, 7e6);
         }
         let snap = m.snapshot();
         let row = snap.lines().find(|l| l.starts_with("causal")).unwrap();
@@ -476,9 +581,9 @@ mod tests {
     fn manual_clock_gives_exact_throughput() {
         let clock = ManualClock::new();
         let mut m = Metrics::with_clock(Arc::new(clock.clone()));
-        m.record_request(OperatorKind::Causal, BackendKind::Simulate, 0, 0.0, 1e6);
-        m.record_request(OperatorKind::Causal, BackendKind::Simulate, 0, 0.0, 1e6);
-        m.record_request(OperatorKind::Linear, BackendKind::Simulate, 0, 0.0, 1e6);
+        m.record_request(OperatorKind::Causal, BackendKind::Simulate, "d0", 0, 0.0, 1e6);
+        m.record_request(OperatorKind::Causal, BackendKind::Simulate, "d0", 0, 0.0, 1e6);
+        m.record_request(OperatorKind::Linear, BackendKind::Simulate, "d0", 0, 0.0, 1e6);
         assert_eq!(m.throughput_rps(), 0.0, "no time has passed");
         clock.advance_ns(2_000_000_000);
         assert_eq!(m.uptime_ns(), 2_000_000_000);
@@ -510,18 +615,21 @@ mod tests {
     fn prometheus_and_snapshot_read_the_same_registry() {
         let clock = ManualClock::new();
         let mut m = Metrics::with_clock(Arc::new(clock.clone()));
-        m.record_batch(OperatorKind::Causal, 2);
-        m.record_request(OperatorKind::Causal, BackendKind::Simulate, 10, 0.0, 1e6);
-        m.record_request(OperatorKind::Causal, BackendKind::Simulate, 10, 0.0, 1e6);
+        m.record_batch(OperatorKind::Causal, "d0", 2);
+        m.record_request(OperatorKind::Causal, BackendKind::Simulate, "d0", 10, 0.0, 1e6);
+        m.record_request(OperatorKind::Causal, BackendKind::Simulate, "d0", 10, 0.0, 1e6);
         clock.advance_ns(1_000_000_000);
         let prom = m.prometheus();
         assert!(
             prom.contains(
-                r#"npuperf_requests_served_total{backend="simulate",operator="causal"} 2"#
+                r#"npuperf_requests_served_total{backend="simulate",device="d0",operator="causal"} 2"#
             ),
             "{prom}"
         );
-        assert!(prom.contains(r#"npuperf_batches_total{operator="causal"} 1"#), "{prom}");
+        assert!(
+            prom.contains(r#"npuperf_batches_total{device="d0",operator="causal"} 1"#),
+            "{prom}"
+        );
         assert!(prom.contains("npuperf_uptime_ns 1000000000"), "{prom}");
         assert!(prom.contains("npuperf_throughput_rps 2"), "{prom}");
         crate::obs::lint_prometheus(&prom).expect("exposition lints clean");
@@ -537,9 +645,9 @@ mod tests {
         let report = crate::npu::run(&crate::ops::lower(&spec, &hw, &sim), &hw, &sim);
         let ceilings = crate::model::calibrate(&hw, &sim);
         let mut m = Metrics::new();
-        m.record_sim(OperatorKind::Causal, &report, &ceilings);
+        m.record_sim(OperatorKind::Causal, "d0", &report, &ceilings);
         let class = classify(&report).label();
-        let labels = [("class", class), ("operator", "causal")];
+        let labels = [("class", class), ("device", "d0"), ("operator", "causal")];
         assert_eq!(m.registry().counter(names::DMA_BYTES, &labels), report.dma_bytes);
         assert_eq!(m.registry().counter(names::LOGICAL_OPS, &labels), report.logical_ops);
         let util = m.registry().gauge(names::ROOFLINE_UTIL, &labels).unwrap();

@@ -20,9 +20,17 @@
 //! serve loop resolves each batch's kind to its registered
 //! [`crate::ops::CausalOperator`] — so a new operator becomes servable by
 //! implementing one trait and registering it, with no coordinator changes.
+//!
+//! Execution is staged over a first-class device fleet: each [`Device`]
+//! owns its simulated-NPU config, calibrated ceilings, session-memory
+//! pool, and model-time timeline; the serve loop places every batch
+//! ([`Fleet::place`]: session-affinity first, then least-loaded) and a
+//! [`Dispatcher`] runs it on the chosen device.
 
 pub mod batcher;
 pub mod chunking;
+pub mod device;
+pub mod dispatch;
 pub mod metrics;
 pub mod router;
 pub mod server;
@@ -31,6 +39,8 @@ pub mod workload_gen;
 
 pub use batcher::{Batch, Batcher};
 pub use chunking::{optimal_chunk, ChunkPlan};
+pub use device::{device_label, Device, DeviceStat, Fleet};
+pub use dispatch::Dispatcher;
 pub use metrics::{Clock, ManualClock, Metrics, WallClock};
 pub use router::{BackendKind, Router};
 pub use server::{Coordinator, CoordinatorConfig, Pending, Request, Response};

@@ -1,14 +1,26 @@
-//! The coordinator itself: request intake → dynamic batching → routed
-//! dispatch (PJRT executor thread or NPU simulator) → metrics + tracing.
+//! The coordinator itself: request intake → dynamic batching → placement
+//! on the device fleet → dispatch (PJRT executor thread or NPU simulator)
+//! → metrics + tracing.
 //!
 //! Synchronous request API over a background serving thread: callers get a
-//! [`Response`] per request; the serving loop owns the batcher, router,
-//! state manager, metrics, and the per-request [`Tracer`]. The PJRT
+//! [`Response`] per request; the serving loop owns the batcher, the
+//! [`Fleet`] of execution [`Device`](super::device::Device)s, the
+//! [`Dispatcher`], metrics, and the per-request [`Tracer`]. The PJRT
 //! runtime (when artifacts are available) is confined to its own executor
 //! thread — the coordinator only holds the cloneable channel handle.
 //!
+//! The serve pipeline is staged: **intake** stamps and batches requests,
+//! **placement** ([`Fleet::place`]) picks a device — session affinity
+//! first (KV / recurrent state is device-resident; moving it pays the
+//! spill transfer), then least-loaded by model-time `busy_until_ns` —
+//! and **execution** ([`Dispatcher::dispatch`]) runs the batch on that
+//! device. All three stages read time only through the injected
+//! [`Clock`], so a frozen [`super::ManualClock`] makes the whole
+//! pipeline, placement included, exactly replayable; a 1-device fleet
+//! reproduces the historical single-device loop bit for bit.
+//!
 //! Simulated batches are lowered through the [operator
-//! registry](crate::ops::registry): the serve loop resolves the batch's
+//! registry](crate::ops::registry): the dispatcher resolves the batch's
 //! workload kind to its registered [`crate::ops::CausalOperator`] and
 //! dispatches that — no operator `match` in the serving path. A
 //! deployment that installs its own registry
@@ -18,7 +30,8 @@
 //!
 //! With `trace: true` every request accrues a span tree (queued → lower →
 //! admission → backend → respond, stamped on the injected [`Clock`], with
-//! the simulator's per-engine spans nested under the backend stage);
+//! the simulator's per-engine spans nested under the backend stage and
+//! the serving device stamped on the trace);
 //! [`Coordinator::traces`] hands the completed traces out for
 //! [`crate::obs::export::chrome`] to merge into one timeline.
 
@@ -29,17 +42,16 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, Result};
 
 use crate::config::{NpuConfig, SimConfig, WorkloadSpec};
-use crate::model;
-use crate::npu::{self, ExecReport};
-use crate::obs::{engine_spans, RequestTrace, Tracer};
-use crate::ops::registry;
+use crate::npu::ExecReport;
+use crate::obs::{RequestTrace, Tracer};
 use crate::runtime::executor::{Executor, ExecutorHandle};
 use crate::runtime::Tensor;
 
 use super::batcher::Batcher;
+use super::device::{DeviceStat, Fleet};
+use super::dispatch::Dispatcher;
 use super::metrics::{Clock, Metrics, WallClock};
 use super::router::{BackendKind, Router};
-use super::state::StateManager;
 
 /// One inference request.
 #[derive(Clone, Debug)]
@@ -60,6 +72,9 @@ pub struct Response {
     /// the workload kind's name — on the PJRT path.
     pub operator: &'static str,
     pub backend: BackendKind,
+    /// Fleet device the request executed on (0 on a single-device
+    /// deployment; label `"d<id>"` in metrics and traces).
+    pub device: usize,
     /// Real outputs (PJRT path only).
     pub outputs: Option<Vec<Tensor>>,
     /// Wall-clock time inside the backend, ns.
@@ -67,7 +82,9 @@ pub struct Response {
     /// Session-memory time charged to this request, ns: spilling LRU
     /// victims out to admit this session's state plus paging its own
     /// previously spilled state back in (priced at the calibrated
-    /// effective DMA ceiling). Zero when the pool is uncontended.
+    /// effective DMA ceiling), plus — if the session just migrated to a
+    /// different device — the cross-device state transfer. Zero when the
+    /// pool is uncontended and the session stayed put.
     pub spill_ns: f64,
     /// Enqueue-to-dispatch age on the injected [`Clock`], ns — how long
     /// the request sat in the batching window. Exactly assertable under
@@ -92,16 +109,21 @@ pub struct CoordinatorConfig {
     /// Pre-compile every artifact at startup so first requests do not pay
     /// PJRT compile latency (§Perf: compiles dominated cold-start serving).
     pub warmup: bool,
+    /// Execution devices in the fleet (clamped to ≥ 1). Each device gets
+    /// its own simulated NPU, calibrated ceilings, and session-memory
+    /// pool of `state_budget_bytes`; placement is session-affinity first,
+    /// then least-loaded.
+    pub devices: usize,
     pub max_batch: usize,
     pub max_wait_ns: u64,
-    /// Session-memory pool capacity (defaults to the state-reserved
-    /// fraction of Table I's 32 GB; page geometry and spill pricing come
-    /// from `hw` via [`crate::memory::MemoryConfig`]).
+    /// Session-memory pool capacity **per device** (defaults to the
+    /// state-reserved fraction of Table I's 32 GB; page geometry and
+    /// spill pricing come from `hw` via [`crate::memory::MemoryConfig`]).
     pub state_budget_bytes: u64,
-    /// Upper bound on *tracked* sessions (resident + spilled). Beyond
-    /// it, the bookkeeping of LRU spilled sessions is garbage-collected
-    /// after each batch — they re-prefill if they return — so a
-    /// long-lived server's session map stays bounded.
+    /// Upper bound on *tracked* sessions (resident + spilled) per device.
+    /// Beyond it, the bookkeeping of LRU spilled sessions is garbage
+    /// -collected after each batch — they re-prefill if they return — so
+    /// a long-lived server's session map stays bounded.
     pub max_tracked_sessions: usize,
     /// Collect per-request span trees (see [`Coordinator::traces`]).
     /// Off by default: the untraced serve path pays one branch.
@@ -123,10 +145,10 @@ impl Default for CoordinatorConfig {
 }
 
 impl CoordinatorConfig {
-    /// Config for a specific device: the session-memory pool is sized
-    /// from **this** `hw` (its `dram_bytes × state_pool_frac`), not from
-    /// the default device — use this instead of
-    /// `CoordinatorConfig { hw, ..Default::default() }`, which would
+    /// Config for a specific device model: the per-device session-memory
+    /// pool is sized from **this** `hw` (its `dram_bytes ×
+    /// state_pool_frac`), not from the default device — use this instead
+    /// of `CoordinatorConfig { hw, ..Default::default() }`, which would
     /// keep a pool sized for the default 32 GB part.
     pub fn for_hw(hw: NpuConfig, sim: SimConfig) -> Self {
         Self {
@@ -135,6 +157,7 @@ impl CoordinatorConfig {
             sim,
             artifact_dir: None,
             warmup: false,
+            devices: 1,
             max_batch: 8,
             max_wait_ns: 2_000_000, // 2 ms batching window
             max_tracked_sessions: 65_536,
@@ -145,12 +168,12 @@ impl CoordinatorConfig {
     }
 }
 
-struct Job {
-    request: Request,
-    reply: mpsc::Sender<Result<Response>>,
+pub(crate) struct Job {
+    pub(crate) request: Request,
+    pub(crate) reply: mpsc::Sender<Result<Response>>,
     /// Serve-loop clock reading at intake (stamped by the serving thread,
     /// which owns the clock — the submitting thread leaves it zero).
-    enqueued_ns: u64,
+    pub(crate) enqueued_ns: u64,
 }
 
 enum Ctl {
@@ -159,6 +182,7 @@ enum Ctl {
     Prometheus(mpsc::Sender<String>),
     JsonMetrics(mpsc::Sender<String>),
     Traces(mpsc::Sender<Vec<RequestTrace>>),
+    Fleet(mpsc::Sender<Vec<DeviceStat>>),
     Shutdown,
 }
 
@@ -253,6 +277,15 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow!("coordinator dropped reply"))
     }
 
+    /// Per-device execution stats: model-time timelines, served/batch
+    /// counts, resident sessions, migrations. One entry per fleet device,
+    /// in id order.
+    pub fn fleet(&self) -> Result<Vec<DeviceStat>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Ctl::Fleet(tx)).map_err(|_| anyhow!("coordinator stopped"))?;
+        rx.recv().map_err(|_| anyhow!("coordinator dropped reply"))
+    }
+
     fn fetch(&self, make: impl FnOnce(mpsc::Sender<String>) -> Ctl) -> Result<String> {
         let (tx, rx) = mpsc::channel();
         self.tx.send(make(tx)).map_err(|_| anyhow!("coordinator stopped"))?;
@@ -279,168 +312,23 @@ fn serve_loop(
     let mut batcher = Batcher::new(cfg.max_batch, cfg.max_wait_ns);
     let mut metrics = Metrics::with_clock(clock.clone());
     let mut tracer = Tracer::new(cfg.trace, cfg.trace_capacity);
-    // Roofline ceilings for the achieved-utilization gauge, calibrated
-    // once against this deployment's hardware model.
-    let ceilings = model::calibrate(&cfg.hw, &cfg.sim);
-    // Spills/refills are priced with the same calibrated beta_eff the
-    // roofline reports, so eviction time on responses is commensurate
-    // with simulated operator latencies.
-    let mut state = StateManager::with_config(
-        crate::memory::MemoryConfig::calibrated(&cfg.hw, &cfg.sim)
-            .with_pool_bytes(cfg.state_budget_bytes),
-    );
+    // The execution layer: one Device per fleet slot, each with its own
+    // hardware model, calibrated ceilings, and session-memory pool; the
+    // Dispatcher runs one placed batch on one device.
+    let mut fleet = Fleet::new(&cfg);
+    let dispatcher = Dispatcher::new(router, exec, clock.clone(), cfg.max_tracked_sessions);
     let mut jobs: std::collections::HashMap<u64, Job> = Default::default();
     let mut next_id: u64 = 0;
     let t0 = clock.now_ns();
 
-    let clock_d = clock.clone();
+    // Placement + execution for one released batch.
     let dispatch = |batch: super::batcher::Batch,
+                    fleet: &mut Fleet,
                     jobs: &mut std::collections::HashMap<u64, Job>,
                     metrics: &mut Metrics,
-                    state: &mut StateManager,
                     tracer: &mut Tracer| {
-        let dispatch_ns = clock_d.now_ns();
-        let backend = router.route(&batch.spec);
-        let size = batch.request_ids.len();
-        metrics.record_batch(batch.spec.op, size);
-        // Simulate path: resolve the batch's operator through the registry
-        // and lower once per batch signature. A kind missing from a custom
-        // registry leaves this as None and each request in the batch gets
-        // an error reply — never a panic on the long-lived serving thread.
-        // The PJRT path never touches the registry: it executes a
-        // precompiled artifact keyed by the workload kind.
-        let sim = if backend == BackendKind::Simulate {
-            registry::global().try_for_kind(batch.spec.op).map(|op_impl| {
-                let lower_start_ns = clock_d.now_ns();
-                let g = op_impl.lower(&batch.spec, &cfg.hw, &cfg.sim);
-                let strace = npu::simulate(&g, &cfg.hw, &cfg.sim);
-                let report = ExecReport::from_trace(&g, &strace);
-                let lower_end_ns = clock_d.now_ns();
-                metrics.record_sim(batch.spec.op, &report, &ceilings);
-                let spans =
-                    if tracer.enabled() { engine_spans(&g, &strace) } else { Vec::new() };
-                (op_impl.name(), report, spans, lower_start_ns, lower_end_ns)
-            })
-        } else {
-            None
-        };
-        for id in batch.request_ids {
-            let Some(job) = jobs.remove(&id) else { continue };
-            let spec = job.request.spec;
-            let queue_ns = dispatch_ns.saturating_sub(job.enqueued_ns);
-            tracer.stage(id, "queued", job.enqueued_ns, dispatch_ns);
-            // The request timeline cursor: real clock until the backend,
-            // then dilated by model time (spill charge, simulated
-            // makespan) so nested engine spans tile their stage exactly.
-            let mut cursor = dispatch_ns;
-            if let Some((_, _, _, l0, l1)) = &sim {
-                tracer.stage(id, "lower", *l0, *l1);
-                cursor = *l1;
-            }
-            // Admission control: page the session's state in before the
-            // request runs (`admit` never evicts the session it is
-            // admitting; explicit pinning is the hook for concurrent
-            // dispatchers and latency-critical sessions, not needed on
-            // this serial path). A footprint the pool can never hold is
-            // shed with an error instead of growing state without bound.
-            let session = job.request.session;
-            state.open(session, spec.op, spec.d_head, spec.d_state);
-            let spill_ns = match state.touch(session, spec.n) {
-                Ok(adm) => {
-                    let ns = adm.total_ns();
-                    tracer.stage(id, "admission", cursor, cursor + ns as u64);
-                    cursor += ns as u64;
-                    ns
-                }
-                Err(e) => {
-                    metrics.record_shed(spec.op);
-                    tracer.stage(id, "admission", cursor, cursor);
-                    tracer.finish(id, "shed");
-                    let _ = job.reply.send(Err(anyhow!(
-                        "request shed by session-memory admission control: {e}"
-                    )));
-                    continue;
-                }
-            };
-            let result = match backend {
-                BackendKind::Pjrt => {
-                    let inputs = job.request.inputs.clone().unwrap_or_else(|| {
-                        // Deterministic zeros when the caller only wants timing.
-                        let shape = vec![spec.n, spec.d_head];
-                        vec![
-                            Tensor::new(shape.clone(), vec![0.1; spec.n * spec.d_head]).unwrap();
-                            3
-                        ]
-                    });
-                    match exec.as_ref().expect("router gated on artifacts").execute(
-                        &spec.artifact_name(),
-                        inputs,
-                    ) {
-                        Ok(out) => {
-                            tracer.set_operator(id, spec.op.name());
-                            tracer.stage(id, "pjrt-execute", cursor, cursor + out.exec_ns as u64);
-                            cursor += out.exec_ns as u64;
-                            Ok(Response {
-                                spec,
-                                // The artifact is a precompiled build of the
-                                // kind's kernel family, independent of which
-                                // lowering the registry currently maps the
-                                // kind to — attribute it as such.
-                                operator: spec.op.name(),
-                                backend,
-                                backend_ns: out.exec_ns,
-                                spill_ns,
-                                queue_ns,
-                                trace_id: id,
-                                outputs: Some(out.outputs),
-                                sim_report: None,
-                                batch_size: size,
-                            })
-                        }
-                        Err(e) => Err(e),
-                    }
-                }
-                BackendKind::Simulate => match &sim {
-                    Some((operator, report, spans, _, _)) => {
-                        let operator = *operator;
-                        tracer.set_operator(id, operator);
-                        tracer.stage(id, "npu-simulate", cursor, cursor + report.span_ns as u64);
-                        tracer.attach_engine_spans(id, cursor, spans);
-                        cursor += report.span_ns as u64;
-                        Ok(Response {
-                            spec,
-                            operator,
-                            backend,
-                            backend_ns: report.span_ns,
-                            spill_ns,
-                            queue_ns,
-                            trace_id: id,
-                            outputs: None,
-                            sim_report: Some(report.clone()),
-                            batch_size: size,
-                        })
-                    }
-                    None => Err(anyhow!(
-                        "no operator registered for workload kind {}",
-                        spec.op
-                    )),
-                },
-            };
-            tracer.stage(id, "respond", cursor, cursor);
-            match &result {
-                Ok(_) => {
-                    let latency_ns =
-                        clock_d.now_ns().saturating_sub(job.enqueued_ns).max(queue_ns) as f64;
-                    metrics.record_request(spec.op, backend, queue_ns, spill_ns, latency_ns);
-                    tracer.finish(id, "served");
-                }
-                Err(_) => tracer.finish(id, "error"),
-            }
-            let _ = job.reply.send(result);
-        }
-        // Keep the session map bounded: forget LRU spilled sessions once
-        // the tracked count exceeds the configured cap.
-        let _ = state.gc(cfg.max_tracked_sessions);
+        let d = fleet.place(&batch.sessions);
+        dispatcher.dispatch(batch, fleet.device_mut(d), jobs, metrics, tracer);
     };
 
     loop {
@@ -459,41 +347,48 @@ fn serve_loop(
                 }
                 jobs.insert(id, job);
                 if let Some(batch) = batcher.push(id, spec, session, now_ns) {
-                    dispatch(batch, &mut jobs, &mut metrics, &mut state, &mut tracer);
+                    dispatch(batch, &mut fleet, &mut jobs, &mut metrics, &mut tracer);
                 }
             }
             Ok(Ctl::Snapshot(tx)) => {
-                metrics.observe_memory(&state);
+                metrics.observe_fleet(&fleet);
                 let _ = tx.send(metrics.snapshot());
             }
             Ok(Ctl::Prometheus(tx)) => {
-                metrics.observe_memory(&state);
+                metrics.observe_fleet(&fleet);
                 let _ = tx.send(metrics.prometheus());
             }
             Ok(Ctl::JsonMetrics(tx)) => {
-                metrics.observe_memory(&state);
+                metrics.observe_fleet(&fleet);
                 let _ = tx.send(metrics.json());
             }
             Ok(Ctl::Traces(tx)) => {
                 let _ = tx.send(tracer.snapshot());
             }
-            Ok(Ctl::Shutdown) => {
+            Ok(Ctl::Fleet(tx)) => {
+                let _ = tx.send(fleet.stats());
+            }
+            Ok(Ctl::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // Drain the batcher on *both* exits: a dropped control
+                // channel (every Coordinator handle gone) must not
+                // silently discard queued requests that the Shutdown
+                // path would have dispatched — their Pending receivers
+                // may still be alive and waiting.
                 for batch in batcher.flush() {
-                    dispatch(batch, &mut jobs, &mut metrics, &mut state, &mut tracer);
+                    dispatch(batch, &mut fleet, &mut jobs, &mut metrics, &mut tracer);
                 }
                 break;
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => break,
         }
         // Release expired batches, dispatching ones whose sessions are
-        // already resident in the state pool first (cold batches pay
-        // their refill when their turn comes; age breaks ties so no
-        // signature starves).
+        // already resident on their device's state pool first (cold
+        // batches pay their refill when their turn comes; age breaks
+        // ties so no signature starves).
         let due = batcher
-            .poll_expired_prefer(clock.now_ns().saturating_sub(t0), |s| state.is_resident(s));
+            .poll_expired_prefer(clock.now_ns().saturating_sub(t0), |s| fleet.is_resident(s));
         for batch in due {
-            dispatch(batch, &mut jobs, &mut metrics, &mut state, &mut tracer);
+            dispatch(batch, &mut fleet, &mut jobs, &mut metrics, &mut tracer);
         }
     }
 }
@@ -502,6 +397,7 @@ fn serve_loop(
 mod tests {
     use super::*;
     use crate::config::OperatorKind;
+    use crate::coordinator::ManualClock;
 
     fn sim_only() -> Coordinator {
         Coordinator::new(CoordinatorConfig {
@@ -524,6 +420,7 @@ mod tests {
         assert_eq!(r.backend, BackendKind::Simulate);
         assert!(r.sim_report.is_some());
         assert!(r.backend_ns > 0.0);
+        assert_eq!(r.device, 0, "single-device fleet serves on d0");
     }
 
     #[test]
@@ -585,6 +482,7 @@ mod tests {
         assert!(snap.contains("total=3"), "{snap}");
         assert!(snap.contains("sessions=1"), "{snap}");
         assert!(snap.contains("pages="), "{snap}");
+        assert!(snap.contains("devices=1"), "fleet line present: {snap}");
     }
 
     #[test]
@@ -602,7 +500,6 @@ mod tests {
 
     #[test]
     fn manual_clock_makes_throughput_deterministic() {
-        use super::super::metrics::ManualClock;
         let clock = ManualClock::new();
         let c = Coordinator::new(CoordinatorConfig {
             max_batch: 1, // dispatch on push: no dependence on the frozen clock
@@ -653,7 +550,7 @@ mod tests {
         let prom = c.metrics_prometheus().unwrap();
         assert!(
             prom.contains(
-                r#"npuperf_requests_served_total{backend="simulate",operator="causal"} 1"#
+                r#"npuperf_requests_served_total{backend="simulate",device="d0",operator="causal"} 1"#
             ),
             "{prom}"
         );
@@ -666,6 +563,7 @@ mod tests {
         assert_eq!(t.trace_id, r.trace_id);
         assert_eq!(t.outcome, "served");
         assert_eq!(t.operator, Some("causal"));
+        assert_eq!(t.device, Some("d0"), "serving device stamped on the trace");
         let names: Vec<&str> = t.stages.iter().map(|s| s.name).collect();
         for want in ["queued", "lower", "admission", "npu-simulate", "respond"] {
             assert!(names.contains(&want), "missing stage {want}: {names:?}");
@@ -704,5 +602,71 @@ mod tests {
             .backend_ns
         };
         assert!(lat(OperatorKind::Toeplitz) < lat(OperatorKind::Causal) / 10.0);
+    }
+
+    #[test]
+    fn dropped_handle_flushes_queued_requests() {
+        // Regression (satellite bug): a Disconnected control channel must
+        // drain the batcher exactly like Shutdown does. Frozen clock +
+        // oversized batch + huge window mean neither fill nor expiry can
+        // dispatch the queued request — only the exit path can.
+        let clock = ManualClock::new();
+        let cfg = CoordinatorConfig {
+            max_batch: 8,                // never fills
+            max_wait_ns: 60_000_000_000, // never expires on a frozen clock
+            clock: Some(Arc::new(clock)),
+            ..CoordinatorConfig::default()
+        };
+        let (tx, rx) = mpsc::channel::<Ctl>();
+        let join = std::thread::spawn(move || serve_loop(cfg, rx, None, Router::simulate_only()));
+        let (reply, resp_rx) = mpsc::channel();
+        tx.send(Ctl::Submit(Job {
+            request: Request {
+                spec: WorkloadSpec::new(OperatorKind::Linear, 512),
+                session: 1,
+                inputs: None,
+            },
+            reply,
+            enqueued_ns: 0,
+        }))
+        .unwrap();
+        drop(tx); // every handle gone: Disconnected, never Shutdown
+        join.join().unwrap();
+        let resp = resp_rx
+            .recv()
+            .expect("queued request must be flushed, not silently dropped")
+            .unwrap();
+        assert_eq!(resp.batch_size, 1);
+        assert_eq!(resp.device, 0);
+    }
+
+    #[test]
+    fn multi_device_fleet_spreads_sessions_and_keeps_affinity() {
+        let c = Coordinator::new(CoordinatorConfig {
+            devices: 2,
+            max_batch: 1, // dispatch on push: one batch per request
+            max_wait_ns: 100_000,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let mut seen = std::collections::HashMap::new();
+        for round in 0..3 {
+            for (session, n) in [(1u64, 1024usize), (2, 2048)] {
+                let r = c
+                    .submit(Request {
+                        spec: WorkloadSpec::new(OperatorKind::Causal, n),
+                        session,
+                        inputs: None,
+                    })
+                    .unwrap();
+                let d = *seen.entry(session).or_insert(r.device);
+                assert_eq!(d, r.device, "session stays on its resident device (round {round})");
+            }
+        }
+        assert_ne!(seen[&1], seen[&2], "distinct sessions spread across the fleet");
+        let stats = c.fleet().unwrap();
+        assert_eq!(stats.len(), 2);
+        assert!(stats.iter().all(|d| d.served == 3), "{stats:?}");
+        assert!(stats.iter().all(|d| d.busy_until_ns > 0), "{stats:?}");
     }
 }

@@ -119,30 +119,68 @@ fn ns_to_us(ns: f64) -> f64 {
     ns / 1e3
 }
 
+/// First pid of the per-device summary processes in [`chrome`] — far
+/// above any `trace_id + 1` request pid, so the two ranges never
+/// collide.
+pub const DEVICE_PID_BASE: u64 = 1_000_000;
+
 /// Merge completed request traces into one Perfetto-loadable timeline.
 ///
 /// Layout: one process per request (`pid = trace_id + 1`); tid 0 is the
 /// request lifecycle track, tids 1–4 are the DPU/SHAVE/DMA/CPU engine
 /// tracks (`1 + engine_index`), so the simulated engine spans nest under
-/// their request. All timestamps are rebased so the earliest stage in
-/// the collection lands at t=0.
+/// their request. Requests stamped with a fleet device additionally get
+/// one summary span on that device's process track (pids from
+/// [`DEVICE_PID_BASE`], one per distinct device label in sorted order),
+/// so per-device occupancy reads directly off the timeline. All
+/// timestamps are rebased so the earliest stage in the collection lands
+/// at t=0.
 pub fn chrome(traces: &[RequestTrace]) -> String {
     let t0 = traces.iter().map(|t| t.start_ns()).min().unwrap_or(0);
     let t0 = if t0 == u64::MAX { 0 } else { t0 };
     let mut out = ChromeTrace::new();
     let mut ordered: Vec<&RequestTrace> = traces.iter().collect();
     ordered.sort_by_key(|t| t.trace_id);
+    let mut devices: Vec<&'static str> = ordered.iter().filter_map(|t| t.device).collect();
+    devices.sort();
+    devices.dedup();
+    for (i, dev) in devices.into_iter().enumerate() {
+        let pid = DEVICE_PID_BASE + i as u64;
+        out.process_name(pid, &format!("device {dev}"));
+        out.thread_name(pid, 0, "requests");
+        for tr in ordered.iter().filter(|t| t.device == Some(dev)) {
+            let start = tr.start_ns();
+            if start == u64::MAX {
+                continue;
+            }
+            let end = tr.stages.iter().map(|s| s.end_ns).max().unwrap_or(start);
+            out.span(
+                pid,
+                0,
+                &format!("req {} {}", tr.trace_id, tr.label),
+                "request",
+                ns_to_us(start.saturating_sub(t0) as f64),
+                ns_to_us(end.saturating_sub(start) as f64),
+                &format!(
+                    r#"{{"session":{},"outcome":"{}"}}"#,
+                    tr.session,
+                    escape_json(tr.outcome)
+                ),
+            );
+        }
+    }
     for tr in ordered {
         let pid = tr.trace_id + 1;
         out.process_name(
             pid,
             &format!(
-                "req {} {} session={} [{}]{}",
+                "req {} {} session={} [{}]{}{}",
                 tr.trace_id,
                 tr.label,
                 tr.session,
                 tr.outcome,
-                tr.operator.map(|o| format!(" op={o}")).unwrap_or_default()
+                tr.operator.map(|o| format!(" op={o}")).unwrap_or_default(),
+                tr.device.map(|d| format!(" dev={d}")).unwrap_or_default()
             ),
         );
         out.thread_name(pid, 0, "request");
@@ -189,11 +227,12 @@ pub fn jsonl(traces: &[RequestTrace]) -> String {
     for tr in ordered {
         let _ = writeln!(
             out,
-            r#"{{"event":"request","trace_id":{},"session":{},"label":"{}","operator":{},"outcome":"{}"}}"#,
+            r#"{{"event":"request","trace_id":{},"session":{},"label":"{}","operator":{},"device":{},"outcome":"{}"}}"#,
             tr.trace_id,
             tr.session,
             escape_json(&tr.label),
             tr.operator.map(|o| format!("\"{}\"", escape_json(o))).unwrap_or_else(|| "null".into()),
+            tr.device.map(|d| format!("\"{}\"", escape_json(d))).unwrap_or_else(|| "null".into()),
             escape_json(tr.outcome),
         );
         for s in &tr.stages {
@@ -552,6 +591,7 @@ mod tests {
             session: 7,
             label: "causal N=128".into(),
             operator: Some("causal"),
+            device: Some("d0"),
             outcome: "served",
             stages: vec![
                 Stage { name: "queued", start_ns: 1000, end_ns: 2000 },
@@ -576,6 +616,9 @@ mod tests {
         assert!(json.contains(r#""name":"request""#));
         assert!(json.contains(r#""name":"DPU""#));
         assert!(json.contains(r#""cat":"stage""#));
+        // The serving device gets its own summary process track.
+        assert!(json.contains(r#""name":"device d0""#), "{json}");
+        assert!(json.contains(r#""cat":"request""#), "{json}");
         // Rebased to the earliest stage: queued starts at ts 0.
         assert!(json.contains(r#""ts":0.000"#), "{json}");
     }
@@ -605,6 +648,7 @@ mod tests {
     fn jsonl_lines_each_parse() {
         let text = jsonl(&[sample_trace()]);
         assert_eq!(text.lines().count(), 4, "{text}");
+        assert!(text.contains(r#""device":"d0""#), "{text}");
         for line in text.lines() {
             validate_json(line).unwrap();
         }

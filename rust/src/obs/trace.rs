@@ -95,6 +95,9 @@ pub struct RequestTrace {
     /// Registry operator that served it (set at lowering; `None` when
     /// shed before lowering or served by a precompiled artifact).
     pub operator: Option<&'static str>,
+    /// Fleet device that executed it, e.g. `d0` (set at placement;
+    /// `None` on traces captured before dispatch).
+    pub device: Option<&'static str>,
     /// `served`, `shed`, or `error`.
     pub outcome: &'static str,
     pub stages: Vec<Stage>,
@@ -147,6 +150,7 @@ impl Tracer {
                 session,
                 label,
                 operator: None,
+                device: None,
                 outcome: "open",
                 stages: Vec::new(),
                 engine_spans: Vec::new(),
@@ -164,6 +168,13 @@ impl Tracer {
     pub fn set_operator(&mut self, trace_id: u64, operator: &'static str) {
         if let Some(t) = self.active.get_mut(&trace_id) {
             t.operator = Some(operator);
+        }
+    }
+
+    /// Stamp the fleet device the request was placed on.
+    pub fn set_device(&mut self, trace_id: u64, device: &'static str) {
+        if let Some(t) = self.active.get_mut(&trace_id) {
+            t.device = Some(device);
         }
     }
 
@@ -233,6 +244,7 @@ mod tests {
         tr.begin(7, 3, "causal N=128".into());
         tr.stage(7, "queued", 100, 200);
         tr.set_operator(7, "causal");
+        tr.set_device(7, "d0");
         let (g, t) = lowered(OperatorKind::Causal, 128);
         let spans = engine_spans(&g, &t);
         tr.attach_engine_spans(7, 200, &spans);
@@ -243,6 +255,7 @@ mod tests {
         let rt = &done[0];
         assert_eq!(rt.trace_id, 7);
         assert_eq!(rt.operator, Some("causal"));
+        assert_eq!(rt.device, Some("d0"));
         assert_eq!(rt.outcome, "served");
         assert_eq!(rt.stages.len(), 2);
         assert_eq!(rt.engine_spans.len(), spans.len());

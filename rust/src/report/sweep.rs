@@ -11,6 +11,7 @@
 //! command over the pluggable operator inventory.
 
 use crate::config::{NpuConfig, SimConfig, WorkloadSpec};
+use crate::coordinator::DeviceStat;
 use crate::memory::MemoryConfig;
 use crate::npu;
 use crate::ops::registry::{self, classify, BoundClass, CausalOperator, OperatorRegistry};
@@ -241,6 +242,85 @@ pub fn capacity_report(contexts: &[usize], hw: &NpuConfig, sim: &SimConfig) -> S
     capacity_report_with(registry::global(), contexts, &MemoryConfig::calibrated(hw, sim))
 }
 
+/// Capacity report for a fleet of `devices` identical NPUs. Each device
+/// owns its own session-memory pool, so fleet capacity scales linearly
+/// with the device count (until placement skew concentrates sessions);
+/// the appended section states the fleet ceilings per operator.
+pub fn capacity_fleet_report(
+    contexts: &[usize],
+    hw: &NpuConfig,
+    sim: &SimConfig,
+    devices: usize,
+) -> String {
+    let devices = devices.max(1);
+    let base = capacity_report(contexts, hw, sim);
+    if devices == 1 {
+        return base;
+    }
+    let mem = MemoryConfig::calibrated(hw, sim);
+    let lo = contexts.iter().copied().min().unwrap_or(0);
+    let hi = contexts.iter().copied().max().unwrap_or(0);
+    let mut fleet =
+        format!("\nFleet capacity ({devices} devices, one pool each — linear ceiling):\n");
+    for op in registry::global().iter() {
+        fleet += &format!(
+            "  {:<12} {:>12} sessions at N={lo} -> {:>12} at N={hi}\n",
+            op.paper_name(),
+            max_sessions_at(op, lo, &mem) * devices as u64,
+            max_sessions_at(op, hi, &mem) * devices as u64,
+        );
+    }
+    base + &fleet
+}
+
+/// Per-device occupancy table for a finished (or running) serve: how the
+/// fleet's model-time work spread across devices. `Occupancy` is each
+/// device's executed model time over the fleet makespan — the fraction
+/// of the critical path it was busy — so a perfectly balanced fleet
+/// shows equal occupancies and the makespan speedup is their sum.
+pub fn fleet_occupancy_report(stats: &[DeviceStat]) -> String {
+    let makespan = stats.iter().map(|s| s.busy_until_ns).max().unwrap_or(0);
+    let rows: Vec<Vec<String>> = stats
+        .iter()
+        .map(|s| {
+            vec![
+                s.label.to_string(),
+                s.served.to_string(),
+                s.batches.to_string(),
+                s.sessions.to_string(),
+                s.resident_sessions.to_string(),
+                format!("{:.3}", s.busy_ns_total as f64 / 1e6),
+                format!("{:.3}", s.busy_until_ns as f64 / 1e6),
+                if makespan > 0 {
+                    format!("{:.1}%", s.busy_ns_total as f64 / makespan as f64 * 100.0)
+                } else {
+                    "-".to_string()
+                },
+                s.migrations_in.to_string(),
+            ]
+        })
+        .collect();
+    let table = fmt::table(
+        &[
+            "Device",
+            "Served",
+            "Batches",
+            "Sessions",
+            "Resident",
+            "Busy ms",
+            "Until ms",
+            "Occupancy",
+            "Migrations",
+        ],
+        &rows,
+    );
+    format!(
+        "Fleet occupancy: {} devices, makespan {:.3} ms\n{table}",
+        stats.len(),
+        makespan as f64 / 1e6,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -302,6 +382,50 @@ mod tests {
         assert_eq!(causal[1].state_bytes, 4 * causal[0].state_bytes, "KV grows O(N)");
         let text = sweep_report(&[256], &hw, &sim);
         assert!(text.contains("State"), "{text}");
+    }
+
+    #[test]
+    fn fleet_capacity_appends_only_on_real_fleets() {
+        let (hw, sim) = cfg();
+        let one = capacity_fleet_report(&[512, 2048], &hw, &sim, 1);
+        assert_eq!(one, capacity_report(&[512, 2048], &hw, &sim));
+        assert!(!one.contains("Fleet capacity"), "{one}");
+        let four = capacity_fleet_report(&[512, 2048], &hw, &sim, 4);
+        assert!(four.contains("Fleet capacity (4 devices"), "{four}");
+        assert!(four.starts_with(&one), "fleet section appends, never rewrites: {four}");
+    }
+
+    #[test]
+    fn fleet_occupancy_renders_one_row_per_device() {
+        let stats = vec![
+            DeviceStat {
+                id: 0,
+                label: "d0",
+                busy_until_ns: 2_000_000,
+                busy_ns_total: 1_500_000,
+                served: 3,
+                batches: 2,
+                sessions: 1,
+                resident_sessions: 1,
+                migrations_in: 0,
+            },
+            DeviceStat {
+                id: 1,
+                label: "d1",
+                busy_until_ns: 1_000_000,
+                busy_ns_total: 1_000_000,
+                served: 1,
+                batches: 1,
+                sessions: 1,
+                resident_sessions: 1,
+                migrations_in: 1,
+            },
+        ];
+        let out = fleet_occupancy_report(&stats);
+        assert!(out.contains("makespan 2.000 ms"), "{out}");
+        assert!(out.contains("d0") && out.contains("d1"), "{out}");
+        // Occupancy = busy over the fleet makespan.
+        assert!(out.contains("75.0%") && out.contains("50.0%"), "{out}");
     }
 
     #[test]

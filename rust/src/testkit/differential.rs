@@ -19,15 +19,17 @@
 //! suite's proof that the harness has teeth (see
 //! `rust/tests/conformance.rs`).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::config::{NpuConfig, OperatorKind, SimConfig, WorkloadSpec};
-use crate::coordinator::Request;
+use crate::coordinator::{Clock, Coordinator, CoordinatorConfig, ManualClock, Request};
 use crate::npu::{self, ExecReport};
 use crate::ops;
 use crate::ops::registry::{self, classify};
 
-use super::workload::deterministic_coordinator;
+use super::workload::{deterministic_coordinator, replay, stream, Outcome, StreamConfig};
 
 /// One disagreement between the serve path and direct lowering.
 #[derive(Clone, Debug)]
@@ -185,6 +187,91 @@ pub fn check_against(
     Ok(rep)
 }
 
+/// Deterministic coordinator over an `devices`-wide fleet on a *frozen*
+/// [`ManualClock`], so metric expositions are byte-comparable across
+/// runs (uptime and queue ages are exactly zero).
+fn frozen_fleet(hw: &NpuConfig, sim: &SimConfig, devices: usize) -> Result<Coordinator> {
+    Coordinator::new(CoordinatorConfig {
+        max_batch: 1,
+        max_wait_ns: 100_000,
+        state_budget_bytes: 1 << 30,
+        devices,
+        clock: Some(Arc::new(ManualClock::new()) as Arc<dyn Clock>),
+        ..CoordinatorConfig::for_hw(hw.clone(), sim.clone())
+    })
+}
+
+/// Fleet-parity check for the device-fleet execution layer:
+///
+/// 1. a 1-device fleet replayed twice produces identical outcomes AND a
+///    byte-identical Prometheus exposition (the single-device byte-compat
+///    pin the refactor promised);
+/// 2. an N-device fleet preserves per-request semantics — the same
+///    operator attribution, the same simulated span, the same shed
+///    decisions — even though placement spreads sessions across pools.
+///
+/// Spill charges are deliberately *not* compared across fleet sizes:
+/// per-device pools see less pressure than one shared pool, so spill
+/// timing may legitimately improve with more devices.
+pub fn fleet_parity(
+    hw: &NpuConfig,
+    sim: &SimConfig,
+    seed: u64,
+    devices: usize,
+) -> Result<DiffReport> {
+    let mut rep = DiffReport::default();
+    let cfg = StreamConfig { requests: 24, ..StreamConfig::new(seed) };
+    let reqs = stream(&cfg);
+    let run = |n: usize| -> Result<(Vec<Outcome>, String)> {
+        let coord = frozen_fleet(hw, sim, n)?;
+        let outcomes = replay(&coord, &reqs);
+        let prom = coord.metrics_prometheus()?;
+        Ok((outcomes, prom))
+    };
+
+    let (base_a, prom_a) = run(1)?;
+    let (base_b, prom_b) = run(1)?;
+    rep.cases += 1;
+    if prom_a != prom_b {
+        rep.divergences.push(Divergence {
+            operator: "fleet".into(),
+            n: 1,
+            what: "single-device exposition is not byte-stable across replays".into(),
+        });
+    }
+    for (i, (x, y)) in base_a.iter().zip(&base_b).enumerate() {
+        rep.cases += 1;
+        if x != y {
+            rep.divergences.push(Divergence {
+                operator: "fleet".into(),
+                n: 1,
+                what: format!("request {i} differs across identical replays: {x:?} vs {y:?}"),
+            });
+        }
+    }
+
+    let (multi, _) = run(devices)?;
+    for (i, (x, y)) in base_a.iter().zip(&multi).enumerate() {
+        rep.cases += 1;
+        let same = match (x, y) {
+            (
+                Outcome::Served { operator: oa, backend_ns: ba, .. },
+                Outcome::Served { operator: ob, backend_ns: bb, .. },
+            ) => oa == ob && ba == bb,
+            (Outcome::Shed(a), Outcome::Shed(b)) => a == b,
+            _ => false,
+        };
+        if !same {
+            rep.divergences.push(Divergence {
+                operator: "fleet".into(),
+                n: devices,
+                what: format!("request {i}: {devices}-device outcome {y:?} != 1-device {x:?}"),
+            });
+        }
+    }
+    Ok(rep)
+}
+
 fn compare_reports(served: &ExecReport, direct: &ExecReport, diverge: &mut impl FnMut(String)) {
     if served.span_ns != direct.span_ns {
         diverge(format!(
@@ -223,6 +310,15 @@ mod tests {
         assert!(rep.is_clean(), "{}", rep.render());
         // 5 kinds + 6 registry entries, one context each.
         assert_eq!(rep.cases, 11);
+    }
+
+    #[test]
+    fn fleet_parity_holds_on_defaults() {
+        let rep =
+            fleet_parity(&NpuConfig::default(), &SimConfig::default(), 1, 4).unwrap();
+        assert!(rep.is_clean(), "{}", rep.render());
+        // 1 exposition comparison + 24 replay pairs + 24 fleet pairs.
+        assert_eq!(rep.cases, 49);
     }
 
     #[test]

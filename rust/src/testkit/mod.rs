@@ -27,7 +27,7 @@ pub mod invariants;
 pub mod prng;
 pub mod workload;
 
-pub use differential::{check as differential_check, DiffReport, Divergence};
+pub use differential::{check as differential_check, fleet_parity, DiffReport, Divergence};
 pub use golden::Outcome as GoldenOutcome;
 pub use prng::SplitMix64;
 
@@ -139,6 +139,8 @@ pub fn selftest(hw: &NpuConfig, sim: &SimConfig, opts: &SelftestOptions) -> Self
 
     section("replay-determinism", replay_section(hw, sim, &opts.seeds));
 
+    section("fleet-parity", fleet_section(hw, sim, &opts.seeds));
+
     section("obs-conformance", obs_section(hw, sim, &opts.seeds));
 
     // Golden fixtures capture *default-config* output; with hardware
@@ -216,6 +218,21 @@ fn replay_section(hw: &NpuConfig, sim: &SimConfig, seeds: &[u64]) -> Result<Stri
         "{} seeds x 2 replays, {served}/{total} served, {shed} shed, outcomes identical",
         seeds.len()
     ))
+}
+
+/// Fleet parity: per seed, a 1-device fleet must be byte-stable across
+/// replays and a 4-device fleet must preserve per-request semantics
+/// (see [`differential::fleet_parity`]).
+fn fleet_section(hw: &NpuConfig, sim: &SimConfig, seeds: &[u64]) -> Result<String, String> {
+    let mut cases = 0usize;
+    for &seed in seeds {
+        match differential::fleet_parity(hw, sim, seed, 4) {
+            Ok(rep) if rep.is_clean() => cases += rep.cases,
+            Ok(rep) => return Err(format!("seed {seed}: {}", rep.render())),
+            Err(e) => return Err(format!("seed {seed}: checker failed to run: {e}")),
+        }
+    }
+    Ok(format!("{} seeds x 1-vs-4 devices, {cases} cases, 0 divergences", seeds.len()))
 }
 
 /// Observability conformance: replay a traced stream on a frozen

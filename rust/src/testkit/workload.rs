@@ -75,10 +75,24 @@ pub fn deterministic_coordinator(
     sim: &SimConfig,
     state_budget_bytes: u64,
 ) -> Result<Coordinator> {
+    deterministic_fleet(hw, sim, state_budget_bytes, 1)
+}
+
+/// [`deterministic_coordinator`] over an N-device fleet: placement is a
+/// pure function of the request stream (session-affinity, then
+/// least-loaded with lowest-id ties), so multi-device replays stay
+/// exactly reproducible.
+pub fn deterministic_fleet(
+    hw: &NpuConfig,
+    sim: &SimConfig,
+    state_budget_bytes: u64,
+    devices: usize,
+) -> Result<Coordinator> {
     Coordinator::new(CoordinatorConfig {
         max_batch: 1,
         max_wait_ns: 100_000,
         state_budget_bytes,
+        devices,
         ..CoordinatorConfig::for_hw(hw.clone(), sim.clone())
     })
 }

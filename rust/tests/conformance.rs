@@ -4,6 +4,7 @@
 //! harness-has-teeth proof (a perturbed cost constant must be detected).
 
 use npuperf::config::{NpuConfig, SimConfig};
+use npuperf::coordinator::{Coordinator, CoordinatorConfig, ManualClock};
 use npuperf::testkit::{self, differential, invariants, workload, SelftestOptions};
 
 const SEEDS: [u64; 3] = [1, 2, 3];
@@ -76,6 +77,73 @@ fn replay_different_seeds_diverge() {
         workload::replay(&coord, &workload::stream(&workload::StreamConfig::new(seed)))
     };
     assert_ne!(run(1), run(2), "different seeds must produce different outcome streams");
+}
+
+#[test]
+fn multi_device_replay_is_deterministic_across_seeds() {
+    // The placement stage (session-affinity, then least-loaded by
+    // busy_until_ns) is a pure function of the request stream under the
+    // deterministic coordinator, so multi-device replays must agree
+    // exactly — same outcomes, same rendered signature — across fresh
+    // fleets, for every pinned seed.
+    let hw = NpuConfig::default();
+    let sim = SimConfig::default();
+    for seed in SEEDS {
+        let reqs = workload::stream(&workload::StreamConfig::new(seed));
+        let run = || {
+            let coord =
+                workload::deterministic_fleet(&hw, &sim, 8 * 1024 * 1024, 4).unwrap();
+            workload::replay(&coord, &reqs)
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b, "seed {seed}: two fresh 4-device fleets must agree exactly");
+        assert_eq!(workload::signature(&a), workload::signature(&b), "seed {seed}");
+    }
+}
+
+#[test]
+fn fleet_parity_one_device_is_byte_identical_and_four_preserve_semantics() {
+    let hw = NpuConfig::default();
+    let sim = SimConfig::default();
+    for seed in SEEDS {
+        let rep = differential::fleet_parity(&hw, &sim, seed, 4).unwrap();
+        assert!(rep.is_clean(), "seed {seed}: {}", rep.render());
+    }
+}
+
+#[test]
+fn four_devices_beat_one_on_aggregate_makespan() {
+    // Acceptance: on a seeded multi-session stream, spreading sessions
+    // over 4 model-time timelines must strictly shorten the fleet
+    // makespan — the whole point of the execution layer.
+    let hw = NpuConfig::default();
+    let sim = SimConfig::default();
+    let makespan = |devices: usize| -> u64 {
+        // Frozen clock: dispatch always happens at t=0, so busy_until_ns
+        // is pure accumulated model time, not wall time.
+        let coord = Coordinator::new(CoordinatorConfig {
+            max_batch: 1,
+            max_wait_ns: 100_000,
+            state_budget_bytes: 64 * 1024 * 1024,
+            devices,
+            clock: Some(std::sync::Arc::new(ManualClock::new())),
+            ..CoordinatorConfig::for_hw(hw.clone(), sim.clone())
+        })
+        .unwrap();
+        let reqs = workload::stream(&workload::StreamConfig::new(1));
+        for r in reqs {
+            let _ = coord.submit(r);
+        }
+        let stats = coord.fleet().unwrap();
+        assert_eq!(stats.len(), devices);
+        stats.iter().map(|d| d.busy_until_ns).max().unwrap_or(0)
+    };
+    let (one, four) = (makespan(1), makespan(4));
+    assert!(one > 0, "single device must have accumulated model time");
+    assert!(
+        four < one,
+        "4-device makespan ({four} ns) must beat 1-device ({one} ns)"
+    );
 }
 
 #[test]

@@ -82,9 +82,10 @@ fn serve_cli_exports_merged_timeline_and_metrics() {
     obs::validate_json(&trace).expect("merged timeline must be well-formed JSON");
     assert_eq!(
         trace.matches(r#""name":"process_name""#).count(),
-        32,
-        "one process per request"
+        33,
+        "one process per request plus the single device's summary track"
     );
+    assert!(trace.contains(r#""name":"device d0""#), "device track present:\n{trace}");
     // Request lifecycle stages ride tid 0 of their request's process.
     for stage in ["queued", "admission", "respond"] {
         assert!(trace.contains(&format!(r#""name":"{stage}""#)), "missing {stage} stage");
@@ -137,7 +138,7 @@ fn prometheus_exposition_matches_snapshot_under_manual_clock() {
     for (op, served) in [("toeplitz", 3u64), ("fourier", 2)] {
         assert!(
             prom.contains(&format!(
-                r#"npuperf_requests_served_total{{backend="simulate",operator="{op}"}} {served}"#
+                r#"npuperf_requests_served_total{{backend="simulate",device="d0",operator="{op}"}} {served}"#
             )),
             "{prom}"
         );
@@ -189,6 +190,30 @@ fn deterministic_serve_metrics_match_golden() {
     let prom = coord.metrics_prometheus().unwrap();
     obs::lint_prometheus(&prom).expect("exposition must lint");
     if let Err(diff) = golden::compare("serve_metrics_seed1.prom", &prom, false) {
+        panic!("{diff}");
+    }
+}
+
+// Same golden guard for the 4-device fleet: placement is deterministic
+// under the frozen clock, so the device-labeled exposition is just as
+// byte-stable as the single-device one.
+#[test]
+fn deterministic_serve_metrics_match_golden_devices4() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        max_batch: 1,
+        max_wait_ns: 100_000,
+        devices: 4,
+        clock: Some(std::sync::Arc::new(ManualClock::new())),
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    for r in stream(&StreamConfig { requests: 32, ..StreamConfig::new(1) }) {
+        coord.submit(r).unwrap();
+    }
+    let prom = coord.metrics_prometheus().unwrap();
+    obs::lint_prometheus(&prom).expect("exposition must lint");
+    assert!(prom.contains("npuperf_fleet_devices 4"), "{prom}");
+    if let Err(diff) = golden::compare("serve_metrics_seed1_devices4.prom", &prom, false) {
         panic!("{diff}");
     }
 }
