@@ -1,0 +1,423 @@
+//! Line/column-accurate token scanner for Rust source.
+//!
+//! This is *not* a parser: `npuperf lint`'s rules are token patterns
+//! (`.unwrap` followed by `(`, a string literal in a call's first
+//! argument slot, ...), so all the lexer has to get exactly right is the
+//! part regexes cannot — comments, the full string-literal zoo (raw,
+//! byte, hashed), char-vs-lifetime disambiguation, and nested block
+//! comments — so a rule never fires on text the compiler would never
+//! execute. Dependency-free by design: the vendored offline build has no
+//! syn/proc-macro2 to lean on, and the lint must run everywhere the
+//! build does.
+
+/// Token classification. Comments are kept as tokens (pragmas live in
+/// them); rule patterns run over the non-comment subsequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`foo`, `fn`, `r#type`).
+    Ident,
+    /// Any string literal (`"…"`, `r#"…"#`, `b"…"`); `text` is the
+    /// *content* with quotes and prefixes stripped, escapes left as-is.
+    Str,
+    /// Char or byte-char literal (`'x'`, `b'\n'`).
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// Numeric literal (`42`, `0x1F`, `1.5e3`, `4096usize`).
+    Num,
+    /// Single punctuation character (`.`, `[`, `!`, …).
+    Punct,
+    /// `// …` to end of line; `text` includes the slashes.
+    LineComment,
+    /// `/* … */`, nesting respected; `text` includes the delimiters.
+    BlockComment,
+}
+
+/// One token with its 1-based source position.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+impl Token {
+    pub fn is(&self, kind: TokKind, text: &str) -> bool {
+        self.kind == kind && self.text == text
+    }
+}
+
+struct Scanner {
+    chars: Vec<char>,
+    pos: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Scanner {
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn peek_at(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek()?;
+        self.pos += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`. Never fails: malformed input (unterminated string,
+/// stray byte) degrades to best-effort tokens rather than an error, so a
+/// half-edited file still lints instead of crashing the pass.
+pub fn lex(src: &str) -> Vec<Token> {
+    let mut s = Scanner { chars: src.chars().collect(), pos: 0, line: 1, col: 1 };
+    let mut out = Vec::new();
+    while let Some(c) = s.peek() {
+        let (line, col) = (s.line, s.col);
+        if c.is_whitespace() {
+            s.bump();
+            continue;
+        }
+        if c == '/' && s.peek_at(1) == Some('/') {
+            let mut text = String::new();
+            while let Some(c) = s.peek() {
+                if c == '\n' {
+                    break;
+                }
+                text.push(c);
+                s.bump();
+            }
+            out.push(Token { kind: TokKind::LineComment, text, line, col });
+            continue;
+        }
+        if c == '/' && s.peek_at(1) == Some('*') {
+            let mut text = String::new();
+            let mut depth = 0usize;
+            while let Some(c) = s.peek() {
+                if c == '/' && s.peek_at(1) == Some('*') {
+                    depth += 1;
+                    text.push('/');
+                    text.push('*');
+                    s.bump();
+                    s.bump();
+                } else if c == '*' && s.peek_at(1) == Some('/') {
+                    depth -= 1;
+                    text.push('*');
+                    text.push('/');
+                    s.bump();
+                    s.bump();
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    text.push(c);
+                    s.bump();
+                }
+            }
+            out.push(Token { kind: TokKind::BlockComment, text, line, col });
+            continue;
+        }
+        // String-literal prefixes must win over plain ident scanning.
+        if let Some(tok) = try_string_or_char(&mut s, line, col) {
+            out.push(tok);
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut text = String::new();
+            while let Some(c) = s.peek() {
+                if !is_ident_continue(c) {
+                    break;
+                }
+                text.push(c);
+                s.bump();
+            }
+            out.push(Token { kind: TokKind::Ident, text, line, col });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut text = String::new();
+            while let Some(c) = s.peek() {
+                if is_ident_continue(c) {
+                    text.push(c);
+                    s.bump();
+                } else if c == '.' && s.peek_at(1).is_some_and(|d| d.is_ascii_digit()) {
+                    // `1.5` continues the number; `1..n` does not.
+                    text.push(c);
+                    s.bump();
+                } else {
+                    break;
+                }
+            }
+            out.push(Token { kind: TokKind::Num, text, line, col });
+            continue;
+        }
+        s.bump();
+        out.push(Token { kind: TokKind::Punct, text: c.to_string(), line, col });
+    }
+    out
+}
+
+/// Scan a string/char/lifetime form if one starts at the cursor:
+/// `"…"`, `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`, `b'…'`, `'…'`, `'life`,
+/// and raw identifiers `r#name`. Returns `None` when the cursor is on
+/// something else (plain ident, number, punct).
+fn try_string_or_char(s: &mut Scanner, line: u32, col: u32) -> Option<Token> {
+    match s.peek()? {
+        '\'' => Some(char_or_lifetime(s, line, col)),
+        '"' => {
+            s.bump();
+            Some(quoted_string(s, line, col))
+        }
+        'r' | 'b' => {
+            // Work out whether this `r`/`b` heads a literal before
+            // committing — otherwise it is an ordinary identifier start.
+            let (prefix_len, hashes, quote) = match (s.peek()?, s.peek_at(1)) {
+                ('b', Some('\'')) => (1, 0, '\''),
+                ('b', Some('"')) => (1, 0, '"'),
+                ('b', Some('r')) => {
+                    let h = count_hashes(s, 2);
+                    match s.peek_at(2 + h) {
+                        Some('"') => (2, h, '"'),
+                        _ => return None,
+                    }
+                }
+                ('r', Some('"')) => (1, 0, '"'),
+                ('r', Some('#')) => {
+                    let h = count_hashes(s, 1);
+                    match s.peek_at(1 + h) {
+                        Some('"') => (1, h, '"'),
+                        // `r#name`: raw identifier, lex as Ident.
+                        Some(c) if is_ident_start(c) => {
+                            let mut text = String::new();
+                            s.bump(); // r
+                            s.bump(); // #
+                            while let Some(c) = s.peek() {
+                                if !is_ident_continue(c) {
+                                    break;
+                                }
+                                text.push(c);
+                                s.bump();
+                            }
+                            return Some(Token { kind: TokKind::Ident, text, line, col });
+                        }
+                        _ => return None,
+                    }
+                }
+                _ => return None,
+            };
+            for _ in 0..prefix_len + hashes {
+                s.bump();
+            }
+            s.bump(); // opening quote
+            if quote == '\'' {
+                return Some(char_body(s, line, col));
+            }
+            Some(if hashes > 0 || is_raw_prefix(s, prefix_len) {
+                raw_string(s, hashes, line, col)
+            } else {
+                quoted_string(s, line, col)
+            })
+        }
+        _ => None,
+    }
+}
+
+/// `true` when the literal we just committed to was `r`-prefixed (no
+/// escape processing); byte strings `b"…"` still process escapes.
+fn is_raw_prefix(s: &Scanner, prefix_len: usize) -> bool {
+    // The prefix sits immediately before the just-consumed quote.
+    let quote_pos = s.pos - 1;
+    (1..=prefix_len).any(|back| s.chars.get(quote_pos.wrapping_sub(back)) == Some(&'r'))
+}
+
+fn count_hashes(s: &Scanner, from: usize) -> usize {
+    let mut h = 0;
+    while s.peek_at(from + h) == Some('#') {
+        h += 1;
+    }
+    h
+}
+
+/// Body of a non-raw string; the opening `"` is already consumed.
+fn quoted_string(s: &mut Scanner, line: u32, col: u32) -> Token {
+    let mut text = String::new();
+    while let Some(c) = s.bump() {
+        match c {
+            '"' => break,
+            '\\' => {
+                text.push(c);
+                if let Some(e) = s.bump() {
+                    text.push(e);
+                }
+            }
+            _ => text.push(c),
+        }
+    }
+    Token { kind: TokKind::Str, text, line, col }
+}
+
+/// Body of a raw string; the opening `"` is consumed, `hashes` is the
+/// number of `#` required after the closing quote.
+fn raw_string(s: &mut Scanner, hashes: usize, line: u32, col: u32) -> Token {
+    let mut text = String::new();
+    while let Some(c) = s.bump() {
+        if c == '"' {
+            let mut seen = 0;
+            while seen < hashes && s.peek() == Some('#') {
+                seen += 1;
+                s.bump();
+            }
+            if seen == hashes {
+                break;
+            }
+            text.push('"');
+            for _ in 0..seen {
+                text.push('#');
+            }
+            continue;
+        }
+        text.push(c);
+    }
+    Token { kind: TokKind::Str, text, line, col }
+}
+
+/// Disambiguate `'a'` (char) from `'a` (lifetime) at a `'` cursor.
+fn char_or_lifetime(s: &mut Scanner, line: u32, col: u32) -> Token {
+    // A lifetime is `'` + ident NOT followed by a closing `'`.
+    if s.peek_at(1).is_some_and(is_ident_start) && s.peek_at(2) != Some('\'') {
+        s.bump(); // '
+        let mut text = String::from("'");
+        while let Some(c) = s.peek() {
+            if !is_ident_continue(c) {
+                break;
+            }
+            text.push(c);
+            s.bump();
+        }
+        return Token { kind: TokKind::Lifetime, text, line, col };
+    }
+    s.bump(); // '
+    char_body(s, line, col)
+}
+
+/// Char-literal body; the opening `'` is consumed.
+fn char_body(s: &mut Scanner, line: u32, col: u32) -> Token {
+    let mut text = String::new();
+    match s.bump() {
+        Some('\\') => {
+            text.push('\\');
+            if let Some(e) = s.bump() {
+                text.push(e);
+            }
+            // `\u{…}` and friends: scan to the closing quote.
+            while let Some(c) = s.bump() {
+                if c == '\'' {
+                    break;
+                }
+                text.push(c);
+            }
+        }
+        Some(c) => {
+            text.push(c);
+            s.bump(); // closing '
+        }
+        None => {}
+    }
+    Token { kind: TokKind::Char, text, line, col }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_puncts_and_positions() {
+        let toks = lex("foo.bar()\n  baz");
+        assert_eq!(toks.len(), 6);
+        assert!(toks[0].is(TokKind::Ident, "foo"));
+        assert!(toks[1].is(TokKind::Punct, "."));
+        assert_eq!((toks[0].line, toks[0].col), (1, 1));
+        assert_eq!((toks[5].line, toks[5].col), (2, 3));
+        assert!(toks[5].is(TokKind::Ident, "baz"));
+    }
+
+    #[test]
+    fn comments_are_tokens_not_code() {
+        let toks = kinds("a // unwrap()\n/* panic! /* nested */ */ b");
+        assert_eq!(toks[0], (TokKind::Ident, "a".to_string()));
+        assert_eq!(toks[1].0, TokKind::LineComment);
+        assert!(toks[1].1.contains("unwrap"));
+        assert_eq!(toks[2].0, TokKind::BlockComment);
+        assert!(toks[2].1.contains("nested"));
+        assert_eq!(toks[3], (TokKind::Ident, "b".to_string()));
+    }
+
+    #[test]
+    fn string_zoo() {
+        let toks = kinds(r####""plain" r"raw" r#"one"# b"bytes" br#"both"# "esc\"aped""####);
+        let strs: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Str)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(strs, vec!["plain", "raw", "one", "bytes", "both", "esc\\\"aped"]);
+    }
+
+    #[test]
+    fn chars_vs_lifetimes() {
+        let toks = kinds("'a' 'x 'static b'\\n' '\\u{1F600}'");
+        assert_eq!(toks[0], (TokKind::Char, "a".to_string()));
+        assert_eq!(toks[1], (TokKind::Lifetime, "'x".to_string()));
+        assert_eq!(toks[2], (TokKind::Lifetime, "'static".to_string()));
+        assert_eq!(toks[3].0, TokKind::Char);
+        assert_eq!(toks[4].0, TokKind::Char);
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges() {
+        let toks = kinds("1..n 1.5e3 0x1F 4096usize");
+        assert_eq!(toks[0], (TokKind::Num, "1".to_string()));
+        assert_eq!(toks[1], (TokKind::Punct, ".".to_string()));
+        assert_eq!(toks[2], (TokKind::Punct, ".".to_string()));
+        assert_eq!(toks[3], (TokKind::Ident, "n".to_string()));
+        assert_eq!(toks[4], (TokKind::Num, "1.5e3".to_string()));
+        assert_eq!(toks[5], (TokKind::Num, "0x1F".to_string()));
+        assert_eq!(toks[6], (TokKind::Num, "4096usize".to_string()));
+    }
+
+    #[test]
+    fn raw_identifier() {
+        let toks = kinds("r#type r#fn");
+        assert_eq!(toks[0], (TokKind::Ident, "type".to_string()));
+        assert_eq!(toks[1], (TokKind::Ident, "fn".to_string()));
+    }
+
+    #[test]
+    fn string_spanning_metric_name_is_one_token() {
+        let toks = kinds(r#"reg.inc("some_metric_total", &[])"#);
+        assert!(toks.iter().any(|(k, t)| *k == TokKind::Str && t == "some_metric_total"));
+    }
+}

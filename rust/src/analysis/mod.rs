@@ -1,0 +1,275 @@
+//! `npuperf lint`: project-specific static analysis for the serving
+//! stack's three non-negotiables — determinism (no stray wall-clock
+//! reads), panic-freedom on the serve path, and metric/doc consistency.
+//!
+//! The repo's conformance story (seeded replays, golden expositions,
+//! differential checks — see `docs/TESTING.md`) is *dynamic*: it proves
+//! the code that ran was deterministic. This subsystem is the static
+//! half: a dependency-free token-level scanner ([`lexer`]) and rule
+//! engine ([`rules`]) that keep the properties from regressing before
+//! anything runs. Five rules, catalogued with rationale and the
+//! `lint:allow` pragma grammar in `docs/LINTS.md`:
+//!
+//! 1. `no-wall-clock` — host time is read only in `coordinator::clock`;
+//! 2. `no-panic-serve-path` — no `unwrap`/`expect`/`panic!`/indexing in
+//!    the serve-path modules;
+//! 3. `metric-names-single-source` — metric names live in
+//!    `metrics::names` and every one is documented;
+//! 4. `label-set-consistency` — one metric, one label-key set;
+//! 5. `golden-fixture-hygiene` — golden-dir I/O goes through
+//!    `testkit::golden`.
+//!
+//! The pass self-hosts: `npuperf lint` exits 0 on this repo at HEAD,
+//! and `selftest`'s `lint-conformance` section proves each rule still
+//! fires on embedded known-bad fixtures.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+pub mod source;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+pub use report::{Finding, LintReport};
+pub use source::SourceFile;
+
+/// A configured lint pass: feed it sources, run, get a [`LintReport`].
+#[derive(Debug, Default)]
+pub struct Analyzer {
+    files: Vec<SourceFile>,
+    observability_doc: Option<String>,
+}
+
+impl Analyzer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one source file. `path` should be repo-relative with `/`
+    /// separators — rule scopes key off it (`rust/tests/` marks test
+    /// files, `coordinator/clock.rs` is the blessed clock module, …).
+    pub fn add_source(&mut self, path: &str, src: &str) {
+        self.files.push(SourceFile::parse(path, src));
+    }
+
+    /// Provide `docs/OBSERVABILITY.md` so rule 3 can cross-check that
+    /// every declared metric name is documented.
+    pub fn set_observability_doc(&mut self, text: &str) {
+        self.observability_doc = Some(text.to_string());
+    }
+
+    /// Run every rule and return the sorted report.
+    pub fn run(mut self) -> LintReport {
+        self.files.sort_by(|a, b| a.path.cmp(&b.path));
+        let mut rep = LintReport {
+            findings: rules::run_all(&self.files, self.observability_doc.as_deref()),
+            files_scanned: self.files.len(),
+        };
+        rep.sort();
+        rep
+    }
+}
+
+/// Lint the repository rooted at `root`: every `.rs` under `rust/src`
+/// and `rust/tests` (golden fixtures and lint fixtures excluded), with
+/// `docs/OBSERVABILITY.md` wired in for the doc-sync check.
+pub fn lint_repo(root: &Path) -> anyhow::Result<LintReport> {
+    let src_root = root.join("rust").join("src");
+    if !src_root.is_dir() {
+        anyhow::bail!(
+            "{} has no rust/src directory — pass the repo root: npuperf lint <repo-root>",
+            root.display()
+        );
+    }
+    let mut paths = Vec::new();
+    collect_rs(&src_root, &mut paths)?;
+    let tests_root = root.join("rust").join("tests");
+    if tests_root.is_dir() {
+        collect_rs(&tests_root, &mut paths)?;
+    }
+    paths.sort();
+    let mut analyzer = Analyzer::new();
+    for p in &paths {
+        let rel = p.strip_prefix(root).unwrap_or(p).to_string_lossy().replace('\\', "/");
+        let text = std::fs::read_to_string(p).with_context(|| format!("reading {rel}"))?;
+        analyzer.add_source(&rel, &text);
+    }
+    if let Ok(doc) = std::fs::read_to_string(root.join("docs").join("OBSERVABILITY.md")) {
+        analyzer.set_observability_doc(&doc);
+    }
+    Ok(analyzer.run())
+}
+
+/// Recursively collect `.rs` files, skipping data directories: golden
+/// fixtures (not Rust) and the lint's own known-bad fixture corpus.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    let entries =
+        std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.with_context(|| format!("listing {}", dir.display()))?;
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if path.is_dir() {
+            if name == "golden" || name == "lint_fixtures" {
+                continue;
+            }
+            collect_rs(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Run one embedded fixture through a fresh [`Analyzer`] under a
+/// synthetic path (paths drive rule scoping).
+fn lint_fixture(path: &str, src: &str) -> LintReport {
+    let mut a = Analyzer::new();
+    a.add_source(path, src);
+    a.run()
+}
+
+/// The `lint-conformance` selftest section: prove every rule fires on
+/// its known-bad fixture, stays quiet on the known-good twin, and that
+/// the pragma waiver round-trips (reason recorded, missing reason
+/// rejected). The fixtures are embedded at compile time, so the check
+/// is independent of the working directory.
+pub fn selftest_section() -> Result<String, String> {
+    // (rule, bad fixture path+src, good fixture path+src). Synthetic
+    // paths place each fixture in the scope its rule watches.
+    let cases: [(&'static str, (&str, &str), (&str, &str)); 5] = [
+        (
+            rules::NO_WALL_CLOCK,
+            (
+                "rust/src/report/fixture.rs",
+                include_str!("../../tests/lint_fixtures/no_wall_clock_bad.rs"),
+            ),
+            (
+                "rust/src/report/fixture.rs",
+                include_str!("../../tests/lint_fixtures/no_wall_clock_good.rs"),
+            ),
+        ),
+        (
+            rules::NO_PANIC,
+            (
+                "rust/src/coordinator/server.rs",
+                include_str!("../../tests/lint_fixtures/no_panic_bad.rs"),
+            ),
+            (
+                "rust/src/coordinator/server.rs",
+                include_str!("../../tests/lint_fixtures/no_panic_good.rs"),
+            ),
+        ),
+        (
+            rules::METRIC_NAMES,
+            (
+                "rust/src/obs/fixture.rs",
+                include_str!("../../tests/lint_fixtures/metric_names_bad.rs"),
+            ),
+            (
+                "rust/src/obs/fixture.rs",
+                include_str!("../../tests/lint_fixtures/metric_names_good.rs"),
+            ),
+        ),
+        (
+            rules::LABEL_SETS,
+            (
+                "rust/src/coordinator/fixture.rs",
+                include_str!("../../tests/lint_fixtures/label_set_bad.rs"),
+            ),
+            (
+                "rust/src/coordinator/fixture.rs",
+                include_str!("../../tests/lint_fixtures/label_set_good.rs"),
+            ),
+        ),
+        (
+            rules::GOLDEN_HYGIENE,
+            (
+                "rust/tests/fixture.rs",
+                include_str!("../../tests/lint_fixtures/golden_hygiene_bad.rs"),
+            ),
+            (
+                "rust/tests/fixture.rs",
+                include_str!("../../tests/lint_fixtures/golden_hygiene_good.rs"),
+            ),
+        ),
+    ];
+    for (rule, (bad_path, bad_src), (good_path, good_src)) in cases {
+        let bad = lint_fixture(bad_path, bad_src);
+        if !bad.active().any(|f| f.rule == rule) {
+            return Err(format!("rule {rule} did not fire on its known-bad fixture"));
+        }
+        let good = lint_fixture(good_path, good_src);
+        if good.findings.iter().any(|f| f.rule == rule) {
+            return Err(format!("rule {rule} fired on its known-good fixture"));
+        }
+    }
+
+    let waived = lint_fixture(
+        "rust/src/memory/fixture.rs",
+        include_str!("../../tests/lint_fixtures/pragma_roundtrip.rs"),
+    );
+    if !waived.is_clean() {
+        return Err(format!(
+            "reasoned pragma did not waive its finding: {}",
+            waived.render_human()
+        ));
+    }
+    let recorded = waived.findings.iter().any(|f| {
+        f.rule == rules::NO_PANIC
+            && f.allowed.as_deref().is_some_and(|r| r.contains("reasoned waiver"))
+    });
+    if !recorded {
+        return Err("waived finding lost its pragma reason".to_string());
+    }
+
+    let bare = lint_fixture(
+        "rust/src/memory/fixture.rs",
+        include_str!("../../tests/lint_fixtures/pragma_missing_reason.rs"),
+    );
+    let pragma_reported = bare.active().any(|f| f.rule == rules::PRAGMA);
+    let finding_active = bare.active().any(|f| f.rule == rules::NO_PANIC);
+    if !pragma_reported || !finding_active {
+        return Err(format!(
+            "reason-less pragma must be reported and must not waive (got: {})",
+            bare.render_human()
+        ));
+    }
+
+    Ok(format!(
+        "{} rules fire on bad fixtures and stay quiet on good ones; pragma waiver round-trips",
+        cases.len()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selftest_section_passes() {
+        selftest_section().expect("lint conformance");
+    }
+
+    #[test]
+    fn analyzer_report_is_sorted_and_jsonl_valid() {
+        let mut a = Analyzer::new();
+        a.add_source(
+            "rust/src/memory/z.rs",
+            "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n",
+        );
+        a.add_source(
+            "rust/src/memory/a.rs",
+            "pub fn g(x: Option<u32>) -> u32 { x.unwrap() }\n",
+        );
+        let rep = a.run();
+        assert_eq!(rep.files_scanned, 2);
+        assert!(!rep.is_clean());
+        assert!(rep.findings[0].file < rep.findings[1].file);
+        for line in rep.render_jsonl().lines() {
+            crate::obs::validate_json(line).expect(line);
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Diagnostic model and renderers for `npuperf lint`.
+//!
+//! Two outputs from one finding list: a compiler-style human rendering
+//! for terminals, and a JSONL report (one object per finding, in the
+//! style of the `obs` event log) for CI artifacts and tooling. Findings
+//! waived by a reasoned `lint:allow` pragma stay in the report —
+//! `allowed` carries the recorded reason — but do not fail the run.
+
+use crate::obs::export::escape_json;
+
+/// One diagnostic from one rule at one source position.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Rule name (`no-wall-clock`, …) or `pragma` for waiver misuse.
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub message: String,
+    /// `Some(reason)` when a `lint:allow` pragma waived this finding.
+    pub allowed: Option<String>,
+}
+
+/// The full result of one lint pass.
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// Deterministic order: by file, then position, then rule.
+    pub fn sort(&mut self) {
+        self.findings
+            .sort_by(|a, b| (&a.file, a.line, a.col, a.rule).cmp(&(&b.file, b.line, b.col, b.rule)));
+    }
+
+    /// Findings that actually fail the run (not pragma-waived).
+    pub fn active(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.allowed.is_none())
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.active().next().is_none()
+    }
+
+    /// Compiler-style terminal rendering.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for f in self.active() {
+            out += &format!("{}:{}:{}: [{}] {}\n", f.file, f.line, f.col, f.rule, f.message);
+        }
+        let waived = self.findings.len() - self.active().count();
+        let active = self.active().count();
+        if active == 0 {
+            out += &format!(
+                "lint: clean — {} files scanned, {waived} finding(s) waived by pragma\n",
+                self.files_scanned
+            );
+        } else {
+            out += &format!(
+                "lint: {active} finding(s) in {} files scanned ({waived} waived by pragma)\n",
+                self.files_scanned
+            );
+        }
+        out
+    }
+
+    /// One JSON object per finding (waived ones included, with their
+    /// reason), each line independently parseable.
+    pub fn render_jsonl(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            let allowed = match &f.allowed {
+                Some(r) => format!("\"{}\"", escape_json(r)),
+                None => "null".to_string(),
+            };
+            out += &format!(
+                "{{\"rule\":\"{}\",\"file\":\"{}\",\"line\":{},\"col\":{},\"message\":\"{}\",\"allowed\":{}}}\n",
+                escape_json(f.rule),
+                escape_json(&f.file),
+                f.line,
+                f.col,
+                escape_json(&f.message),
+                allowed
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(file: &str, line: u32, allowed: Option<&str>) -> Finding {
+        Finding {
+            rule: "no-wall-clock",
+            file: file.to_string(),
+            line,
+            col: 1,
+            message: "host time read".to_string(),
+            allowed: allowed.map(str::to_string),
+        }
+    }
+
+    #[test]
+    fn waived_findings_do_not_fail_but_are_reported() {
+        let mut rep = LintReport {
+            findings: vec![finding("b.rs", 2, Some("bench")), finding("a.rs", 9, None)],
+            files_scanned: 2,
+        };
+        rep.sort();
+        assert!(!rep.is_clean());
+        assert_eq!(rep.findings[0].file, "a.rs", "sorted by file");
+        let human = rep.render_human();
+        assert!(human.contains("a.rs:9:1: [no-wall-clock]"));
+        assert!(!human.contains("b.rs:2"), "waived finding is not an error line");
+        assert!(human.contains("1 waived"));
+    }
+
+    #[test]
+    fn jsonl_lines_each_parse() {
+        let rep = LintReport {
+            findings: vec![finding("a.rs", 1, None), finding("b \"q\".rs", 2, Some("why"))],
+            files_scanned: 2,
+        };
+        let jsonl = rep.render_jsonl();
+        assert_eq!(jsonl.lines().count(), 2);
+        for line in jsonl.lines() {
+            crate::obs::validate_json(line).expect(line);
+        }
+        assert!(jsonl.contains("\"allowed\":\"why\""));
+    }
+}

@@ -1,0 +1,544 @@
+//! The five `npuperf lint` rules, as token patterns over
+//! [`SourceFile`]s. Each rule documents its scope precisely; all of them
+//! respect `lint:allow` pragmas (see [`super::source`]) except the
+//! `pragma` meta-rule, which reports waiver misuse itself.
+//!
+//! Scope conventions:
+//!
+//! - rules 1–4 are about *shipping* code: they skip `#[cfg(test)]` /
+//!   `#[test]` regions and whole files under `rust/tests/`;
+//! - rule 5 (`golden-fixture-hygiene`) is about *test* code and scans
+//!   everything, test regions included, except the blessed
+//!   `testkit/golden.rs` implementation.
+
+use std::collections::BTreeMap;
+
+use super::lexer::TokKind;
+use super::report::Finding;
+use super::source::SourceFile;
+
+pub const NO_WALL_CLOCK: &str = "no-wall-clock";
+pub const NO_PANIC: &str = "no-panic-serve-path";
+pub const METRIC_NAMES: &str = "metric-names-single-source";
+pub const LABEL_SETS: &str = "label-set-consistency";
+pub const GOLDEN_HYGIENE: &str = "golden-fixture-hygiene";
+/// Meta-rule for malformed `lint:allow` pragmas (not waivable).
+pub const PRAGMA: &str = "pragma";
+
+/// Rules a `lint:allow` pragma may name.
+pub const RULE_NAMES: [&str; 5] =
+    [NO_WALL_CLOCK, NO_PANIC, METRIC_NAMES, LABEL_SETS, GOLDEN_HYGIENE];
+
+// Spelled in halves so the lint's own source does not trip the rules it
+// implements (rule 3 flags string literals with the metric prefix; rule
+// 5 flags strings naming the golden directory).
+const METRIC_PREFIX: &str = concat!("npu", "perf_");
+const GOLDEN_DIR_FRAGMENT: &str = concat!("tests/", "golden");
+
+/// The file allowed to read host time.
+const CLOCK_FILE: &str = "coordinator/clock.rs";
+/// The file defining `metrics::names` (the single metric-name source).
+const NAMES_FILE: &str = "coordinator/metrics.rs";
+/// The blessed golden-fixture implementation.
+const GOLDEN_IMPL_FILE: &str = "testkit/golden.rs";
+
+/// Identifiers that read the host clock.
+const WALL_IDENTS: [&str; 3] = ["Instant", "SystemTime", "UNIX_EPOCH"];
+
+/// Serve-path modules rule 2 protects.
+const SERVE_PATH_FILES: [&str; 4] = [
+    "coordinator/server.rs",
+    "coordinator/dispatch.rs",
+    "coordinator/batcher.rs",
+    "coordinator/state.rs",
+];
+
+/// `MetricsRegistry` record methods whose first argument is a metric
+/// name and second a label array.
+const RECORD_METHODS: [&str; 4] = ["inc", "observe", "set_gauge", "set_counter"];
+
+/// Keywords that rule out the `ident[` indexing pattern (e.g.
+/// `for x in [a, b]` is an array literal, not an index).
+const KEYWORDS: [&str; 24] = [
+    "as", "box", "break", "const", "continue", "dyn", "else", "enum", "fn", "for", "if", "impl",
+    "in", "let", "loop", "match", "mod", "move", "mut", "ref", "return", "static", "while",
+    "where",
+];
+
+/// Metric names declared in `metrics::names`: const ident → value, plus
+/// the declaration site of each value for doc-sync diagnostics.
+#[derive(Debug, Default)]
+pub struct NamesIndex {
+    pub consts: BTreeMap<String, String>,
+    pub entries: Vec<(String, u32)>,
+    pub file: Option<String>,
+}
+
+/// Run every rule over `files`; `observability_doc` (the text of
+/// `docs/OBSERVABILITY.md`) enables the cross-artifact half of rule 3.
+pub fn run_all(files: &[SourceFile], observability_doc: Option<&str>) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let names = extract_metric_names(files);
+    for f in files {
+        pragma_misuse(f, &mut findings);
+        no_wall_clock(f, &mut findings);
+        no_panic_serve_path(f, &mut findings);
+        metric_name_literals(f, &mut findings);
+        golden_hygiene(f, &mut findings);
+    }
+    label_set_consistency(files, &names, &mut findings);
+    if let Some(doc) = observability_doc {
+        doc_sync(&names, doc, &mut findings);
+    }
+    findings
+}
+
+fn emit(
+    findings: &mut Vec<Finding>,
+    f: &SourceFile,
+    rule: &'static str,
+    line: u32,
+    col: u32,
+    message: String,
+) {
+    let allowed = f.allow(rule, line).map(str::to_string);
+    findings.push(Finding { rule, file: f.path.clone(), line, col, message, allowed });
+}
+
+/// Meta-rule: malformed pragmas are findings, never waivable.
+fn pragma_misuse(f: &SourceFile, findings: &mut Vec<Finding>) {
+    for bp in &f.bad_pragmas {
+        findings.push(Finding {
+            rule: PRAGMA,
+            file: f.path.clone(),
+            line: bp.line,
+            col: bp.col,
+            message: bp.message.clone(),
+            allowed: None,
+        });
+    }
+}
+
+/// Rule 1: host-time reads are confined to `coordinator::clock`.
+fn no_wall_clock(f: &SourceFile, findings: &mut Vec<Finding>) {
+    if f.is_test_file || f.path.ends_with(CLOCK_FILE) {
+        return;
+    }
+    for &ti in &f.code {
+        let t = &f.tokens[ti];
+        if t.kind == TokKind::Ident
+            && WALL_IDENTS.contains(&t.text.as_str())
+            && !f.in_test_region(t.line)
+        {
+            emit(
+                findings,
+                f,
+                NO_WALL_CLOCK,
+                t.line,
+                t.col,
+                format!(
+                    "`{}` reads host time; inject `coordinator::Clock` instead \
+                     (only {CLOCK_FILE} may touch std::time)",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
+fn on_serve_path(path: &str) -> bool {
+    SERVE_PATH_FILES.iter().any(|s| path.ends_with(s))
+        || path.contains("src/memory/")
+        || path.contains("src/obs/")
+}
+
+/// Rule 2: no panicking constructs on the serve path.
+fn no_panic_serve_path(f: &SourceFile, findings: &mut Vec<Finding>) {
+    if f.is_test_file || !on_serve_path(&f.path) {
+        return;
+    }
+    let tok = |ci: usize| &f.tokens[f.code[ci]];
+    for ci in 0..f.code.len() {
+        let t = tok(ci);
+        if f.in_test_region(t.line) {
+            continue;
+        }
+        // `.unwrap()` / `.expect(` — method position only, so a free
+        // function named `expect` does not trip it.
+        if t.kind == TokKind::Ident
+            && (t.text == "unwrap" || t.text == "expect")
+            && ci > 0
+            && tok(ci - 1).is(TokKind::Punct, ".")
+            && ci + 1 < f.code.len()
+            && tok(ci + 1).is(TokKind::Punct, "(")
+        {
+            emit(
+                findings,
+                f,
+                NO_PANIC,
+                t.line,
+                t.col,
+                format!(".{}() can panic on the serve path; return an error instead", t.text),
+            );
+            continue;
+        }
+        if t.kind == TokKind::Ident
+            && t.text == "panic"
+            && ci + 1 < f.code.len()
+            && tok(ci + 1).is(TokKind::Punct, "!")
+        {
+            emit(
+                findings,
+                f,
+                NO_PANIC,
+                t.line,
+                t.col,
+                "panic! on the serve path; return an error instead".to_string(),
+            );
+            continue;
+        }
+        // `expr[index]` with a variable index: `xs[i]`, `map[&key]`,
+        // `b[*pos]`. Conservative: the indexed expression must end in an
+        // identifier, `)`, or `]`, and the index must be a lone
+        // (possibly `&`/`*`-prefixed) identifier.
+        if t.is(TokKind::Punct, "[") && ci > 0 {
+            let prev = tok(ci - 1);
+            let indexes_expr = (prev.kind == TokKind::Ident
+                && !KEYWORDS.contains(&prev.text.as_str()))
+                || prev.is(TokKind::Punct, ")")
+                || prev.is(TokKind::Punct, "]");
+            if !indexes_expr {
+                continue;
+            }
+            let mut j = ci + 1;
+            if j < f.code.len()
+                && (tok(j).is(TokKind::Punct, "&") || tok(j).is(TokKind::Punct, "*"))
+            {
+                j += 1;
+            }
+            if j + 1 < f.code.len()
+                && tok(j).kind == TokKind::Ident
+                && !KEYWORDS.contains(&tok(j).text.as_str())
+                && tok(j + 1).is(TokKind::Punct, "]")
+            {
+                emit(
+                    findings,
+                    f,
+                    NO_PANIC,
+                    t.line,
+                    t.col,
+                    format!(
+                        "indexing `[{}]` can panic on the serve path; use .get()",
+                        tok(j).text
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Rule 3 (definition half): metric-name string literals may only appear
+/// in `metrics::names` — everywhere else, use the constant.
+fn metric_name_literals(f: &SourceFile, findings: &mut Vec<Finding>) {
+    if f.is_test_file || f.path.ends_with(NAMES_FILE) {
+        return;
+    }
+    for &ti in &f.code {
+        let t = &f.tokens[ti];
+        if t.kind == TokKind::Str
+            && t.text.starts_with(METRIC_PREFIX)
+            && !f.in_test_region(t.line)
+        {
+            emit(
+                findings,
+                f,
+                METRIC_NAMES,
+                t.line,
+                t.col,
+                format!(
+                    "metric name literal \"{}\" outside metrics::names; use the constant",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
+/// Rule 5: nothing outside `testkit::golden` names the golden fixture
+/// directory — tests must go through the bless/compare helpers.
+fn golden_hygiene(f: &SourceFile, findings: &mut Vec<Finding>) {
+    if f.path.ends_with(GOLDEN_IMPL_FILE) {
+        return;
+    }
+    for &ti in &f.code {
+        let t = &f.tokens[ti];
+        if t.kind == TokKind::Str && t.text.contains(GOLDEN_DIR_FRAGMENT) {
+            emit(
+                findings,
+                f,
+                GOLDEN_HYGIENE,
+                t.line,
+                t.col,
+                format!(
+                    "path \"{}\" names the golden fixture directory; route fixture I/O \
+                     through testkit::golden",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
+/// Find `pub mod names { … }` in the names file and index its consts.
+pub fn extract_metric_names(files: &[SourceFile]) -> NamesIndex {
+    let mut idx = NamesIndex::default();
+    let Some(f) = files.iter().find(|f| f.path.ends_with(NAMES_FILE)) else {
+        return idx;
+    };
+    idx.file = Some(f.path.clone());
+    let tok = |ci: usize| &f.tokens[f.code[ci]];
+    // Locate `mod names {`.
+    let mut start = None;
+    for ci in 0..f.code.len().saturating_sub(2) {
+        if tok(ci).is(TokKind::Ident, "mod")
+            && tok(ci + 1).is(TokKind::Ident, "names")
+            && tok(ci + 2).is(TokKind::Punct, "{")
+        {
+            start = Some(ci + 2);
+            break;
+        }
+    }
+    let Some(open) = start else {
+        return idx;
+    };
+    let mut depth = 0usize;
+    let mut ci = open;
+    while ci < f.code.len() {
+        let t = tok(ci);
+        if t.is(TokKind::Punct, "{") {
+            depth += 1;
+        } else if t.is(TokKind::Punct, "}") {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        } else if t.is(TokKind::Ident, "const") && ci + 1 < f.code.len() {
+            let name = tok(ci + 1).text.clone();
+            // Scan to the `=` then take the string value.
+            let mut j = ci + 2;
+            while j < f.code.len() && !tok(j).is(TokKind::Punct, "=") {
+                j += 1;
+            }
+            if j + 1 < f.code.len() && tok(j + 1).kind == TokKind::Str {
+                let value = tok(j + 1).text.clone();
+                idx.entries.push((value.clone(), tok(j + 1).line));
+                idx.consts.insert(name, value);
+            }
+        }
+        ci += 1;
+    }
+    idx
+}
+
+/// One record call site: where, and with which sorted label keys.
+struct LabelSite {
+    file: String,
+    line: u32,
+    col: u32,
+    keys: Vec<String>,
+    allowed: Option<String>,
+}
+
+/// Rule 4: every record call site of a metric uses the same label keys.
+///
+/// Only *literal* `&[("key", …), …]` label arrays participate; sites
+/// passing a label slice through a variable are skipped (the lint is
+/// token-level, not data-flow). Empty `&[]` label sets are exempt — the
+/// fleet-aggregate convention records the same name both per-device and
+/// unlabeled.
+fn label_set_consistency(files: &[SourceFile], names: &NamesIndex, findings: &mut Vec<Finding>) {
+    let mut first_site: BTreeMap<String, LabelSite> = BTreeMap::new();
+    for f in files {
+        if f.is_test_file {
+            continue;
+        }
+        let tok = |ci: usize| &f.tokens[f.code[ci]];
+        for ci in 0..f.code.len() {
+            let t = tok(ci);
+            if !(t.kind == TokKind::Ident
+                && RECORD_METHODS.contains(&t.text.as_str())
+                && ci > 0
+                && tok(ci - 1).is(TokKind::Punct, ".")
+                && ci + 1 < f.code.len()
+                && tok(ci + 1).is(TokKind::Punct, "("))
+            {
+                continue;
+            }
+            if f.in_test_region(t.line) {
+                continue;
+            }
+            let Some((args, _close)) = split_args(f, ci + 1) else {
+                continue;
+            };
+            if args.len() < 2 {
+                continue;
+            }
+            let Some(name) = resolve_name(f, &args[0], names) else {
+                continue;
+            };
+            let Some(keys) = literal_label_keys(f, &args[1]) else {
+                continue;
+            };
+            if keys.is_empty() {
+                continue;
+            }
+            let site = LabelSite {
+                file: f.path.clone(),
+                line: t.line,
+                col: t.col,
+                keys,
+                allowed: f.allow(LABEL_SETS, t.line).map(str::to_string),
+            };
+            match first_site.get(&name) {
+                None => {
+                    first_site.insert(name, site);
+                }
+                Some(prev) if prev.keys == site.keys => {}
+                Some(prev) => {
+                    let allowed = site.allowed.clone().or_else(|| prev.allowed.clone());
+                    findings.push(Finding {
+                        rule: LABEL_SETS,
+                        file: site.file,
+                        line: site.line,
+                        col: site.col,
+                        message: format!(
+                            "metric `{name}` recorded with label keys [{}] here but [{}] at \
+                             {}:{}",
+                            site.keys.join(", "),
+                            prev.keys.join(", "),
+                            prev.file,
+                            prev.line
+                        ),
+                        allowed,
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Split the argument tokens of a call whose `(` sits at code index
+/// `open`. Returns per-argument spans of code indices and the index of
+/// the matching `)`.
+fn split_args(f: &SourceFile, open: usize) -> Option<(Vec<Vec<usize>>, usize)> {
+    let tok = |ci: usize| &f.tokens[f.code[ci]];
+    let mut depth = 0usize;
+    let mut args: Vec<Vec<usize>> = vec![Vec::new()];
+    let mut ci = open;
+    while ci < f.code.len() {
+        let t = tok(ci);
+        let open_delim = t.kind == TokKind::Punct && matches!(t.text.as_str(), "(" | "[" | "{");
+        let close_delim = t.kind == TokKind::Punct && matches!(t.text.as_str(), ")" | "]" | "}");
+        if open_delim {
+            depth += 1;
+            if depth > 1 {
+                args.last_mut()?.push(ci);
+            }
+        } else if close_delim {
+            depth = depth.checked_sub(1)?;
+            if depth == 0 {
+                if args.last().is_some_and(Vec::is_empty) {
+                    args.pop();
+                }
+                return Some((args, ci));
+            }
+            args.last_mut()?.push(ci);
+        } else if depth == 1 && t.is(TokKind::Punct, ",") {
+            args.push(Vec::new());
+        } else {
+            args.last_mut()?.push(ci);
+        }
+        ci += 1;
+    }
+    None
+}
+
+/// Resolve a call's first argument to a metric name: either a string
+/// literal with the metric prefix, or a `names::CONST` path looked up
+/// in the extracted index.
+fn resolve_name(f: &SourceFile, arg: &[usize], names: &NamesIndex) -> Option<String> {
+    let toks: Vec<_> = arg.iter().map(|&ci| &f.tokens[f.code[ci]]).collect();
+    if let Some(t) = toks.iter().find(|t| t.kind == TokKind::Str) {
+        if t.text.starts_with(METRIC_PREFIX) {
+            return Some(t.text.clone());
+        }
+        return None;
+    }
+    for w in 0..toks.len() {
+        if toks[w].is(TokKind::Ident, "names")
+            && toks.get(w + 1).is_some_and(|t| t.is(TokKind::Punct, ":"))
+            && toks.get(w + 2).is_some_and(|t| t.is(TokKind::Punct, ":"))
+        {
+            if let Some(c) = toks.get(w + 3).filter(|t| t.kind == TokKind::Ident) {
+                return Some(
+                    names
+                        .consts
+                        .get(&c.text)
+                        .cloned()
+                        .unwrap_or_else(|| format!("names::{}", c.text)),
+                );
+            }
+        }
+    }
+    None
+}
+
+/// Extract sorted label keys from a *literal* `&[("key", …), …]` second
+/// argument; `None` when the labels are not a literal array.
+fn literal_label_keys(f: &SourceFile, arg: &[usize]) -> Option<Vec<String>> {
+    let toks: Vec<_> = arg.iter().map(|&ci| &f.tokens[f.code[ci]]).collect();
+    let mut i = 0;
+    while i < toks.len() && toks[i].is(TokKind::Punct, "&") {
+        i += 1;
+    }
+    if !toks.get(i)?.is(TokKind::Punct, "[") {
+        return None;
+    }
+    let mut keys = Vec::new();
+    let mut j = i + 1;
+    while j < toks.len() {
+        if toks[j].is(TokKind::Punct, "]") {
+            keys.sort();
+            return Some(keys);
+        }
+        if toks[j].is(TokKind::Punct, "(") {
+            if let Some(t) = toks.get(j + 1) {
+                if t.kind == TokKind::Str {
+                    keys.push(t.text.clone());
+                }
+            }
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Rule 3 (doc half): every declared metric name appears in
+/// `docs/OBSERVABILITY.md`.
+fn doc_sync(names: &NamesIndex, doc: &str, findings: &mut Vec<Finding>) {
+    let Some(file) = &names.file else {
+        return;
+    };
+    for (value, line) in &names.entries {
+        if !doc.contains(value.as_str()) {
+            findings.push(Finding {
+                rule: METRIC_NAMES,
+                file: file.clone(),
+                line: *line,
+                col: 1,
+                message: format!("metric `{value}` is not documented in docs/OBSERVABILITY.md"),
+                allowed: None,
+            });
+        }
+    }
+}

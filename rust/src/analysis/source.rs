@@ -1,0 +1,276 @@
+//! Per-file analysis model: the token stream plus the two pieces of
+//! structure every rule needs — which lines are test code, and which
+//! findings the author has explicitly waived with a reasoned pragma.
+//!
+//! Pragma grammar (see `docs/LINTS.md`):
+//!
+//! ```text
+//! // lint:allow(<rule-name>, "<non-empty reason>")
+//! ```
+//!
+//! A pragma waives findings of `<rule-name>` on its own line and the
+//! line immediately below it. The reason is mandatory: a waiver without
+//! a recorded justification is itself reported (rule name `pragma`).
+
+use super::lexer::{lex, TokKind, Token};
+use super::rules::RULE_NAMES;
+
+/// A parsed, well-formed `lint:allow` pragma.
+#[derive(Clone, Debug)]
+pub struct Pragma {
+    pub line: u32,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// A malformed pragma — reported as a finding so waivers cannot rot.
+#[derive(Clone, Debug)]
+pub struct BadPragma {
+    pub line: u32,
+    pub col: u32,
+    pub message: String,
+}
+
+/// One lexed source file with the derived structure rules run over.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Repo-relative path with `/` separators (`rust/src/obs/export.rs`).
+    pub path: String,
+    /// Full token stream, comments included.
+    pub tokens: Vec<Token>,
+    /// Indices into `tokens` of non-comment tokens (what rules scan).
+    pub code: Vec<usize>,
+    /// Inclusive line ranges covered by `#[test]` / `#[cfg(test)]` items.
+    pub test_regions: Vec<(u32, u32)>,
+    pub pragmas: Vec<Pragma>,
+    pub bad_pragmas: Vec<BadPragma>,
+    /// Whole-file test code (anything under `rust/tests/`).
+    pub is_test_file: bool,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, src: &str) -> SourceFile {
+        let path = path.replace('\\', "/");
+        let tokens = lex(src);
+        let code: Vec<usize> = tokens
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment))
+            .map(|(i, _)| i)
+            .collect();
+        let test_regions = find_test_regions(&tokens, &code);
+        let (pragmas, bad_pragmas) = parse_pragmas(&tokens);
+        let is_test_file = path.starts_with("rust/tests/") || path.contains("/tests/");
+        SourceFile { path, tokens, code, test_regions, pragmas, bad_pragmas, is_test_file }
+    }
+
+    /// Is `line` inside test-only code (a `#[cfg(test)] mod` body, a
+    /// `#[test]` fn, or a whole test file)?
+    pub fn in_test_region(&self, line: u32) -> bool {
+        self.is_test_file || self.test_regions.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    /// The waiver reason if a `lint:allow(rule, …)` pragma covers `line`
+    /// (same line or the line directly above).
+    pub fn allow(&self, rule: &str, line: u32) -> Option<&str> {
+        self.pragmas
+            .iter()
+            .find(|p| p.rule == rule && (p.line == line || p.line + 1 == line))
+            .map(|p| p.reason.as_str())
+    }
+}
+
+/// Locate `#[…test…]`-attributed items and return their line spans.
+///
+/// The walk is structural, not syntactic: an outer attribute group whose
+/// bracket contents mention the identifier `test` (`#[test]`,
+/// `#[cfg(test)]`, `#[tokio::test]`) marks the next item; the item's
+/// span runs to the `}` matching its first `{`, or to a top-level `;`
+/// for bodiless items.
+fn find_test_regions(tokens: &[Token], code: &[usize]) -> Vec<(u32, u32)> {
+    let tok = |ci: usize| -> &Token { &tokens[code[ci]] };
+    let mut regions = Vec::new();
+    let mut i = 0;
+    while i < code.len() {
+        if !tok(i).is(TokKind::Punct, "#") {
+            i += 1;
+            continue;
+        }
+        // `#![…]` inner attributes decorate the enclosing scope, not a
+        // following item — skip them.
+        let mut j = i + 1;
+        if j < code.len() && tok(j).is(TokKind::Punct, "!") {
+            i = j + 1;
+            continue;
+        }
+        if j >= code.len() || !tok(j).is(TokKind::Punct, "[") {
+            i += 1;
+            continue;
+        }
+        let start_line = tok(i).line;
+        // Scan the attribute group, noting whether it mentions `test`
+        // (`#[cfg(not(test))]` guards *non*-test code — not a region).
+        let mut depth = 0usize;
+        let mut mentions_test = false;
+        let mut negated = false;
+        while j < code.len() {
+            let t = tok(j);
+            if t.is(TokKind::Punct, "[") {
+                depth += 1;
+            } else if t.is(TokKind::Punct, "]") {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if t.kind == TokKind::Ident && t.text == "test" {
+                mentions_test = true;
+            } else if t.kind == TokKind::Ident && t.text == "not" {
+                negated = true;
+            }
+            j += 1;
+        }
+        if !mentions_test || negated {
+            i = j + 1;
+            continue;
+        }
+        // Skip any further attribute groups on the same item.
+        let mut k = j + 1;
+        while k + 1 < code.len()
+            && tok(k).is(TokKind::Punct, "#")
+            && tok(k + 1).is(TokKind::Punct, "[")
+        {
+            let mut depth = 0usize;
+            k += 1;
+            while k < code.len() {
+                let t = tok(k);
+                if t.is(TokKind::Punct, "[") {
+                    depth += 1;
+                } else if t.is(TokKind::Punct, "]") {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                k += 1;
+            }
+            k += 1;
+        }
+        // Find the item body: first `{`, brace-matched to its `}`; a
+        // bodiless item ends at the first top-level `;`.
+        let mut end_line = start_line;
+        let mut braces = 0usize;
+        let mut found_body = false;
+        while k < code.len() {
+            let t = tok(k);
+            if t.is(TokKind::Punct, "{") {
+                braces += 1;
+                found_body = true;
+            } else if t.is(TokKind::Punct, "}") {
+                braces = braces.saturating_sub(1);
+                if found_body && braces == 0 {
+                    end_line = t.line;
+                    break;
+                }
+            } else if t.is(TokKind::Punct, ";") && !found_body {
+                end_line = t.line;
+                break;
+            }
+            k += 1;
+        }
+        if k >= code.len() {
+            end_line = tokens.last().map(|t| t.line).unwrap_or(start_line);
+        }
+        regions.push((start_line, end_line));
+        i = k + 1;
+    }
+    regions
+}
+
+/// Extract `lint:allow` pragmas from line comments; anything that looks
+/// like a pragma but does not parse becomes a [`BadPragma`].
+fn parse_pragmas(tokens: &[Token]) -> (Vec<Pragma>, Vec<BadPragma>) {
+    let mut good = Vec::new();
+    let mut bad = Vec::new();
+    for t in tokens {
+        if t.kind != TokKind::LineComment {
+            continue;
+        }
+        let body = t.text.trim_start_matches('/').trim();
+        let Some(rest) = body.strip_prefix("lint:allow") else {
+            continue;
+        };
+        let mut fail = |message: String| {
+            bad.push(BadPragma { line: t.line, col: t.col, message });
+        };
+        let Some(inner) = rest.trim().strip_prefix('(').and_then(|r| r.strip_suffix(')')) else {
+            fail("malformed pragma: expected lint:allow(rule, \"reason\")".to_string());
+            continue;
+        };
+        let Some((rule, reason)) = inner.split_once(',') else {
+            fail(format!(
+                "pragma for `{}` is missing its reason: lint:allow(rule, \"reason\")",
+                inner.trim()
+            ));
+            continue;
+        };
+        let rule = rule.trim().to_string();
+        let reason = reason.trim().trim_matches('"').trim().to_string();
+        if !RULE_NAMES.contains(&rule.as_str()) {
+            fail(format!("pragma names unknown rule `{rule}`"));
+            continue;
+        }
+        if reason.is_empty() {
+            fail(format!("pragma for `{rule}` has an empty reason — justify the waiver"));
+            continue;
+        }
+        good.push(Pragma { line: t.line, rule, reason });
+    }
+    (good, bad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_mod_region_covers_its_body() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n  fn t() { x.unwrap(); }\n}\nfn after() {}\n";
+        let f = SourceFile::parse("rust/src/a.rs", src);
+        assert_eq!(f.test_regions, vec![(2, 5)]);
+        assert!(!f.in_test_region(1));
+        assert!(f.in_test_region(4));
+        assert!(!f.in_test_region(6));
+    }
+
+    #[test]
+    fn test_fn_with_stacked_attrs() {
+        let src = "#[test]\n#[ignore]\nfn t() {\n  boom();\n}\n";
+        let f = SourceFile::parse("rust/src/a.rs", src);
+        assert_eq!(f.test_regions, vec![(1, 5)]);
+    }
+
+    #[test]
+    fn non_test_attrs_do_not_open_regions() {
+        let src = "#[derive(Debug)]\nstruct S;\n#[inline]\nfn f() {}\n";
+        let f = SourceFile::parse("rust/src/a.rs", src);
+        assert!(f.test_regions.is_empty());
+    }
+
+    #[test]
+    fn pragma_roundtrip_and_misuse() {
+        let src = "// lint:allow(no-wall-clock, \"bench measures host time\")\nuse std::time::Instant;\n// lint:allow(no-panic-serve-path)\n// lint:allow(bogus-rule, \"x\")\n";
+        let f = SourceFile::parse("rust/src/a.rs", src);
+        assert_eq!(f.pragmas.len(), 1);
+        assert_eq!(f.allow("no-wall-clock", 2), Some("bench measures host time"));
+        assert_eq!(f.allow("no-wall-clock", 3), None);
+        assert_eq!(f.bad_pragmas.len(), 2);
+        assert!(f.bad_pragmas[0].message.contains("missing its reason"));
+        assert!(f.bad_pragmas[1].message.contains("unknown rule"));
+    }
+
+    #[test]
+    fn files_under_tests_are_whole_file_test_regions() {
+        let f = SourceFile::parse("rust/tests/lint.rs", "fn x() { y.unwrap(); }");
+        assert!(f.in_test_region(1));
+    }
+}

@@ -72,8 +72,10 @@ impl Batcher {
         entry.ids.push(id);
         entry.sessions.push(session);
         if entry.ids.len() >= self.max_batch {
-            let p = self.pending.remove(&spec).expect("just inserted");
-            return Some(Batch { spec, request_ids: p.ids, sessions: p.sessions });
+            return self
+                .pending
+                .remove(&spec)
+                .map(|p| Batch { spec, request_ids: p.ids, sessions: p.sessions });
         }
         None
     }
@@ -105,9 +107,9 @@ impl Batcher {
             .collect();
         due.sort_by_key(|(cold, oldest, s)| (*cold, *oldest, s.op, s.n, s.d_head, s.d_state));
         due.into_iter()
-            .map(|(_, _, spec)| {
-                let p = self.pending.remove(&spec).expect("present");
-                Batch { spec, request_ids: p.ids, sessions: p.sessions }
+            .filter_map(|(_, _, spec)| {
+                let p = self.pending.remove(&spec)?;
+                Some(Batch { spec, request_ids: p.ids, sessions: p.sessions })
             })
             .collect()
     }
@@ -118,9 +120,9 @@ impl Batcher {
         specs.sort_by_key(|s| (s.op, s.n, s.d_head, s.d_state));
         specs
             .into_iter()
-            .map(|spec| {
-                let p = self.pending.remove(&spec).expect("present");
-                Batch { spec, request_ids: p.ids, sessions: p.sessions }
+            .filter_map(|spec| {
+                let p = self.pending.remove(&spec)?;
+                Some(Batch { spec, request_ids: p.ids, sessions: p.sessions })
             })
             .collect()
     }

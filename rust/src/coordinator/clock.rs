@@ -1,0 +1,102 @@
+//! The serving stack's only wall-clock boundary.
+//!
+//! Every time-derived number in the coordinator (uptime, throughput,
+//! queue ages, batching windows) is read off the injectable [`Clock`]
+//! trait rather than `Instant::now()` directly, so tests and the
+//! `--deterministic` serve mode can drive a [`ManualClock`] and assert
+//! exact values; production uses the monotonic [`WallClock`].
+//!
+//! This module is the *single* place in the crate allowed to touch
+//! `std::time`'s clock sources: the `no-wall-clock` rule of
+//! `npuperf lint` (see `docs/LINTS.md`) flags `Instant`/`SystemTime`
+//! anywhere else under `rust/src/`, which is what keeps seeded replays
+//! bit-identical — nothing off this boundary can observe host time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Monotonic nanosecond time source for the serving stack.
+///
+/// The coordinator never calls `Instant::now()` itself — it reads this,
+/// so a test can substitute a [`ManualClock`] and make queue ages,
+/// uptime, and throughput deterministic.
+pub trait Clock: std::fmt::Debug + Send + Sync {
+    /// Nanoseconds since an arbitrary per-clock epoch (monotonic).
+    fn now_ns(&self) -> u64;
+}
+
+/// Production clock: monotonic nanoseconds since construction.
+#[derive(Clone, Debug)]
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        Self { epoch: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+}
+
+/// Test clock: advances only when told to. Cloning shares the underlying
+/// counter, so the copy handed to the coordinator and the one kept by the
+/// test tick together.
+#[derive(Clone, Debug, Default)]
+pub struct ManualClock {
+    ns: Arc<AtomicU64>,
+}
+
+impl ManualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn advance_ns(&self, delta: u64) {
+        self.ns.fetch_add(delta, Ordering::SeqCst);
+    }
+
+    pub fn set_ns(&self, ns: u64) {
+        self.ns.store(ns, Ordering::SeqCst);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_ns(&self) -> u64 {
+        self.ns.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_is_monotonic() {
+        let c = WallClock::new();
+        let a = c.now_ns();
+        let b = c.now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn manual_clock_clones_share_the_counter() {
+        let c = ManualClock::new();
+        let shared = c.clone();
+        c.advance_ns(250);
+        assert_eq!(shared.now_ns(), 250);
+        shared.set_ns(7);
+        assert_eq!(c.now_ns(), 7);
+    }
+}

@@ -12,9 +12,7 @@
 //! [`crate::obs::Histogram`]s — bounded memory per series, unlike the
 //! full-sample `Summary` vectors this module used to keep per operator.
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::config::OperatorKind;
 use crate::model::Ceilings;
@@ -25,67 +23,7 @@ use crate::ops::registry::classify;
 use super::device::Fleet;
 use super::router::BackendKind;
 
-/// Monotonic nanosecond time source for the serving stack.
-///
-/// The coordinator never calls `Instant::now()` itself — it reads this,
-/// so a test can substitute a [`ManualClock`] and make queue ages,
-/// uptime, and throughput deterministic.
-pub trait Clock: std::fmt::Debug + Send + Sync {
-    /// Nanoseconds since an arbitrary per-clock epoch (monotonic).
-    fn now_ns(&self) -> u64;
-}
-
-/// Production clock: monotonic nanoseconds since construction.
-#[derive(Clone, Debug)]
-pub struct WallClock {
-    epoch: Instant,
-}
-
-impl WallClock {
-    pub fn new() -> Self {
-        Self { epoch: Instant::now() }
-    }
-}
-
-impl Default for WallClock {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl Clock for WallClock {
-    fn now_ns(&self) -> u64 {
-        self.epoch.elapsed().as_nanos() as u64
-    }
-}
-
-/// Test clock: advances only when told to. Cloning shares the underlying
-/// counter, so the copy handed to the coordinator and the one kept by the
-/// test tick together.
-#[derive(Clone, Debug, Default)]
-pub struct ManualClock {
-    ns: Arc<AtomicU64>,
-}
-
-impl ManualClock {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    pub fn advance_ns(&self, delta: u64) {
-        self.ns.fetch_add(delta, Ordering::SeqCst);
-    }
-
-    pub fn set_ns(&self, ns: u64) {
-        self.ns.store(ns, Ordering::SeqCst);
-    }
-}
-
-impl Clock for ManualClock {
-    fn now_ns(&self) -> u64 {
-        self.ns.load(Ordering::SeqCst)
-    }
-}
+pub use super::clock::{Clock, ManualClock, WallClock};
 
 /// Canonical metric names (labels noted per metric). Exported so tests
 /// and the `npuperf obs` command reference the same strings.
@@ -601,14 +539,6 @@ mod tests {
         assert_eq!(m.uptime_ns(), 0, "uptime is measured from construction");
         clock.advance_ns(1_000);
         assert_eq!(m.uptime_ns(), 1_000);
-    }
-
-    #[test]
-    fn wall_clock_is_monotonic() {
-        let c = WallClock::new();
-        let a = c.now_ns();
-        let b = c.now_ns();
-        assert!(b >= a);
     }
 
     #[test]

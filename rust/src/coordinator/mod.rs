@@ -29,6 +29,7 @@
 
 pub mod batcher;
 pub mod chunking;
+pub mod clock;
 pub mod device;
 pub mod dispatch;
 pub mod metrics;
@@ -41,7 +42,8 @@ pub use batcher::{Batch, Batcher};
 pub use chunking::{optimal_chunk, ChunkPlan};
 pub use device::{device_label, Device, DeviceStat, Fleet};
 pub use dispatch::Dispatcher;
-pub use metrics::{Clock, ManualClock, Metrics, WallClock};
+pub use clock::{Clock, ManualClock, WallClock};
+pub use metrics::Metrics;
 pub use router::{BackendKind, Router};
 pub use server::{Coordinator, CoordinatorConfig, Pending, Request, Response};
 pub use state::{SessionKind, StateManager};

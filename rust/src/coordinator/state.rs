@@ -129,7 +129,9 @@ impl StateManager {
         let grown = meta.tokens + tokens;
         let footprint = footprint_for(meta.op, grown, meta.d_head, meta.d_state);
         let adm = self.mem.admit(id, footprint)?;
-        self.meta.get_mut(&id).expect("present above").tokens = grown;
+        if let Some(m) = self.meta.get_mut(&id) {
+            m.tokens = grown;
+        }
         Ok(adm)
     }
 

@@ -1,5 +1,6 @@
 //! npuperf — reproduction of "Context-Driven Performance Modeling for
 //! Causal Inference Operators on Neural Processing Units".
+pub mod analysis;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -161,9 +161,9 @@ impl SessionMemory {
             });
         }
 
-        let (was_resident, old_logical, old_pages) = {
-            let table = &self.tables[&id];
-            (table.resident, table.logical_bytes, table.resident_pages)
+        let (was_resident, old_logical, old_pages) = match self.tables.get(&id) {
+            Some(table) => (table.resident, table.logical_bytes, table.resident_pages),
+            None => return Err(AdmitError::UnknownSession(id)),
         };
         let have = if was_resident { old_pages } else { 0 };
 
@@ -190,8 +190,16 @@ impl SessionMemory {
                 });
             }
             while self.pool.free_pages() < want {
-                let victim = eviction::lru_victim(&self.tables, id)
-                    .expect("evictable capacity pre-checked above");
+                // The evictable-capacity pre-check above guarantees a victim
+                // exists, but the serve path must not panic on a broken
+                // invariant — refuse the admission instead.
+                let Some(victim) = eviction::lru_victim(&self.tables, id) else {
+                    self.stats.rejected += 1;
+                    return Err(AdmitError::PoolPinned {
+                        needed_pages: want,
+                        free_pages: self.pool.free_pages(),
+                    });
+                };
                 adm.spill_ns += self.spill_out(victim);
                 adm.evicted.push(victim);
             }
@@ -208,7 +216,10 @@ impl SessionMemory {
             self.stats.refill_ns += adm.refill_ns;
         }
 
-        let table = self.tables.get_mut(&id).expect("checked above");
+        // `contains_key` held at entry and nothing above removes `id`.
+        let Some(table) = self.tables.get_mut(&id) else {
+            return Err(AdmitError::UnknownSession(id));
+        };
         table.resident = true;
         table.resident_pages = need;
         table.logical_bytes = footprint_bytes;
@@ -221,7 +232,11 @@ impl SessionMemory {
 
     /// Spill `victim` out: free its pages, price the write-out.
     fn spill_out(&mut self, victim: u64) -> f64 {
-        let table = self.tables.get_mut(&victim).expect("victim exists");
+        // Victims come from the LRU oracle over this same map; an unknown
+        // id means nothing to spill, which prices as a zero-cost no-op.
+        let Some(table) = self.tables.get_mut(&victim) else {
+            return 0.0;
+        };
         let pages = table.resident_pages;
         table.resident = false;
         table.resident_pages = 0;

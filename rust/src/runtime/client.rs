@@ -7,6 +7,7 @@
 
 use std::collections::HashMap;
 use std::path::Path;
+// lint:allow(no-wall-clock, "PJRT execute() reports measured device wall time")
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
@@ -85,6 +86,7 @@ impl HloRuntime {
             .collect::<Result<_>>()?;
 
         let exe = self.cache.get(name).expect("loaded above");
+        // lint:allow(no-wall-clock, "PJRT execute() reports measured device wall time")
         let t0 = Instant::now();
         let result = exe
             .execute::<xla::Literal>(&literals)

@@ -143,6 +143,8 @@ pub fn selftest(hw: &NpuConfig, sim: &SimConfig, opts: &SelftestOptions) -> Self
 
     section("obs-conformance", obs_section(hw, sim, &opts.seeds));
 
+    section("lint-conformance", crate::analysis::selftest_section());
+
     // Golden fixtures capture *default-config* output; with hardware
     // overrides in play the snapshot legitimately differs, so skip
     // rather than fail (the differential sections above still ran on the
@@ -275,9 +277,10 @@ fn obs_section(hw: &NpuConfig, sim: &SimConfig, seeds: &[u64]) -> Result<String,
         let prom = coord.metrics_prometheus().map_err(|e| format!("seed {seed}: {e}"))?;
         crate::obs::lint_prometheus(&prom)
             .map_err(|e| format!("seed {seed}: exposition: {e}"))?;
+        let served_prefix = format!("{}{{", crate::coordinator::metrics::names::SERVED);
         let total: u64 = prom
             .lines()
-            .filter(|l| l.starts_with("npuperf_requests_served_total{"))
+            .filter(|l| l.starts_with(&served_prefix))
             .filter_map(|l| l.rsplit_once(' ').and_then(|(_, v)| v.parse::<u64>().ok()))
             .sum();
         if total != served as u64 {

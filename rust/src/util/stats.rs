@@ -2,6 +2,7 @@
 //! online summaries, percentiles, and a tiny wall-clock bench runner
 //! (criterion is unavailable offline).
 
+// lint:allow(no-wall-clock, "bench runner measures real host time by design")
 use std::time::Instant;
 
 /// Streaming summary of a sample set.
@@ -100,6 +101,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     }
     let mut s = Summary::new();
     for _ in 0..iters {
+        // lint:allow(no-wall-clock, "bench runner measures real host time by design")
         let t0 = Instant::now();
         f();
         s.push(t0.elapsed().as_nanos() as f64);

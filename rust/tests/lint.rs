@@ -1,0 +1,178 @@
+//! Integration tests for `npuperf lint`: every rule fires on its
+//! known-bad fixture and stays quiet on the known-good twin, pragmas
+//! round-trip, and the repo itself lints clean (self-hosting).
+//!
+//! The fixtures live in `rust/tests/lint_fixtures/` as data — they are
+//! lexed by the analyzer, never compiled — and are embedded here with
+//! `include_str!` so the tests run from any working directory.
+
+use std::path::Path;
+
+use npuperf::analysis::{lint_repo, rules, Analyzer, LintReport};
+
+/// Lint one fixture under a synthetic repo-relative path (paths drive
+/// rule scoping: serve-path modules, test files, the clock module...).
+fn lint_one(path: &str, src: &str) -> LintReport {
+    let mut a = Analyzer::new();
+    a.add_source(path, src);
+    a.run()
+}
+
+/// Assert the bad fixture trips `rule` and the good one is fully clean.
+fn check_pair(rule: &str, path: &str, bad: &str, good: &str) {
+    let bad_report = lint_one(path, bad);
+    assert!(
+        bad_report.active().any(|f| f.rule == rule),
+        "{rule}: bad fixture produced no active finding:\n{}",
+        bad_report.render_human()
+    );
+    let good_report = lint_one(path, good);
+    assert!(
+        good_report.is_clean() && good_report.findings.is_empty(),
+        "{rule}: good fixture is not clean:\n{}",
+        good_report.render_human()
+    );
+}
+
+#[test]
+fn no_wall_clock_fires_outside_the_clock_module() {
+    check_pair(
+        rules::NO_WALL_CLOCK,
+        "rust/src/report/fixture.rs",
+        include_str!("lint_fixtures/no_wall_clock_bad.rs"),
+        include_str!("lint_fixtures/no_wall_clock_good.rs"),
+    );
+}
+
+#[test]
+fn no_wall_clock_is_silent_in_the_blessed_clock_module() {
+    let bad = include_str!("lint_fixtures/no_wall_clock_bad.rs");
+    let report = lint_one("rust/src/coordinator/clock.rs", bad);
+    assert!(report.is_clean(), "{}", report.render_human());
+}
+
+#[test]
+fn no_panic_fires_on_the_serve_path() {
+    let bad = include_str!("lint_fixtures/no_panic_bad.rs");
+    check_pair(
+        rules::NO_PANIC,
+        "rust/src/coordinator/dispatch.rs",
+        bad,
+        include_str!("lint_fixtures/no_panic_good.rs"),
+    );
+    // All four idioms are caught: unwrap, expect, panic!, indexing.
+    let report = lint_one("rust/src/memory/fixture.rs", bad);
+    let hits = report.active().filter(|f| f.rule == rules::NO_PANIC).count();
+    assert_eq!(hits, 4, "{}", report.render_human());
+}
+
+#[test]
+fn no_panic_ignores_files_off_the_serve_path() {
+    let bad = include_str!("lint_fixtures/no_panic_bad.rs");
+    let report = lint_one("rust/src/model/fixture.rs", bad);
+    assert!(report.is_clean(), "{}", report.render_human());
+}
+
+#[test]
+fn metric_name_literals_must_come_from_names() {
+    check_pair(
+        rules::METRIC_NAMES,
+        "rust/src/obs/fixture.rs",
+        include_str!("lint_fixtures/metric_names_bad.rs"),
+        include_str!("lint_fixtures/metric_names_good.rs"),
+    );
+}
+
+#[test]
+fn label_sets_must_agree_per_metric() {
+    check_pair(
+        rules::LABEL_SETS,
+        "rust/src/coordinator/fixture.rs",
+        include_str!("lint_fixtures/label_set_bad.rs"),
+        include_str!("lint_fixtures/label_set_good.rs"),
+    );
+}
+
+#[test]
+fn golden_hygiene_applies_to_test_code() {
+    check_pair(
+        rules::GOLDEN_HYGIENE,
+        "rust/tests/fixture.rs",
+        include_str!("lint_fixtures/golden_hygiene_bad.rs"),
+        include_str!("lint_fixtures/golden_hygiene_good.rs"),
+    );
+}
+
+#[test]
+fn reasoned_pragma_waives_but_keeps_the_finding() {
+    let report = lint_one(
+        "rust/src/memory/fixture.rs",
+        include_str!("lint_fixtures/pragma_roundtrip.rs"),
+    );
+    assert!(report.is_clean(), "waived run must pass:\n{}", report.render_human());
+    let waived: Vec<_> =
+        report.findings.iter().filter(|f| f.allowed.is_some()).collect();
+    assert_eq!(waived.len(), 1, "{}", report.render_human());
+    assert_eq!(waived[0].rule, rules::NO_PANIC);
+    assert!(
+        waived[0].allowed.as_deref().unwrap().contains("reasoned waiver"),
+        "pragma reason must survive into the report"
+    );
+}
+
+#[test]
+fn pragma_without_reason_is_rejected() {
+    let report = lint_one(
+        "rust/src/memory/fixture.rs",
+        include_str!("lint_fixtures/pragma_missing_reason.rs"),
+    );
+    assert!(!report.is_clean());
+    assert!(
+        report.active().any(|f| f.rule == rules::PRAGMA),
+        "malformed pragma must itself be a finding:\n{}",
+        report.render_human()
+    );
+    assert!(
+        report.active().any(|f| f.rule == rules::NO_PANIC),
+        "a reason-less pragma must not waive:\n{}",
+        report.render_human()
+    );
+}
+
+#[test]
+fn repo_lints_clean_at_head() {
+    let report = lint_repo(Path::new(env!("CARGO_MANIFEST_DIR"))).unwrap();
+    assert!(
+        report.is_clean(),
+        "the repo must self-host its own lint:\n{}",
+        report.render_human()
+    );
+    assert!(report.files_scanned > 20, "scanned only {} files", report.files_scanned);
+    // The waivers placed at the two measurement sites are visible in the
+    // report (recorded, not hidden), each with a reason.
+    assert!(report.findings.iter().any(|f| f.allowed.is_some()));
+    assert!(report
+        .findings
+        .iter()
+        .all(|f| !matches!(f.allowed.as_deref(), Some(r) if r.trim().is_empty())));
+}
+
+#[test]
+fn lint_report_is_deterministic_and_jsonl_is_valid() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let a = lint_repo(root).unwrap();
+    let b = lint_repo(root).unwrap();
+    assert_eq!(a.render_human(), b.render_human());
+    assert_eq!(a.render_jsonl(), b.render_jsonl());
+    for line in a.render_jsonl().lines() {
+        npuperf::obs::validate_json(line).expect(line);
+    }
+}
+
+#[test]
+fn lint_repo_rejects_non_repo_roots() {
+    let dir = std::env::temp_dir().join(format!("npuperf-lint-noroot-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let err = lint_repo(&dir).unwrap_err();
+    assert!(err.to_string().contains("rust/src"), "{err}");
+}

@@ -1,0 +1,5 @@
+//! Known-bad: a test writing into the golden directory directly.
+#[test]
+fn writes_fixture_behind_the_harness_back() {
+    std::fs::write("rust/tests/golden/sneaky.txt", b"data").unwrap();
+}

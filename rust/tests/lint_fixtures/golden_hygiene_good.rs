@@ -1,0 +1,7 @@
+//! Known-good: fixture comparison through the blessed helper, which
+//! owns the directory path and the bless workflow.
+#[test]
+fn compares_fixture_through_testkit() {
+    let dir = crate::testkit::golden::default_dir();
+    crate::testkit::golden::compare_in(&dir, "report.txt", "body", false).unwrap();
+}

@@ -1,0 +1,8 @@
+//! Known-bad: one metric recorded with two different label-key sets.
+use crate::coordinator::metrics::names;
+use crate::obs::MetricsRegistry;
+
+pub fn feed(reg: &mut MetricsRegistry) {
+    reg.inc(names::SERVED, &[("operator", "causal")], 1);
+    reg.inc(names::SERVED, &[("device", "d0")], 1);
+}

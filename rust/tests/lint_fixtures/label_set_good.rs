@@ -1,0 +1,10 @@
+//! Known-good: the same sorted key set everywhere; the unlabeled
+//! fleet-aggregate series is exempt by convention.
+use crate::coordinator::metrics::names;
+use crate::obs::MetricsRegistry;
+
+pub fn feed(reg: &mut MetricsRegistry) {
+    reg.inc(names::SERVED, &[("device", "d0"), ("operator", "causal")], 1);
+    reg.inc(names::SERVED, &[("operator", "linear"), ("device", "d1")], 1);
+    reg.inc(names::SERVED, &[], 2);
+}

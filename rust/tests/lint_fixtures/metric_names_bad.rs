@@ -1,0 +1,6 @@
+//! Known-bad: a metric name spelled as a literal at the record site.
+use crate::obs::MetricsRegistry;
+
+pub fn feed(reg: &mut MetricsRegistry) {
+    reg.inc("npuperf_widgets_total", &[("operator", "causal")], 1);
+}

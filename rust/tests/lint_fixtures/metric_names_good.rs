@@ -1,0 +1,7 @@
+//! Known-good: the name comes from the single source of truth.
+use crate::coordinator::metrics::names;
+use crate::obs::MetricsRegistry;
+
+pub fn feed(reg: &mut MetricsRegistry) {
+    reg.inc(names::SERVED, &[("operator", "causal")], 1);
+}

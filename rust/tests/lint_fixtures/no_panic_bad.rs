@@ -1,0 +1,11 @@
+//! Known-bad: four panic idioms on the serve path.
+use std::collections::HashMap;
+
+pub fn reply(xs: &[u64], i: usize, m: &HashMap<usize, u64>) -> u64 {
+    let first = xs.first().unwrap();
+    let second = m.get(&i).expect("missing");
+    if *first > 3 {
+        panic!("boom");
+    }
+    first + second + xs[i]
+}

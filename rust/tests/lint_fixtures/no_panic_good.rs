@@ -1,0 +1,6 @@
+//! Known-good: fallible lookups stay fallible on the serve path.
+pub fn reply(xs: &[u64], i: usize) -> Option<u64> {
+    let first = xs.first()?;
+    let rest = xs.get(i)?;
+    Some(first + rest)
+}

@@ -1,0 +1,7 @@
+//! Known-bad: reads host time directly instead of the injected clock.
+use std::time::Instant;
+
+pub fn stamp() -> u64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_nanos() as u64
+}

@@ -1,0 +1,6 @@
+//! Known-good: time comes in through the injected Clock trait.
+use crate::coordinator::Clock;
+
+pub fn stamp(clock: &dyn Clock) -> u64 {
+    clock.now_ns()
+}

@@ -1,0 +1,6 @@
+//! Known-bad: a waiver without a justification — the pragma itself is
+//! reported and the underlying finding stays active.
+pub fn lookup(xs: &[u64]) -> u64 {
+    // lint:allow(no-panic-serve-path)
+    *xs.first().unwrap()
+}

@@ -1,0 +1,6 @@
+//! Waived finding: the pragma names the rule and carries its reason, so
+//! the finding is recorded but does not fail the run.
+pub fn lookup(xs: &[u64]) -> u64 {
+    // lint:allow(no-panic-serve-path, "fixture: demonstrates a reasoned waiver")
+    *xs.first().unwrap()
+}
