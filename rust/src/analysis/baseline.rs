@@ -1,0 +1,229 @@
+//! The lint ratchet: a checked-in baseline (`lint-baseline.json`) of
+//! active finding counts per (rule, file). A lint run compared against
+//! the baseline fails on any *growth* — a new finding, or more findings
+//! of a rule in a file than recorded — while *shrinkage* passes and is
+//! reported so the baseline can be tightened (`--update-baseline`).
+//! Waived findings never enter the baseline; they are already
+//! individually justified in source.
+//!
+//! The file format is deliberately tiny (`{"entries":[{"rule":…,
+//! "file":…,"count":…}]}`), rendered deterministically and parsed with
+//! a purpose-built scanner — no serde, same as every other artifact in
+//! this crate.
+
+use std::collections::BTreeMap;
+
+use crate::obs::export::escape_json;
+
+use super::report::LintReport;
+
+/// Active finding counts keyed by (rule, file).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Baseline {
+    pub entries: BTreeMap<(String, String), usize>,
+}
+
+/// Outcome of a ratchet comparison.
+#[derive(Clone, Debug, Default)]
+pub struct RatchetOutcome {
+    /// (rule, file, baseline count, current count) where current grew.
+    pub regressions: Vec<(String, String, usize, usize)>,
+    /// Same shape where current shrank — the baseline can be tightened.
+    pub improvements: Vec<(String, String, usize, usize)>,
+}
+
+impl RatchetOutcome {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for (rule, file, was, now) in &self.regressions {
+            out += &format!(
+                "ratchet: [{rule}] {file}: {was} -> {now} active finding(s) — \
+                 new findings fail the ratchet\n"
+            );
+        }
+        for (rule, file, was, now) in &self.improvements {
+            out += &format!(
+                "ratchet: [{rule}] {file}: {was} -> {now} — shrank; tighten the \
+                 baseline with --update-baseline\n"
+            );
+        }
+        out
+    }
+}
+
+impl Baseline {
+    /// Count the *active* (non-waived) findings of a report.
+    pub fn from_report(report: &LintReport) -> Baseline {
+        let mut entries: BTreeMap<(String, String), usize> = BTreeMap::new();
+        for f in report.active() {
+            *entries.entry((f.rule.to_string(), f.file.clone())).or_insert(0) += 1;
+        }
+        Baseline { entries }
+    }
+
+    /// Deterministic JSON rendering (entries sorted by rule then file).
+    pub fn render(&self) -> String {
+        let mut out = String::from("{\"entries\":[");
+        for (i, ((rule, file), count)) in self.entries.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out += &format!(
+                "\n  {{\"rule\":\"{}\",\"file\":\"{}\",\"count\":{count}}}",
+                escape_json(rule),
+                escape_json(file)
+            );
+        }
+        if !self.entries.is_empty() {
+            out.push('\n');
+        }
+        out += "]}\n";
+        out
+    }
+
+    /// Parse the baseline format. Strict about what it accepts: every
+    /// entry object must carry string `rule`/`file` and numeric `count`.
+    pub fn parse(text: &str) -> Result<Baseline, String> {
+        crate::obs::validate_json(text.trim()).map_err(|e| format!("baseline is not valid JSON: {e}"))?;
+        let mut entries: BTreeMap<(String, String), usize> = BTreeMap::new();
+        let body = text
+            .split_once("\"entries\"")
+            .ok_or_else(|| "baseline has no \"entries\" key".to_string())?
+            .1;
+        let mut rest = body;
+        while let Some(obj_start) = rest.find('{') {
+            let obj_end = rest[obj_start..]
+                .find('}')
+                .map(|e| obj_start + e)
+                .ok_or_else(|| "unterminated entry object".to_string())?;
+            let obj = &rest[obj_start..=obj_end];
+            let rule = extract_string(obj, "rule")?;
+            let file = extract_string(obj, "file")?;
+            let count = extract_number(obj, "count")?;
+            if entries.insert((rule.clone(), file.clone()), count).is_some() {
+                return Err(format!("duplicate baseline entry for [{rule}] {file}"));
+            }
+            rest = &rest[obj_end + 1..];
+        }
+        Ok(Baseline { entries })
+    }
+
+    /// Ratchet comparison: `self` is the recorded baseline, `current`
+    /// the fresh run.
+    pub fn check(&self, current: &Baseline) -> RatchetOutcome {
+        let mut out = RatchetOutcome::default();
+        let keys: std::collections::BTreeSet<&(String, String)> =
+            self.entries.keys().chain(current.entries.keys()).collect();
+        for key in keys {
+            let was = self.entries.get(key).copied().unwrap_or(0);
+            let now = current.entries.get(key).copied().unwrap_or(0);
+            let row = (key.0.clone(), key.1.clone(), was, now);
+            if now > was {
+                out.regressions.push(row);
+            } else if now < was {
+                out.improvements.push(row);
+            }
+        }
+        out
+    }
+}
+
+/// `"key":"value"` — unescapes the two escapes our renderer produces.
+fn extract_string(obj: &str, key: &str) -> Result<String, String> {
+    let pat = format!("\"{key}\":\"");
+    let start = obj.find(&pat).ok_or_else(|| format!("entry missing \"{key}\""))? + pat.len();
+    let mut out = String::new();
+    let mut chars = obj[start..].chars();
+    loop {
+        match chars.next() {
+            Some('\\') => match chars.next() {
+                Some(c) => out.push(c),
+                None => return Err(format!("unterminated string for \"{key}\"")),
+            },
+            Some('"') => return Ok(out),
+            Some(c) => out.push(c),
+            None => return Err(format!("unterminated string for \"{key}\"")),
+        }
+    }
+}
+
+fn extract_number(obj: &str, key: &str) -> Result<usize, String> {
+    let pat = format!("\"{key}\":");
+    let start = obj.find(&pat).ok_or_else(|| format!("entry missing \"{key}\""))? + pat.len();
+    let digits: String =
+        obj[start..].chars().skip_while(|c| c.is_whitespace()).take_while(char::is_ascii_digit).collect();
+    digits.parse().map_err(|_| format!("\"{key}\" is not a number"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::report::Finding;
+
+    fn finding(rule: &'static str, file: &str, allowed: Option<&str>) -> Finding {
+        Finding {
+            rule,
+            file: file.to_string(),
+            line: 1,
+            col: 1,
+            message: "m".to_string(),
+            allowed: allowed.map(str::to_string),
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_waived_exclusion() {
+        let rep = LintReport {
+            findings: vec![
+                finding("no-wall-clock", "a.rs", None),
+                finding("no-wall-clock", "a.rs", None),
+                finding("unit-consistency", "b.rs", None),
+                finding("panic-reachability", "c.rs", Some("waived")),
+            ],
+            files_scanned: 3,
+        };
+        let b = Baseline::from_report(&rep);
+        assert_eq!(b.entries.len(), 2, "waived findings stay out of the baseline");
+        let parsed = Baseline::parse(&b.render()).expect("roundtrip");
+        assert_eq!(parsed, b);
+        let empty = Baseline::parse(&Baseline::default().render()).expect("empty roundtrip");
+        assert!(empty.entries.is_empty());
+    }
+
+    #[test]
+    fn growth_fails_shrinkage_passes() {
+        let mut old = Baseline::default();
+        old.entries.insert(("no-wall-clock".into(), "a.rs".into()), 2);
+        old.entries.insert(("unit-consistency".into(), "b.rs".into()), 1);
+        // Shrink a.rs, clear b.rs entirely: passes, two improvements.
+        let mut smaller = Baseline::default();
+        smaller.entries.insert(("no-wall-clock".into(), "a.rs".into()), 1);
+        let out = old.check(&smaller);
+        assert!(out.passed());
+        assert_eq!(out.improvements.len(), 2);
+        assert!(out.render_human().contains("--update-baseline"));
+        // Grow a.rs and add a new file: fails with two regressions.
+        let mut bigger = old.clone();
+        bigger.entries.insert(("no-wall-clock".into(), "a.rs".into()), 3);
+        bigger.entries.insert(("nondet-iteration".into(), "c.rs".into()), 1);
+        let out = old.check(&bigger);
+        assert!(!out.passed());
+        assert_eq!(out.regressions.len(), 2);
+        assert!(out.render_human().contains("[nondet-iteration] c.rs: 0 -> 1"));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Baseline::parse("not json").is_err());
+        assert!(Baseline::parse("{\"nope\":[]}").is_err());
+        assert!(Baseline::parse(
+            "{\"entries\":[{\"rule\":\"r\",\"file\":\"f\",\"count\":1},\
+             {\"rule\":\"r\",\"file\":\"f\",\"count\":2}]}"
+        )
+        .is_err(), "duplicate keys rejected");
+    }
+}

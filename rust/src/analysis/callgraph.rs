@@ -1,0 +1,324 @@
+//! Intra-crate call graph over the [`super::parser`] ASTs.
+//!
+//! Resolution is name-based and deliberately over-approximate: a call
+//! edge is added for every plausible callee, so reachability never
+//! misses a real chain at the cost of occasional fan-out through
+//! same-named methods (`.place(…)` links to every `place` method with a
+//! `self` receiver). The rules that consume the graph treat it
+//! accordingly — panic-reachability findings on over-approximate chains
+//! are waivable with a reason, and resolution that fails entirely just
+//! drops the edge.
+//!
+//! Only non-test functions from `rust/src/` participate: test fns,
+//! benches, and examples have their own entry points and are not part
+//! of the serve path.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::parser::{file_module, FileAst, FnDef};
+
+/// The graph: `fns[id] = (file_path, fn)` with `edges[id]` the sorted,
+/// deduplicated callee ids.
+pub struct CallGraph<'a> {
+    pub fns: Vec<(&'a str, &'a FnDef)>,
+    pub edges: Vec<Vec<usize>>,
+}
+
+impl<'a> CallGraph<'a> {
+    /// Build from per-file ASTs (callers must pass them in a
+    /// deterministic order — the fn ids follow it).
+    pub fn build(asts: &'a [FileAst]) -> Self {
+        let mut fns: Vec<(&str, &FnDef)> = Vec::new();
+        let mut free: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        let mut methods: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        for ast in asts {
+            if file_module(&ast.path).is_none() {
+                continue;
+            }
+            for fd in &ast.fns {
+                if fd.is_test {
+                    continue;
+                }
+                let fid = fns.len();
+                fns.push((ast.path.as_str(), fd));
+                if fd.impl_type.is_some() {
+                    methods.entry(fd.name.as_str()).or_default().push(fid);
+                } else {
+                    free.entry(fd.name.as_str()).or_default().push(fid);
+                }
+            }
+        }
+        let mut g = CallGraph { fns, edges: Vec::new() };
+        g.edges = (0..g.fns.len()).map(|fid| g.resolve(fid, &free, &methods)).collect();
+        g
+    }
+
+    fn resolve(
+        &self,
+        fid: usize,
+        free: &BTreeMap<&str, Vec<usize>>,
+        methods: &BTreeMap<&str, Vec<usize>>,
+    ) -> Vec<usize> {
+        let (path, fd) = self.fns[fid];
+        let mut out: Vec<usize> = Vec::new();
+        for call in &fd.calls {
+            let segs: Vec<&str> = call
+                .path
+                .iter()
+                .map(String::as_str)
+                .filter(|s| !matches!(*s, "crate" | "self" | "super"))
+                .collect();
+            let Some((&name, quals)) = segs.split_last() else {
+                continue;
+            };
+            if quals.is_empty() {
+                // Bare call: a free fn in the same file wins; otherwise
+                // only a crate-unique name resolves.
+                let cands = free.get(name).map(Vec::as_slice).unwrap_or(&[]);
+                let same_file: Vec<usize> =
+                    cands.iter().copied().filter(|&i| self.fns[i].0 == path).collect();
+                if !same_file.is_empty() {
+                    out.extend(same_file);
+                } else if cands.len() == 1 {
+                    out.extend_from_slice(cands);
+                }
+                continue;
+            }
+            let mut qlast = quals[quals.len() - 1];
+            if qlast == "Self" {
+                if let Some(ty) = &fd.impl_type {
+                    qlast = ty;
+                }
+            }
+            if qlast.chars().next().is_some_and(|c| c.is_uppercase()) {
+                // `Type::name(…)` — methods and associated fns of Type.
+                out.extend(
+                    methods
+                        .get(name)
+                        .map(Vec::as_slice)
+                        .unwrap_or(&[])
+                        .iter()
+                        .copied()
+                        .filter(|&i| self.fns[i].1.impl_type.as_deref() == Some(qlast)),
+                );
+                continue;
+            }
+            // `module::name(…)` — free fns whose module path contains
+            // every qualifier segment (subset match survives re-exports).
+            out.extend(
+                free.get(name).map(Vec::as_slice).unwrap_or(&[]).iter().copied().filter(|&i| {
+                    quals.iter().all(|q| self.fns[i].1.module.iter().any(|m| m == q))
+                }),
+            );
+        }
+        for m in &fd.methods {
+            // `.name(…)` — only methods with a `self` receiver, so an
+            // associated fn sharing a name with a std method (e.g.
+            // `SourceFile::parse` vs `.parse::<u64>()`) gains no edge.
+            let cands: Vec<usize> = methods
+                .get(m.name.as_str())
+                .map(Vec::as_slice)
+                .unwrap_or(&[])
+                .iter()
+                .copied()
+                .filter(|&i| self.fns[i].1.has_self)
+                .collect();
+            if m.recv_root.as_deref() == Some("self") {
+                if let Some(ty) = &fd.impl_type {
+                    let own: Vec<usize> = cands
+                        .iter()
+                        .copied()
+                        .filter(|&i| self.fns[i].1.impl_type.as_deref() == Some(ty.as_str()))
+                        .collect();
+                    if !own.is_empty() {
+                        out.extend(own);
+                        continue;
+                    }
+                }
+            }
+            out.extend(cands);
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// BFS from `starts`; returns `reached fn id → parent id` (entry
+    /// points map to `None`). Deterministic: starts and neighbor lists
+    /// are visited in sorted order, so parent chains are stable.
+    pub fn reachable_from(&self, starts: &[usize]) -> BTreeMap<usize, Option<usize>> {
+        let mut parent: BTreeMap<usize, Option<usize>> = BTreeMap::new();
+        let mut queue: Vec<usize> = Vec::new();
+        let mut sorted_starts: Vec<usize> = starts.to_vec();
+        sorted_starts.sort_unstable();
+        for s in sorted_starts {
+            if let std::collections::btree_map::Entry::Vacant(e) = parent.entry(s) {
+                e.insert(None);
+                queue.push(s);
+            }
+        }
+        let mut qi = 0;
+        while qi < queue.len() {
+            let cur = queue[qi];
+            qi += 1;
+            for &nb in &self.edges[cur] {
+                if let std::collections::btree_map::Entry::Vacant(e) = parent.entry(nb) {
+                    e.insert(Some(cur));
+                    queue.push(nb);
+                }
+            }
+        }
+        parent
+    }
+
+    /// Transitive callers of `targets` (targets included).
+    pub fn callers_closure(&self, targets: &BTreeSet<usize>) -> BTreeSet<usize> {
+        let mut rev: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (fid, nbs) in self.edges.iter().enumerate() {
+            for &nb in nbs {
+                rev.entry(nb).or_default().push(fid);
+            }
+        }
+        let mut seen = targets.clone();
+        let mut queue: Vec<usize> = targets.iter().copied().collect();
+        let mut qi = 0;
+        while qi < queue.len() {
+            let cur = queue[qi];
+            qi += 1;
+            for &nb in rev.get(&cur).map(Vec::as_slice).unwrap_or(&[]) {
+                if seen.insert(nb) {
+                    queue.push(nb);
+                }
+            }
+        }
+        seen
+    }
+
+    /// Shortest discovered call chain to `fid`, root first, as
+    /// fully-qualified names.
+    pub fn chain(&self, parent: &BTreeMap<usize, Option<usize>>, fid: usize) -> Vec<String> {
+        let mut names = Vec::new();
+        let mut cur = Some(fid);
+        while let Some(c) = cur {
+            names.push(self.fns[c].1.qualified());
+            cur = parent.get(&c).copied().flatten();
+        }
+        names.reverse();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::parser::parse_file;
+    use crate::analysis::source::SourceFile;
+
+    fn asts(srcs: &[(&str, &str)]) -> Vec<FileAst> {
+        srcs.iter().map(|(p, s)| parse_file(&SourceFile::parse(p, s))).collect()
+    }
+
+    fn find(g: &CallGraph, name: &str) -> usize {
+        g.fns.iter().position(|(_, fd)| fd.name == name).expect(name)
+    }
+
+    #[test]
+    fn transitive_chain_crosses_files_and_impls() {
+        let a = asts(&[
+            (
+                "rust/src/coordinator/dispatch.rs",
+                "pub struct D;\nimpl D { pub fn dispatch(&self) { crate::ops::lower_all(); } }\n",
+            ),
+            (
+                "rust/src/ops/mod.rs",
+                "pub fn lower_all() { helper(); }\nfn helper() { boom(); }\n",
+            ),
+            ("rust/src/ops/causal.rs", "pub fn boom() { panic!(\"x\"); }\n"),
+        ]);
+        let g = CallGraph::build(&a);
+        let entry = find(&g, "dispatch");
+        let target = find(&g, "boom");
+        let parent = g.reachable_from(&[entry]);
+        assert!(parent.contains_key(&target));
+        let chain = g.chain(&parent, target);
+        assert_eq!(
+            chain,
+            vec![
+                "coordinator::dispatch::D::dispatch".to_string(),
+                "ops::lower_all".to_string(),
+                "ops::helper".to_string(),
+                "ops::causal::boom".to_string(),
+            ],
+            "every frame of the chain is named"
+        );
+    }
+
+    #[test]
+    fn dot_calls_do_not_resolve_to_associated_fns() {
+        let a = asts(&[
+            (
+                "rust/src/a.rs",
+                "pub struct S;\nimpl S { pub fn parse(path: &str) { bad(); } }\nfn bad() {}\n",
+            ),
+            ("rust/src/b.rs", "pub fn go(s: &str) { s.parse(); }\n"),
+        ]);
+        let g = CallGraph::build(&a);
+        let go = find(&g, "go");
+        assert!(
+            g.edges[go].is_empty(),
+            "`.parse()` must not link to the associated fn S::parse"
+        );
+        let qual = asts(&[
+            (
+                "rust/src/a.rs",
+                "pub struct S;\nimpl S { pub fn parse(path: &str) { } }\n",
+            ),
+            ("rust/src/b.rs", "pub fn go() { S::parse(\"x\"); }\n"),
+        ]);
+        let g2 = CallGraph::build(&qual);
+        let go2 = find(&g2, "go");
+        assert_eq!(g2.edges[go2].len(), 1, "qualified Type::assoc does resolve");
+    }
+
+    #[test]
+    fn self_calls_prefer_the_enclosing_impl() {
+        let a = asts(&[(
+            "rust/src/a.rs",
+            "pub struct A; pub struct B;\n\
+             impl A { pub fn go(&self) { self.step(); } fn step(&self) {} }\n\
+             impl B { fn step(&self) {} }\n",
+        )]);
+        let g = CallGraph::build(&a);
+        let go = find(&g, "go");
+        assert_eq!(g.edges[go].len(), 1);
+        let callee = g.edges[go][0];
+        assert_eq!(g.fns[callee].1.impl_type.as_deref(), Some("A"));
+    }
+
+    #[test]
+    fn test_fns_and_non_src_files_are_excluded() {
+        let a = asts(&[
+            (
+                "rust/src/a.rs",
+                "#[cfg(test)]\nmod tests { fn t() {} }\npub fn live() {}\n",
+            ),
+            ("rust/benches/b.rs", "fn bench_body() { live(); }\n"),
+        ]);
+        let g = CallGraph::build(&a);
+        assert_eq!(g.fns.len(), 1);
+        assert_eq!(g.fns[0].1.name, "live");
+    }
+
+    #[test]
+    fn callers_closure_walks_reverse_edges() {
+        let a = asts(&[(
+            "rust/src/a.rs",
+            "pub fn top() { mid(); }\nfn mid() { emit(); }\nfn emit() {}\nfn unrelated() {}\n",
+        )]);
+        let g = CallGraph::build(&a);
+        let emit = find(&g, "emit");
+        let closure = g.callers_closure(&BTreeSet::from([emit]));
+        assert_eq!(closure.len(), 3);
+        assert!(!closure.contains(&find(&g, "unrelated")));
+    }
+}

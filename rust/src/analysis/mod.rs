@@ -5,10 +5,12 @@
 //! The repo's conformance story (seeded replays, golden expositions,
 //! differential checks — see `docs/TESTING.md`) is *dynamic*: it proves
 //! the code that ran was deterministic. This subsystem is the static
-//! half: a dependency-free token-level scanner ([`lexer`]) and rule
-//! engine ([`rules`]) that keep the properties from regressing before
-//! anything runs. Five rules, catalogued with rationale and the
-//! `lint:allow` pragma grammar in `docs/LINTS.md`:
+//! half: a dependency-free token-level scanner ([`lexer`]), a
+//! lightweight recursive-descent parser ([`parser`]) feeding a
+//! call-graph builder ([`callgraph`]), and a rule engine ([`rules`])
+//! that keep the properties from regressing before anything runs.
+//! Eight rules, catalogued with rationale and the `lint:allow` pragma
+//! grammar in `docs/LINTS.md`:
 //!
 //! 1. `no-wall-clock` — host time is read only in `coordinator::clock`;
 //! 2. `no-panic-serve-path` — no `unwrap`/`expect`/`panic!`/indexing in
@@ -17,15 +19,28 @@
 //!    `metrics::names` and every one is documented;
 //! 4. `label-set-consistency` — one metric, one label-key set;
 //! 5. `golden-fixture-hygiene` — golden-dir I/O goes through
-//!    `testkit::golden`.
+//!    `testkit::golden`;
+//! 6. `panic-reachability` — no panic site transitively reachable from
+//!    the serve entry points, with the full call chain reported;
+//! 7. `unit-consistency` — no arithmetic mixing `_ns`/`_bytes`/`_gbps`/…
+//!    quantities (multiply/divide derives units and is exempt);
+//! 8. `nondet-iteration` — no hash-container iteration on paths that
+//!    feed exporters, reports, or golden fixtures.
 //!
-//! The pass self-hosts: `npuperf lint` exits 0 on this repo at HEAD,
-//! and `selftest`'s `lint-conformance` section proves each rule still
-//! fires on embedded known-bad fixtures.
+//! Findings render human-readable, as JSONL, and as SARIF 2.1.0
+//! ([`sarif`]); the checked-in `lint-baseline.json` ratchet
+//! ([`baseline`]) only ever shrinks. The pass self-hosts: `npuperf
+//! lint` exits 0 on this repo at HEAD, and `selftest`'s
+//! `lint-conformance` / `semantic-lint-conformance` sections prove each
+//! rule still fires on embedded known-bad fixtures.
 
+pub mod baseline;
+pub mod callgraph;
 pub mod lexer;
+pub mod parser;
 pub mod report;
 pub mod rules;
+pub mod sarif;
 pub mod source;
 
 use std::path::{Path, PathBuf};
@@ -72,9 +87,10 @@ impl Analyzer {
     }
 }
 
-/// Lint the repository rooted at `root`: every `.rs` under `rust/src`
-/// and `rust/tests` (golden fixtures and lint fixtures excluded), with
-/// `docs/OBSERVABILITY.md` wired in for the doc-sync check.
+/// Lint the repository rooted at `root`: every `.rs` under `rust/src`,
+/// `rust/tests`, `rust/benches`, and `examples` (golden fixtures and
+/// lint fixtures excluded), with `docs/OBSERVABILITY.md` wired in for
+/// the doc-sync check.
 pub fn lint_repo(root: &Path) -> anyhow::Result<LintReport> {
     let src_root = root.join("rust").join("src");
     if !src_root.is_dir() {
@@ -85,9 +101,12 @@ pub fn lint_repo(root: &Path) -> anyhow::Result<LintReport> {
     }
     let mut paths = Vec::new();
     collect_rs(&src_root, &mut paths)?;
-    let tests_root = root.join("rust").join("tests");
-    if tests_root.is_dir() {
-        collect_rs(&tests_root, &mut paths)?;
+    for extra in
+        [root.join("rust").join("tests"), root.join("rust").join("benches"), root.join("examples")]
+    {
+        if extra.is_dir() {
+            collect_rs(&extra, &mut paths)?;
+        }
     }
     paths.sort();
     let mut analyzer = Analyzer::new();
@@ -244,6 +263,70 @@ pub fn selftest_section() -> Result<String, String> {
     ))
 }
 
+/// The `semantic-lint-conformance` selftest section: the parser-backed
+/// rules against compile-time-embedded fixtures. Proves the transitive
+/// panic chain names every frame, the unit rule respects derived-unit
+/// contexts, and the nondet rule distinguishes hash from BTree
+/// iteration.
+pub fn semantic_selftest_section() -> Result<String, String> {
+    let entry = include_str!("../../tests/lint_fixtures/panic_reach_entry.rs");
+    let run_pair = |callee_src: &str| -> LintReport {
+        let mut a = Analyzer::new();
+        a.add_source("rust/src/coordinator/dispatch.rs", entry);
+        a.add_source("rust/src/ops/fixture.rs", callee_src);
+        a.run()
+    };
+    let bad = run_pair(include_str!("../../tests/lint_fixtures/panic_reach_bad.rs"));
+    let Some(finding) = bad.active().find(|f| f.rule == rules::PANIC_REACH) else {
+        return Err("panic-reachability did not fire on the planted transitive panic".to_string());
+    };
+    for frame in [
+        "coordinator::dispatch::Dispatcher::dispatch",
+        "ops::fixture::lower_stage",
+        "ops::fixture::plan_tail",
+    ] {
+        if !finding.message.contains(frame) {
+            return Err(format!(
+                "panic-reachability chain is missing frame `{frame}`: {}",
+                finding.message
+            ));
+        }
+    }
+    let good = run_pair(include_str!("../../tests/lint_fixtures/panic_reach_good.rs"));
+    if good.findings.iter().any(|f| f.rule == rules::PANIC_REACH) {
+        return Err("panic-reachability fired on the panic-free twin".to_string());
+    }
+
+    let pairs: [(&str, &str, &str, &str); 2] = [
+        (
+            rules::UNIT_CONSISTENCY,
+            "rust/src/npu/fixture.rs",
+            include_str!("../../tests/lint_fixtures/unit_mix_bad.rs"),
+            include_str!("../../tests/lint_fixtures/unit_mix_good.rs"),
+        ),
+        (
+            rules::NONDET_ITER,
+            "rust/src/obs/fixture.rs",
+            include_str!("../../tests/lint_fixtures/nondet_iter_bad.rs"),
+            include_str!("../../tests/lint_fixtures/nondet_iter_good.rs"),
+        ),
+    ];
+    for (rule, path, bad_src, good_src) in pairs {
+        let bad = lint_fixture(path, bad_src);
+        if !bad.active().any(|f| f.rule == rule) {
+            return Err(format!("rule {rule} did not fire on its known-bad fixture"));
+        }
+        let good = lint_fixture(path, good_src);
+        if good.findings.iter().any(|f| f.rule == rule) {
+            return Err(format!("rule {rule} fired on its known-good fixture"));
+        }
+    }
+
+    Ok("3 semantic rules fire on bad fixtures and stay quiet on good ones; \
+        panic chain names every frame"
+        .to_string())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -251,6 +334,11 @@ mod tests {
     #[test]
     fn selftest_section_passes() {
         selftest_section().expect("lint conformance");
+    }
+
+    #[test]
+    fn semantic_selftest_section_passes() {
+        semantic_selftest_section().expect("semantic lint conformance");
     }
 
     #[test]

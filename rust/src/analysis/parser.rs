@@ -1,0 +1,1121 @@
+//! Recursive-descent parser over the [`super::lexer`] token stream,
+//! producing the lightweight AST the semantic rules need: the item tree
+//! (modules, impls, fns, struct fields) and, per function body, a flat
+//! event list — calls with their `::` paths, method calls with their
+//! receiver chain, panic sites, binary expressions with operand terms,
+//! `for` loops, and `let` bindings.
+//!
+//! This is deliberately *not* full Rust. Everything the rules do with
+//! the AST degrades safely when the parser under-approximates: an
+//! unparsed expression yields no events, which means no finding — never
+//! a spurious one. The hard lexical cases (nested generics vs shift,
+//! raw strings, char-vs-lifetime, `cfg(not(test))`) are already settled
+//! by the lexer and region tracker; this layer only adds structure.
+
+use super::lexer::{TokKind, Token};
+use super::source::SourceFile;
+
+/// A function (free fn or impl/trait method) with its body events.
+#[derive(Debug, Default)]
+pub struct FnDef {
+    /// Module path within the crate (`["coordinator", "batcher"]`),
+    /// derived from the file path plus any nested `mod` items.
+    pub module: Vec<String>,
+    /// `Some("Fleet")` for methods defined in `impl Fleet { … }` (or a
+    /// trait impl / trait definition body).
+    pub impl_type: Option<String>,
+    pub name: String,
+    /// Line of the `fn` keyword — unique per file, used as an id.
+    pub line: u32,
+    /// Inside a `#[test]` / `#[cfg(test)]` region or a test file.
+    pub is_test: bool,
+    /// Whether the first parameter is (a reference to) `self`.
+    pub has_self: bool,
+    /// Parameter `name` → identifiers appearing in its type.
+    pub params: Vec<(String, Vec<String>)>,
+    pub calls: Vec<CallSite>,
+    pub methods: Vec<MethodSite>,
+    pub panics: Vec<PanicSite>,
+    pub binaries: Vec<BinarySite>,
+    pub fors: Vec<ForSite>,
+    pub lets: Vec<LetSite>,
+    /// `BTreeMap` / `BTreeSet` identifier sightings (sortedness escapes
+    /// for the nondet-iteration rule).
+    pub btree_mentions: Vec<u32>,
+}
+
+impl FnDef {
+    /// Fully qualified display name: `coordinator::device::Fleet::place`.
+    pub fn qualified(&self) -> String {
+        let mut segs: Vec<&str> = self.module.iter().map(String::as_str).collect();
+        if let Some(ty) = &self.impl_type {
+            segs.push(ty);
+        }
+        segs.push(&self.name);
+        segs.join("::")
+    }
+}
+
+/// `foo(…)` / `a::b::foo(…)` — path call.
+#[derive(Debug)]
+pub struct CallSite {
+    pub path: Vec<String>,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// `recv.foo(…)` — method call. `recv_root` is the leftmost term of the
+/// receiver chain (`self` in `self.pending.values()`), `recv_last` the
+/// segment directly before the method (`pending`).
+#[derive(Debug)]
+pub struct MethodSite {
+    pub name: String,
+    pub recv_root: Option<String>,
+    pub recv_last: Option<String>,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// A construct that can panic: `.unwrap()`, `.expect(…)`, `panic!`, or
+/// variable indexing (same conservative pattern as the token rule).
+#[derive(Debug)]
+pub struct PanicSite {
+    /// Human-readable site description (`".unwrap()"`, "indexing `[i]`").
+    pub what: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// `lhs OP rhs` for the unit-bearing operators (`+ - < > <= >= == != +=
+/// -=`). Terms are the last identifier of each operand's path/call, or
+/// `None` when the operand is not a simple term; `*_mul` marks operands
+/// adjacent to `*` or `/` (derived-unit context the unit rule skips).
+#[derive(Debug)]
+pub struct BinarySite {
+    pub op: &'static str,
+    pub lhs: Option<String>,
+    pub lhs_mul: bool,
+    pub rhs: Option<String>,
+    pub rhs_mul: bool,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// `for pat in expr { … }`: the iterated expression's leading term and
+/// every identifier appearing in it.
+#[derive(Debug)]
+pub struct ForSite {
+    pub root: String,
+    pub idents: Vec<String>,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// `let [mut] name [: Ty] = init;` — identifiers of the type annotation
+/// and the head of the initializer (enough to spot hash containers).
+#[derive(Debug)]
+pub struct LetSite {
+    pub name: String,
+    pub ty: Vec<String>,
+    pub init: Vec<String>,
+}
+
+/// One parsed file: its functions plus struct fields (for field-type
+/// lookups keyed by struct name).
+#[derive(Debug, Default)]
+pub struct FileAst {
+    pub path: String,
+    pub fns: Vec<FnDef>,
+    /// `(struct_name, field_name, type_identifiers)`.
+    pub fields: Vec<(String, String, Vec<String>)>,
+}
+
+/// Module path a file contributes to the crate tree, or `None` for
+/// files outside `rust/src/` (tests, benches, examples — excluded from
+/// the call graph).
+pub fn file_module(path: &str) -> Option<Vec<String>> {
+    let rel = path.strip_prefix("rust/src/")?;
+    let mut parts: Vec<String> = rel.split('/').map(str::to_string).collect();
+    let last = parts.pop()?;
+    match last.as_str() {
+        "mod.rs" => {}
+        "lib.rs" => parts.clear(),
+        "main.rs" => parts.push("main".to_string()),
+        _ => parts.push(last.trim_end_matches(".rs").to_string()),
+    }
+    Some(parts)
+}
+
+/// Parse one source file into its [`FileAst`].
+pub fn parse_file(f: &SourceFile) -> FileAst {
+    let toks: Vec<&Token> = f.code.iter().map(|&ci| &f.tokens[ci]).collect();
+    let mut ast = FileAst { path: f.path.clone(), ..Default::default() };
+    let module = file_module(&f.path).unwrap_or_default();
+    let mut p = Parser { f, toks, ast: &mut ast };
+    let end = p.toks.len();
+    p.items(0, end, &module, None);
+    ast
+}
+
+/// Keywords that cannot start a call path or indexed expression.
+const KEYWORDS: [&str; 24] = [
+    "as", "box", "break", "const", "continue", "dyn", "else", "enum", "fn", "for", "if", "impl",
+    "in", "let", "loop", "match", "mod", "move", "mut", "ref", "return", "static", "while",
+    "where",
+];
+
+/// Primitive numeric types (cast targets the term extractor sees
+/// through: in `bytes as f64 / gbps` the term is `bytes`, not `f64`).
+const PRIMITIVES: [&str; 14] = [
+    "f32", "f64", "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128",
+    "isize",
+];
+
+struct Parser<'a> {
+    f: &'a SourceFile,
+    toks: Vec<&'a Token>,
+    ast: &'a mut FileAst,
+}
+
+impl<'a> Parser<'a> {
+    fn is(&self, i: usize, kind: TokKind, text: &str) -> bool {
+        self.toks.get(i).is_some_and(|t| t.kind == kind && t.text == text)
+    }
+
+    fn ident(&self, i: usize) -> Option<&str> {
+        self.toks.get(i).filter(|t| t.kind == TokKind::Ident).map(|t| t.text.as_str())
+    }
+
+    /// Two tokens printed with nothing between them (`<` `=` forming
+    /// `<=`, but not the `<` and `=` of `a < b = …` on one line).
+    fn adjacent(&self, i: usize, j: usize) -> bool {
+        match (self.toks.get(i), self.toks.get(j)) {
+            (Some(a), Some(b)) => {
+                a.line == b.line && b.col == a.col + (a.text.chars().count().max(1) as u32)
+            }
+            _ => false,
+        }
+    }
+
+    /// `i` at an opening delimiter; index just past its match.
+    fn skip_balanced(&self, mut i: usize, open: &str, close: &str) -> usize {
+        let mut depth = 0usize;
+        while i < self.toks.len() {
+            let t = self.toks[i];
+            if t.is(TokKind::Punct, open) {
+                depth += 1;
+            } else if t.is(TokKind::Punct, close) {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+            i += 1;
+        }
+        self.toks.len()
+    }
+
+    /// `i` at `<`; skip a generics group, stepping over `->` arrows so
+    /// `Fn(A) -> B` bounds do not unbalance the angles.
+    fn skip_angles(&self, mut i: usize) -> usize {
+        let mut depth = 0usize;
+        while i < self.toks.len() {
+            let t = self.toks[i];
+            if t.is(TokKind::Punct, "-") && self.is(i + 1, TokKind::Punct, ">")
+                && self.adjacent(i, i + 1)
+            {
+                i += 2;
+                continue;
+            }
+            if t.is(TokKind::Punct, "<") {
+                depth += 1;
+            } else if t.is(TokKind::Punct, ">") {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+            i += 1;
+        }
+        self.toks.len()
+    }
+
+    fn items(&mut self, mut i: usize, end: usize, module: &[String], impl_type: Option<&str>) {
+        while i < end {
+            let t = self.toks[i];
+            if t.is(TokKind::Punct, "#") {
+                let mut j = i + 1;
+                if self.is(j, TokKind::Punct, "!") {
+                    j += 1;
+                }
+                i = if self.is(j, TokKind::Punct, "[") {
+                    self.skip_balanced(j, "[", "]")
+                } else {
+                    i + 1
+                };
+                continue;
+            }
+            if t.kind != TokKind::Ident {
+                i += 1;
+                continue;
+            }
+            match t.text.as_str() {
+                "pub" if self.is(i + 1, TokKind::Punct, "(") => {
+                    i = self.skip_balanced(i + 1, "(", ")");
+                }
+                "pub" | "unsafe" | "async" | "extern" | "default" => i += 1,
+                "const" if self.ident(i + 1) == Some("fn") => i += 1,
+                "mod" if self.ident(i + 1).is_some() => {
+                    let name = self.toks[i + 1].text.clone();
+                    if self.is(i + 2, TokKind::Punct, "{") {
+                        let close = self.skip_balanced(i + 2, "{", "}");
+                        let mut nested = module.to_vec();
+                        nested.push(name);
+                        self.items(i + 3, close.saturating_sub(1), &nested, None);
+                        i = close;
+                    } else {
+                        i += 3;
+                    }
+                }
+                "fn" if self.ident(i + 1).is_some() => {
+                    i = self.function(i, end, module, impl_type);
+                }
+                "impl" | "trait" => {
+                    i = self.impl_or_trait(i, end, module);
+                }
+                "struct" if self.ident(i + 1).is_some() => {
+                    let sname = self.toks[i + 1].text.clone();
+                    let mut j = i + 2;
+                    if self.is(j, TokKind::Punct, "<") {
+                        j = self.skip_angles(j);
+                    }
+                    if self.is(j, TokKind::Punct, "{") {
+                        let close = self.skip_balanced(j, "{", "}");
+                        self.struct_fields(&sname, j + 1, close.saturating_sub(1));
+                        i = close;
+                    } else if self.is(j, TokKind::Punct, "(") {
+                        i = self.skip_balanced(j, "(", ")");
+                    } else {
+                        i = j;
+                    }
+                }
+                "enum" | "union" => {
+                    while i < end && !self.is(i, TokKind::Punct, "{") {
+                        i += 1;
+                    }
+                    if i < end {
+                        i = self.skip_balanced(i, "{", "}");
+                    }
+                }
+                "use" | "type" | "static" | "const" => {
+                    let mut depth = 0i32;
+                    while i < end {
+                        let tt = self.toks[i];
+                        if tt.kind == TokKind::Punct {
+                            match tt.text.as_str() {
+                                "(" | "[" | "{" => depth += 1,
+                                ")" | "]" | "}" => depth -= 1,
+                                ";" if depth == 0 => {
+                                    i += 1;
+                                    break;
+                                }
+                                _ => {}
+                            }
+                        }
+                        i += 1;
+                    }
+                }
+                "macro_rules" => {
+                    while i < end && !self.is(i, TokKind::Punct, "{") {
+                        i += 1;
+                    }
+                    if i < end {
+                        i = self.skip_balanced(i, "{", "}");
+                    }
+                }
+                _ => i += 1,
+            }
+        }
+    }
+
+    /// `i` at `impl` or `trait`; parse the header, recurse on the body.
+    fn impl_or_trait(&mut self, i: usize, end: usize, module: &[String]) -> usize {
+        let is_trait = self.toks[i].text == "trait";
+        let mut j = i + 1;
+        let trait_name =
+            if is_trait { self.ident(j).map(str::to_string) } else { None };
+        if is_trait && trait_name.is_some() {
+            j += 1;
+        }
+        if self.is(j, TokKind::Punct, "<") {
+            j = self.skip_angles(j);
+        }
+        // Walk the header: for `impl Trait for Type`, the type name is
+        // the last path identifier after `for`.
+        let mut tyname: Option<String> = None;
+        while j < end {
+            let t = self.toks[j];
+            if t.is(TokKind::Punct, "{") {
+                break;
+            }
+            if t.kind == TokKind::Ident && t.text == "where" {
+                while j < end && !self.is(j, TokKind::Punct, "{") {
+                    j += 1;
+                }
+                break;
+            }
+            if t.kind == TokKind::Ident && t.text == "for" {
+                tyname = None;
+                j += 1;
+                continue;
+            }
+            if t.kind == TokKind::Ident {
+                tyname = Some(t.text.clone());
+                j += 1;
+                if self.is(j, TokKind::Punct, "<") {
+                    j = self.skip_angles(j);
+                }
+                continue;
+            }
+            j += 1;
+        }
+        let tyname = if is_trait { trait_name } else { tyname };
+        if self.is(j, TokKind::Punct, "{") {
+            let close = self.skip_balanced(j, "{", "}");
+            let ty = tyname.clone();
+            self.items(j + 1, close.saturating_sub(1), module, ty.as_deref());
+            close
+        } else {
+            j + 1
+        }
+    }
+
+    fn struct_fields(&mut self, sname: &str, mut i: usize, end: usize) {
+        let mut depth = 0i32;
+        while i < end {
+            let t = self.toks[i];
+            if t.kind == TokKind::Punct && matches!(t.text.as_str(), "(" | "[" | "{") {
+                depth += 1;
+            } else if t.kind == TokKind::Punct && matches!(t.text.as_str(), ")" | "]" | "}") {
+                depth -= 1;
+            } else if depth == 0
+                && t.kind == TokKind::Ident
+                && t.text != "pub"
+                && t.text != "crate"
+                && self.is(i + 1, TokKind::Punct, ":")
+                && !self.is(i + 2, TokKind::Punct, ":")
+            {
+                let mut j = i + 2;
+                let mut d2 = 0i32;
+                let mut ty = Vec::new();
+                while j < end {
+                    let tj = self.toks[j];
+                    if tj.kind == TokKind::Punct {
+                        match tj.text.as_str() {
+                            "(" | "[" | "{" | "<" => d2 += 1,
+                            ")" | "]" | "}" | ">" => d2 -= 1,
+                            "," if d2 <= 0 => break,
+                            _ => {}
+                        }
+                    } else if tj.kind == TokKind::Ident {
+                        ty.push(tj.text.clone());
+                    }
+                    j += 1;
+                }
+                self.ast.fields.push((sname.to_string(), t.text.clone(), ty));
+                i = j;
+                continue;
+            }
+            i += 1;
+        }
+    }
+
+    /// `i` at `fn`; parse signature + body, return the index past it.
+    fn function(
+        &mut self,
+        i: usize,
+        end: usize,
+        module: &[String],
+        impl_type: Option<&str>,
+    ) -> usize {
+        let name = self.toks[i + 1].text.clone();
+        let line = self.toks[i].line;
+        let mut fd = FnDef {
+            module: module.to_vec(),
+            impl_type: impl_type.map(str::to_string),
+            name,
+            line,
+            is_test: self.f.is_test_file || self.f.in_test_region(line),
+            ..Default::default()
+        };
+        let mut j = i + 2;
+        if self.is(j, TokKind::Punct, "<") {
+            j = self.skip_angles(j);
+        }
+        if !self.is(j, TokKind::Punct, "(") {
+            return j;
+        }
+        let close_paren = self.skip_balanced(j, "(", ")");
+        self.params(&mut fd, j + 1, close_paren.saturating_sub(1));
+        j = close_paren;
+        // Return type / where clause: scan to the body `{` or a `;`.
+        let mut depth = 0i32;
+        while j < end {
+            let t = self.toks[j];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "(" | "[" | "<" => depth += 1,
+                    ")" | "]" => depth -= 1,
+                    "-" if self.is(j + 1, TokKind::Punct, ">") && self.adjacent(j, j + 1) => {
+                        j += 2;
+                        continue;
+                    }
+                    ">" => depth -= 1,
+                    "{" if depth <= 0 => break,
+                    ";" if depth <= 0 => {
+                        self.ast.fns.push(fd);
+                        return j + 1;
+                    }
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        if j >= end {
+            self.ast.fns.push(fd);
+            return j;
+        }
+        let body_close = self.skip_balanced(j, "{", "}");
+        self.body(&mut fd, j + 1, body_close.saturating_sub(1));
+        self.ast.fns.push(fd);
+        body_close
+    }
+
+    fn params(&mut self, fd: &mut FnDef, mut i: usize, end: usize) {
+        let mut depth = 0i32;
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new()];
+        while i < end {
+            let t = self.toks[i];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "(" | "[" | "{" | "<" => depth += 1,
+                    ")" | "]" | "}" | ">" => depth -= 1,
+                    "," if depth <= 0 => {
+                        groups.push(Vec::new());
+                        i += 1;
+                        continue;
+                    }
+                    _ => {}
+                }
+            }
+            if let Some(g) = groups.last_mut() {
+                g.push(i);
+            }
+            i += 1;
+        }
+        if let Some(first) = groups.first() {
+            fd.has_self = first.iter().any(|&k| self.ident(k) == Some("self"));
+        }
+        for g in &groups {
+            // find the top-level `:` (not `::`); name = last ident before
+            let mut d = 0i32;
+            let mut colon = None;
+            for (w, &k) in g.iter().enumerate() {
+                let t = self.toks[k];
+                if t.kind == TokKind::Punct {
+                    match t.text.as_str() {
+                        "(" | "[" | "{" | "<" => d += 1,
+                        ")" | "]" | "}" | ">" => d -= 1,
+                        ":" if d == 0 => {
+                            if g.get(w + 1).is_some_and(|&k2| self.is(k2, TokKind::Punct, ":")) {
+                                continue;
+                            }
+                            colon = Some(w);
+                            break;
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            let Some(cw) = colon else { continue };
+            let name = g[..cw]
+                .iter()
+                .rev()
+                .filter_map(|&k| self.ident(k))
+                .find(|s| *s != "mut" && *s != "ref");
+            let ty: Vec<String> = g[cw + 1..]
+                .iter()
+                .filter_map(|&k| self.ident(k))
+                .map(str::to_string)
+                .collect();
+            if let Some(name) = name {
+                fd.params.push((name.to_string(), ty));
+            }
+        }
+    }
+
+    fn body(&mut self, fd: &mut FnDef, lo: usize, hi: usize) {
+        let mut i = lo;
+        while i < hi {
+            let t = self.toks[i];
+            if t.kind == TokKind::Ident {
+                if t.text == "BTreeMap" || t.text == "BTreeSet" {
+                    fd.btree_mentions.push(t.line);
+                }
+                let prev_dot = i > lo && self.is(i - 1, TokKind::Punct, ".");
+                let next_paren = i + 1 < hi && self.is(i + 1, TokKind::Punct, "(");
+                if (t.text == "unwrap" || t.text == "expect") && prev_dot && next_paren {
+                    fd.panics.push(PanicSite {
+                        what: format!(".{}()", t.text),
+                        line: t.line,
+                        col: t.col,
+                    });
+                    i += 1;
+                    continue;
+                }
+                if t.text == "panic" && i + 1 < hi && self.is(i + 1, TokKind::Punct, "!") {
+                    fd.panics.push(PanicSite {
+                        what: "panic!".to_string(),
+                        line: t.line,
+                        col: t.col,
+                    });
+                    i += 1;
+                    continue;
+                }
+                if next_paren && !KEYWORDS.contains(&t.text.as_str()) {
+                    if prev_dot {
+                        let (root, last) = self.receiver(lo, i - 1);
+                        fd.methods.push(MethodSite {
+                            name: t.text.clone(),
+                            recv_root: root,
+                            recv_last: last,
+                            line: t.line,
+                            col: t.col,
+                        });
+                    } else {
+                        let mut path = vec![t.text.clone()];
+                        let mut j = i;
+                        while j >= lo + 3
+                            && self.is(j - 1, TokKind::Punct, ":")
+                            && self.is(j - 2, TokKind::Punct, ":")
+                            && self.ident(j - 3).is_some()
+                        {
+                            path.insert(0, self.toks[j - 3].text.clone());
+                            j -= 3;
+                        }
+                        fd.calls.push(CallSite { path, line: t.line, col: t.col });
+                    }
+                    i += 1;
+                    continue;
+                }
+                if t.text == "for" && !self.is(i + 1, TokKind::Punct, "<") {
+                    self.for_loop(fd, i + 1, hi);
+                    i += 1;
+                    continue;
+                }
+                if t.text == "let" {
+                    self.let_binding(fd, i + 1, hi);
+                    i += 1;
+                    continue;
+                }
+                i += 1;
+                continue;
+            }
+            if t.is(TokKind::Punct, "[") && i > lo {
+                let prev = self.toks[i - 1];
+                let indexes_expr = (prev.kind == TokKind::Ident
+                    && !KEYWORDS.contains(&prev.text.as_str()))
+                    || prev.is(TokKind::Punct, ")")
+                    || prev.is(TokKind::Punct, "]");
+                if indexes_expr {
+                    let mut j = i + 1;
+                    if j < hi
+                        && (self.is(j, TokKind::Punct, "&") || self.is(j, TokKind::Punct, "*"))
+                    {
+                        j += 1;
+                    }
+                    if j + 1 < hi
+                        && self.ident(j).is_some_and(|s| !KEYWORDS.contains(&s))
+                        && self.is(j + 1, TokKind::Punct, "]")
+                    {
+                        fd.panics.push(PanicSite {
+                            what: format!("indexing `[{}]`", self.toks[j].text),
+                            line: t.line,
+                            col: t.col,
+                        });
+                    }
+                }
+                i += 1;
+                continue;
+            }
+            if t.kind == TokKind::Punct && matches!(t.text.as_str(), "+" | "-" | "<" | ">" | "=" | "!")
+            {
+                let (op, width) = self.merge_op(i, hi);
+                if let Some(op) = op {
+                    let (lhs, lhs_mul) = self.backward_term(lo, i.wrapping_sub(1), i > lo);
+                    let (rhs, rhs_mul) = self.forward_term(i + width, hi);
+                    fd.binaries.push(BinarySite {
+                        op,
+                        lhs,
+                        lhs_mul,
+                        rhs,
+                        rhs_mul,
+                        line: t.line,
+                        col: t.col,
+                    });
+                }
+                i += width;
+                continue;
+            }
+            i += 1;
+        }
+    }
+
+    /// Merge adjacent punct pairs into compound operators. Returns the
+    /// unit-bearing operator (if any) and the token width consumed.
+    fn merge_op(&self, i: usize, hi: usize) -> (Option<&'static str>, usize) {
+        let c1 = self.toks[i].text.as_str();
+        let c2 = if i + 1 < hi
+            && self.toks[i + 1].kind == TokKind::Punct
+            && self.adjacent(i, i + 1)
+        {
+            Some(self.toks[i + 1].text.as_str())
+        } else {
+            None
+        };
+        if let Some(c2) = c2 {
+            let two = [
+                ("-", ">", None),
+                ("=", ">", None),
+                ("<", "<", None),
+                (">", ">", None),
+                ("<", "=", Some("<=")),
+                (">", "=", Some(">=")),
+                ("=", "=", Some("==")),
+                ("!", "=", Some("!=")),
+                ("+", "=", Some("+=")),
+                ("-", "=", Some("-=")),
+            ];
+            for (a, b, op) in two {
+                if c1 == a && c2 == b {
+                    return (op, 2);
+                }
+            }
+        }
+        match c1 {
+            "+" => (Some("+"), 1),
+            "-" => (Some("-"), 1),
+            "<" => (Some("<"), 1),
+            ">" => (Some(">"), 1),
+            _ => (None, 1),
+        }
+    }
+
+    /// Receiver chain of a method call; `dot` is the index of the `.`
+    /// before the method name.
+    fn receiver(&self, lo: usize, dot: usize) -> (Option<String>, Option<String>) {
+        let mut chain: Vec<String> = Vec::new();
+        let mut j = dot as isize - 1;
+        let lo = lo as isize;
+        while j >= lo {
+            let t = self.toks[j as usize];
+            if t.is(TokKind::Punct, "?") {
+                j -= 1;
+                continue;
+            }
+            if t.is(TokKind::Punct, ")") || t.is(TokKind::Punct, "]") {
+                let (open, close) = if t.text == ")" { ("(", ")") } else { ("[", "]") };
+                let opener = self.match_back(lo as usize, j as usize, close, open);
+                j = opener as isize - 1;
+                if j >= lo && self.toks[j as usize].kind == TokKind::Ident {
+                    chain.push(self.toks[j as usize].text.clone());
+                    j -= 1;
+                } else {
+                    break;
+                }
+            } else if t.kind == TokKind::Ident {
+                chain.push(t.text.clone());
+                j -= 1;
+            } else {
+                break;
+            }
+            if j >= lo && self.toks[j as usize].is(TokKind::Punct, ".") {
+                j -= 1;
+                continue;
+            }
+            if j - 1 >= lo
+                && self.toks[j as usize].is(TokKind::Punct, ":")
+                && self.toks[(j - 1) as usize].is(TokKind::Punct, ":")
+            {
+                j -= 2;
+                continue;
+            }
+            break;
+        }
+        let root = chain.last().cloned();
+        let last = chain.first().cloned();
+        (root, last)
+    }
+
+    /// Backward-match `close` at index `j` to its `open`.
+    fn match_back(&self, lo: usize, j: usize, close: &str, open: &str) -> usize {
+        let mut depth = 0i32;
+        let mut k = j as isize;
+        while k >= lo as isize {
+            let t = self.toks[k as usize];
+            if t.is(TokKind::Punct, close) {
+                depth += 1;
+            } else if t.is(TokKind::Punct, open) {
+                depth -= 1;
+                if depth == 0 {
+                    return k as usize;
+                }
+            }
+            k -= 1;
+        }
+        lo
+    }
+
+    /// The operand term ending at index `j` (exclusive-end form handled
+    /// by the caller passing `valid`). Returns `(last_ident, mul_adj)`.
+    fn backward_term(&self, lo: usize, j: usize, valid: bool) -> (Option<String>, bool) {
+        if !valid || j < lo || j >= self.toks.len() {
+            return (None, false);
+        }
+        let t = self.toks[j];
+        let (mut term, mut start) = if t.is(TokKind::Punct, ")") {
+            let opener = self.match_back(lo, j, ")", "(");
+            if opener == lo && !self.toks[lo].is(TokKind::Punct, "(") {
+                return (None, false);
+            }
+            if opener == 0 {
+                return (None, false);
+            }
+            let k = opener - 1;
+            if k < lo {
+                return (None, false);
+            }
+            let tk = self.toks[k];
+            if tk.kind == TokKind::Ident && !KEYWORDS.contains(&tk.text.as_str()) {
+                (tk.text.clone(), k)
+            } else {
+                return (None, false);
+            }
+        } else if t.kind == TokKind::Ident && !KEYWORDS.contains(&t.text.as_str()) {
+            if t.kind == TokKind::Ident && PRIMITIVES.contains(&t.text.as_str()) {
+                // `x as f64`: see through the cast to the real term.
+                if j >= lo + 2 && self.ident(j - 1) == Some("as") {
+                    return self.backward_term(lo, j - 2, true);
+                }
+            }
+            (t.text.clone(), j)
+        } else {
+            return (None, false);
+        };
+        // Absorb the leading `.`/`::` path so mul-adjacency looks at the
+        // token before the whole chain.
+        loop {
+            if start >= lo + 2
+                && self.toks[start - 1].is(TokKind::Punct, ".")
+                && self.toks[start - 2].kind == TokKind::Ident
+            {
+                start -= 2;
+            } else if start >= lo + 3
+                && self.toks[start - 1].is(TokKind::Punct, ":")
+                && self.toks[start - 2].is(TokKind::Punct, ":")
+                && self.toks[start - 3].kind == TokKind::Ident
+            {
+                start -= 3;
+            } else {
+                break;
+            }
+        }
+        if term.is_empty() {
+            term.clear();
+        }
+        let mul = start > lo
+            && self.toks[start - 1].kind == TokKind::Punct
+            && matches!(self.toks[start - 1].text.as_str(), "*" | "/");
+        (Some(term), mul)
+    }
+
+    /// The operand term starting at index `i`.
+    fn forward_term(&self, mut i: usize, hi: usize) -> (Option<String>, bool) {
+        while i < hi
+            && self.toks[i].kind == TokKind::Punct
+            && matches!(self.toks[i].text.as_str(), "&" | "*" | "-")
+        {
+            i += 1;
+        }
+        if i >= hi {
+            return (None, false);
+        }
+        let t = self.toks[i];
+        if t.is(TokKind::Punct, "(") {
+            return (None, false); // parenthesized group, not a simple term
+        }
+        if t.kind != TokKind::Ident || KEYWORDS.contains(&t.text.as_str()) {
+            return (None, false);
+        }
+        let mut term = t.text.clone();
+        let mut j = i + 1;
+        loop {
+            if j < hi && self.toks[j].is(TokKind::Punct, ".") && self.ident(j + 1).is_some() {
+                term = self.toks[j + 1].text.clone();
+                j += 2;
+            } else if j + 2 < hi
+                && self.toks[j].is(TokKind::Punct, ":")
+                && self.toks[j + 1].is(TokKind::Punct, ":")
+                && self.ident(j + 2).is_some()
+            {
+                term = self.toks[j + 2].text.clone();
+                j += 3;
+            } else if j < hi && self.toks[j].is(TokKind::Punct, "(") {
+                j = self.skip_balanced(j, "(", ")").min(hi);
+                break;
+            } else {
+                break;
+            }
+        }
+        // `term as f64 / other`: the cast does not end the mul context.
+        while j < hi && self.ident(j) == Some("as") {
+            j += 1;
+            while j < hi && self.toks[j].kind == TokKind::Ident {
+                j += 1;
+                if j + 1 < hi
+                    && self.toks[j].is(TokKind::Punct, ":")
+                    && self.toks[j + 1].is(TokKind::Punct, ":")
+                {
+                    j += 2;
+                } else {
+                    break;
+                }
+            }
+        }
+        let mul = j < hi
+            && self.toks[j].kind == TokKind::Punct
+            && matches!(self.toks[j].text.as_str(), "*" | "/");
+        (Some(term), mul)
+    }
+
+    fn for_loop(&mut self, fd: &mut FnDef, mut i: usize, hi: usize) {
+        // pattern until `in` (bail on `{` — malformed / not a loop)
+        while i < hi && self.ident(i) != Some("in") {
+            if self.is(i, TokKind::Punct, "{") {
+                return;
+            }
+            i += 1;
+        }
+        i += 1;
+        let mut depth = 0i32;
+        let mut idents = Vec::new();
+        let mut root: Option<(String, u32, u32)> = None;
+        while i < hi {
+            let t = self.toks[i];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "(" | "[" => depth += 1,
+                    ")" | "]" => depth -= 1,
+                    "{" if depth <= 0 => break,
+                    _ => {}
+                }
+            } else if t.kind == TokKind::Ident {
+                if root.is_none() && t.text != "mut" && t.text != "ref" {
+                    root = Some((t.text.clone(), t.line, t.col));
+                }
+                idents.push(t.text.clone());
+            }
+            i += 1;
+        }
+        if let Some((root, line, col)) = root {
+            fd.fors.push(ForSite { root, idents, line, col });
+        }
+    }
+
+    fn let_binding(&mut self, fd: &mut FnDef, mut i: usize, hi: usize) {
+        if self.ident(i) == Some("mut") {
+            i += 1;
+        }
+        let Some(name) = self.ident(i).map(str::to_string) else {
+            return;
+        };
+        i += 1;
+        let mut ty = Vec::new();
+        let mut init = Vec::new();
+        if self.is(i, TokKind::Punct, ":") {
+            i += 1;
+            let mut depth = 0i32;
+            while i < hi {
+                let t = self.toks[i];
+                if t.kind == TokKind::Punct {
+                    match t.text.as_str() {
+                        "(" | "[" | "{" | "<" => depth += 1,
+                        ")" | "]" | "}" | ">" => depth -= 1,
+                        "=" | ";" if depth <= 0 => break,
+                        _ => {}
+                    }
+                } else if t.kind == TokKind::Ident {
+                    ty.push(t.text.clone());
+                }
+                i += 1;
+            }
+        }
+        if self.is(i, TokKind::Punct, "=") {
+            i += 1;
+            let mut depth = 0i32;
+            let mut steps = 0;
+            while i < hi && steps < 200 {
+                let t = self.toks[i];
+                if t.kind == TokKind::Punct {
+                    match t.text.as_str() {
+                        "(" | "[" | "{" => depth += 1,
+                        ")" | "]" | "}" => depth -= 1,
+                        ";" if depth <= 0 => break,
+                        _ => {}
+                    }
+                } else if t.kind == TokKind::Ident {
+                    init.push(t.text.clone());
+                }
+                i += 1;
+                steps += 1;
+            }
+        }
+        fd.lets.push(LetSite { name, ty, init });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(path: &str, src: &str) -> FileAst {
+        parse_file(&SourceFile::parse(path, src))
+    }
+
+    #[test]
+    fn fn_signatures_and_module_paths() {
+        let ast = parse(
+            "rust/src/coordinator/batcher.rs",
+            "pub fn free(a: u64, spec: WorkloadSpec) -> u64 { a }\n\
+             impl Batcher { fn queued(&self) -> usize { self.pending.len() } }\n",
+        );
+        assert_eq!(ast.fns.len(), 2);
+        assert_eq!(ast.fns[0].qualified(), "coordinator::batcher::free");
+        assert_eq!(ast.fns[0].params.len(), 2);
+        assert!(!ast.fns[0].has_self);
+        assert_eq!(ast.fns[1].qualified(), "coordinator::batcher::Batcher::queued");
+        assert!(ast.fns[1].has_self);
+    }
+
+    #[test]
+    fn nested_generics_do_not_eat_the_fn_body() {
+        let ast = parse(
+            "rust/src/model/x.rs",
+            "fn f(m: BTreeMap<String, Vec<Vec<u8>>>) -> Option<Vec<u8>> { g(); None }\n",
+        );
+        assert_eq!(ast.fns.len(), 1);
+        assert_eq!(ast.fns[0].calls.len(), 1);
+        assert_eq!(ast.fns[0].calls[0].path, vec!["g".to_string()]);
+    }
+
+    #[test]
+    fn raw_strings_and_idents_stay_out_of_the_way() {
+        let ast = parse(
+            "rust/src/model/x.rs",
+            "fn f() { let r#type = r#\"fn fake() { panic!() }\"#; use_it(r#type); }\n",
+        );
+        assert_eq!(ast.fns.len(), 1);
+        assert!(ast.fns[0].panics.is_empty(), "panic inside a raw string is data");
+        assert_eq!(ast.fns[0].calls.len(), 1);
+    }
+
+    #[test]
+    fn lifetimes_are_not_chars() {
+        let ast = parse(
+            "rust/src/model/x.rs",
+            "fn f<'a>(x: &'a str) -> &'a str { let c = 'x'; helper(x, c) }\n",
+        );
+        assert_eq!(ast.fns.len(), 1);
+        assert_eq!(ast.fns[0].calls.len(), 1);
+        assert_eq!(ast.fns[0].params[0].0, "x");
+    }
+
+    #[test]
+    fn cfg_not_test_fns_are_live_code() {
+        let ast = parse(
+            "rust/src/model/x.rs",
+            "#[cfg(not(test))]\nfn live() { x.unwrap(); }\n\
+             #[cfg(test)]\nmod tests { fn t() { y.unwrap(); } }\n",
+        );
+        let live: Vec<_> = ast.fns.iter().filter(|f| !f.is_test).collect();
+        assert_eq!(live.len(), 1);
+        assert_eq!(live[0].name, "live");
+        assert_eq!(live[0].panics.len(), 1);
+        let test: Vec<_> = ast.fns.iter().filter(|f| f.is_test).collect();
+        assert_eq!(test.len(), 1);
+    }
+
+    #[test]
+    fn method_receivers_root_and_last() {
+        let ast = parse(
+            "rust/src/model/x.rs",
+            "fn f(&self) { self.pending.values(); jobs.iter(); self.a.b.c.keys(); }\n",
+        );
+        let m = &ast.fns[0].methods;
+        assert_eq!(m[0].name, "values");
+        assert_eq!(m[0].recv_root.as_deref(), Some("self"));
+        assert_eq!(m[0].recv_last.as_deref(), Some("pending"));
+        assert_eq!(m[1].recv_root.as_deref(), Some("jobs"));
+        assert_eq!(m[1].recv_last.as_deref(), Some("jobs"));
+        assert_eq!(m[2].recv_last.as_deref(), Some("c"));
+    }
+
+    #[test]
+    fn binary_terms_see_through_casts_and_respect_mul_context() {
+        let ast = parse(
+            "rust/src/model/x.rs",
+            "fn f() { let x = setup_ns + bytes as f64 / beta_gbps; let y = busy_ns + state_bytes; }\n",
+        );
+        let b = &ast.fns[0].binaries;
+        let plus: Vec<_> = b.iter().filter(|s| s.op == "+").collect();
+        assert_eq!(plus.len(), 2);
+        assert_eq!(plus[0].rhs.as_deref(), Some("bytes"));
+        assert!(plus[0].rhs_mul, "cast-then-divide keeps the mul context");
+        assert_eq!(plus[1].lhs.as_deref(), Some("busy_ns"));
+        assert_eq!(plus[1].rhs.as_deref(), Some("state_bytes"));
+        assert!(!plus[1].rhs_mul);
+    }
+
+    #[test]
+    fn shift_and_arrow_are_not_comparisons() {
+        let ast = parse(
+            "rust/src/model/x.rs",
+            "fn f() -> u64 { let a_ns = 1u64 << 3; map(|x| -> u64 { x }); a_ns }\n",
+        );
+        assert!(ast.fns[0].binaries.iter().all(|b| b.op != "<" && b.op != ">"));
+    }
+
+    #[test]
+    fn struct_fields_record_type_idents() {
+        let ast = parse(
+            "rust/src/model/x.rs",
+            "pub struct S { pub jobs: HashMap<u64, Job>, names: Vec<String> }\n",
+        );
+        assert_eq!(ast.fields.len(), 2);
+        assert_eq!(ast.fields[0].1, "jobs");
+        assert!(ast.fields[0].2.contains(&"HashMap".to_string()));
+        assert!(!ast.fields[1].2.contains(&"HashMap".to_string()));
+    }
+
+    #[test]
+    fn for_loops_capture_the_iterated_expression() {
+        let ast = parse(
+            "rust/src/model/x.rs",
+            "fn f(&self) { for (k, v) in self.index.iter() { use_it(k, v); } }\n",
+        );
+        let fo = &ast.fns[0].fors;
+        assert_eq!(fo.len(), 1);
+        assert_eq!(fo[0].root, "self");
+        assert!(fo[0].idents.contains(&"index".to_string()));
+    }
+}

@@ -1,19 +1,26 @@
-//! The five `npuperf lint` rules, as token patterns over
-//! [`SourceFile`]s. Each rule documents its scope precisely; all of them
-//! respect `lint:allow` pragmas (see [`super::source`]) except the
-//! `pragma` meta-rule, which reports waiver misuse itself.
+//! The `npuperf lint` rules. Rules 1–5 are token patterns over
+//! [`SourceFile`]s; rules 6–8 are semantic, consuming the
+//! [`super::parser`] AST and [`super::callgraph`]. Each rule documents
+//! its scope precisely; all of them respect `lint:allow` pragmas (see
+//! [`super::source`]) except the `pragma` meta-rule, which reports
+//! waiver misuse itself.
 //!
 //! Scope conventions:
 //!
-//! - rules 1–4 are about *shipping* code: they skip `#[cfg(test)]` /
-//!   `#[test]` regions and whole files under `rust/tests/`;
+//! - rules 1–4 and 6–8 are about *shipping* code: they skip
+//!   `#[cfg(test)]` / `#[test]` regions and whole files under
+//!   `rust/tests/`;
 //! - rule 5 (`golden-fixture-hygiene`) is about *test* code and scans
 //!   everything, test regions included, except the blessed
-//!   `testkit/golden.rs` implementation.
+//!   `testkit/golden.rs` implementation;
+//! - `rust/benches/` and `examples/` are scanned by every applicable
+//!   rule except `no-wall-clock` — they measure host time by design.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
+use super::callgraph::CallGraph;
 use super::lexer::TokKind;
+use super::parser::{parse_file, FileAst};
 use super::report::Finding;
 use super::source::SourceFile;
 
@@ -22,12 +29,23 @@ pub const NO_PANIC: &str = "no-panic-serve-path";
 pub const METRIC_NAMES: &str = "metric-names-single-source";
 pub const LABEL_SETS: &str = "label-set-consistency";
 pub const GOLDEN_HYGIENE: &str = "golden-fixture-hygiene";
+pub const PANIC_REACH: &str = "panic-reachability";
+pub const UNIT_CONSISTENCY: &str = "unit-consistency";
+pub const NONDET_ITER: &str = "nondet-iteration";
 /// Meta-rule for malformed `lint:allow` pragmas (not waivable).
 pub const PRAGMA: &str = "pragma";
 
 /// Rules a `lint:allow` pragma may name.
-pub const RULE_NAMES: [&str; 5] =
-    [NO_WALL_CLOCK, NO_PANIC, METRIC_NAMES, LABEL_SETS, GOLDEN_HYGIENE];
+pub const RULE_NAMES: [&str; 8] = [
+    NO_WALL_CLOCK,
+    NO_PANIC,
+    METRIC_NAMES,
+    LABEL_SETS,
+    GOLDEN_HYGIENE,
+    PANIC_REACH,
+    UNIT_CONSISTENCY,
+    NONDET_ITER,
+];
 
 // Spelled in halves so the lint's own source does not trip the rules it
 // implements (rule 3 flags string literals with the metric prefix; rule
@@ -90,6 +108,7 @@ pub fn run_all(files: &[SourceFile], observability_doc: Option<&str>) -> Vec<Fin
     if let Some(doc) = observability_doc {
         doc_sync(&names, doc, &mut findings);
     }
+    run_semantic(files, &mut findings);
     findings
 }
 
@@ -120,8 +139,13 @@ fn pragma_misuse(f: &SourceFile, findings: &mut Vec<Finding>) {
 }
 
 /// Rule 1: host-time reads are confined to `coordinator::clock`.
+/// Benches and examples are exempt — they measure host time by design.
 fn no_wall_clock(f: &SourceFile, findings: &mut Vec<Finding>) {
-    if f.is_test_file || f.path.ends_with(CLOCK_FILE) {
+    if f.is_test_file
+        || f.path.ends_with(CLOCK_FILE)
+        || f.path.starts_with("rust/benches/")
+        || f.path.starts_with("examples/")
+    {
         return;
     }
     for &ti in &f.code {
@@ -521,6 +545,254 @@ fn literal_label_keys(f: &SourceFile, arg: &[usize]) -> Option<Vec<String>> {
         j += 1;
     }
     None
+}
+
+// ---------------------------------------------------------------------------
+// Semantic rules (6–8): parser + call-graph backed.
+// ---------------------------------------------------------------------------
+
+/// Files whose non-test fns are panic-reachability entry points.
+const ENTRY_FILES: [&str; 3] =
+    ["coordinator/server.rs", "coordinator/dispatch.rs", "coordinator/batcher.rs"];
+
+/// Files/dirs whose fns emit external artifacts (exporters, reports,
+/// golden fixtures) — the nondet-iteration rule protects everything
+/// that reaches or is reached by them.
+const EMIT_FILES_SUFFIX: [&str; 4] =
+    ["coordinator/metrics.rs", "testkit/golden.rs", "npu/report.rs", "npu/trace_dump.rs"];
+const EMIT_DIRS: [&str; 2] = ["src/obs/", "src/report/"];
+
+/// Identifier suffix → unit, per the repo's naming convention.
+const UNIT_SUFFIXES: [(&str, &str); 8] = [
+    ("_ns", "ns"),
+    ("_ms", "ms"),
+    ("_us", "us"),
+    ("_bytes", "bytes"),
+    ("_gbps", "gbps"),
+    ("_gops", "gops"),
+    ("_frac", "frac"),
+    ("_ops", "ops"),
+];
+/// Bare identifiers that *are* a unit-bearing quantity.
+const UNIT_WORDS: [(&str, &str); 6] = [
+    ("ns", "ns"),
+    ("ms", "ms"),
+    ("bytes", "bytes"),
+    ("gbps", "gbps"),
+    ("gops", "gops"),
+    ("frac", "frac"),
+];
+
+const ITER_METHODS: [&str; 7] =
+    ["iter", "iter_mut", "keys", "values", "values_mut", "into_iter", "drain"];
+const SORT_METHODS: [&str; 6] =
+    ["sort", "sort_by", "sort_by_key", "sort_unstable", "sort_unstable_by", "sort_unstable_by_key"];
+const HASH_TYPES: [&str; 2] = ["HashMap", "HashSet"];
+
+fn unit_of(term: Option<&str>) -> Option<&'static str> {
+    let t = term?;
+    for (suf, u) in UNIT_SUFFIXES {
+        if t.len() > suf.len() && t.ends_with(suf) {
+            return Some(u);
+        }
+    }
+    UNIT_WORDS.iter().find(|(w, _)| *w == t).map(|&(_, u)| u)
+}
+
+/// Run the three semantic rules. Parses every file, builds the call
+/// graph over `rust/src/`, and appends findings in deterministic order.
+pub fn run_semantic(files: &[SourceFile], findings: &mut Vec<Finding>) {
+    let mut asts: Vec<FileAst> = files.iter().map(parse_file).collect();
+    asts.sort_by(|a, b| a.path.cmp(&b.path));
+    let ast_by_path: BTreeMap<&str, &FileAst> =
+        asts.iter().map(|a| (a.path.as_str(), a)).collect();
+    let file_by_path: BTreeMap<&str, &SourceFile> =
+        files.iter().map(|f| (f.path.as_str(), f)).collect();
+    let cg = CallGraph::build(&asts);
+
+    // --- panic-reachability -------------------------------------------------
+    let entries: Vec<usize> = (0..cg.fns.len())
+        .filter(|&fid| ENTRY_FILES.iter().any(|s| cg.fns[fid].0.ends_with(s)))
+        .collect();
+    let parent = cg.reachable_from(&entries);
+    for (&fid, _) in &parent {
+        let (path, fd) = cg.fns[fid];
+        if on_serve_path(path) {
+            continue; // the token-level rule 2 already covers these files
+        }
+        let Some(f) = file_by_path.get(path) else { continue };
+        for p in &fd.panics {
+            emit(
+                findings,
+                f,
+                PANIC_REACH,
+                p.line,
+                p.col,
+                format!(
+                    "{} can panic and is reachable from the serve path: {}",
+                    p.what,
+                    cg.chain(&parent, fid).join(" -> ")
+                ),
+            );
+        }
+    }
+
+    // --- unit-consistency ---------------------------------------------------
+    for f in files {
+        if f.is_test_file {
+            continue;
+        }
+        let Some(ast) = ast_by_path.get(f.path.as_str()) else { continue };
+        for fd in &ast.fns {
+            if fd.is_test {
+                continue;
+            }
+            for b in &fd.binaries {
+                let (lu, ru) = (unit_of(b.lhs.as_deref()), unit_of(b.rhs.as_deref()));
+                let (Some(lu), Some(ru)) = (lu, ru) else { continue };
+                if lu == ru || b.lhs_mul || b.rhs_mul {
+                    continue; // same unit, or a derived-unit mul/div context
+                }
+                emit(
+                    findings,
+                    f,
+                    UNIT_CONSISTENCY,
+                    b.line,
+                    b.col,
+                    format!(
+                        "`{}` ({lu}) {} `{}` ({ru}) mixes units",
+                        b.lhs.as_deref().unwrap_or(""),
+                        b.op,
+                        b.rhs.as_deref().unwrap_or("")
+                    ),
+                );
+            }
+        }
+    }
+
+    // --- nondet-iteration ---------------------------------------------------
+    // Hash-typed struct fields, per struct name.
+    let mut hashy_fields: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for ast in &asts {
+        for (sname, fname, ty) in &ast.fields {
+            if ty.iter().any(|t| HASH_TYPES.contains(&t.as_str())) {
+                hashy_fields.entry(sname).or_default().insert(fname);
+            }
+        }
+    }
+    // Emission scope: fns in exporter/report/golden files, their
+    // transitive callers, and everything they call.
+    let emit_fids: BTreeSet<usize> = (0..cg.fns.len())
+        .filter(|&fid| {
+            let p = cg.fns[fid].0;
+            EMIT_FILES_SUFFIX.iter().any(|s| p.ends_with(s)) || EMIT_DIRS.iter().any(|d| p.contains(d))
+        })
+        .collect();
+    let mut scope = cg.callers_closure(&emit_fids);
+    let emit_list: Vec<usize> = emit_fids.iter().copied().collect();
+    scope.extend(cg.reachable_from(&emit_list).keys().copied());
+    let fid_of: BTreeMap<(&str, u32), usize> =
+        (0..cg.fns.len()).map(|fid| ((cg.fns[fid].0, cg.fns[fid].1.line), fid)).collect();
+    for f in files {
+        if f.is_test_file {
+            continue;
+        }
+        let Some(ast) = ast_by_path.get(f.path.as_str()) else { continue };
+        for fd in &ast.fns {
+            if fd.is_test {
+                continue;
+            }
+            let in_scope = fid_of
+                .get(&(f.path.as_str(), fd.line))
+                .is_some_and(|fid| scope.contains(fid));
+            if !in_scope {
+                continue;
+            }
+            // Hash-typed locals: params and lets whose type (or the
+            // head of whose initializer) names a hash container.
+            let mut local_hashy: BTreeSet<&str> = BTreeSet::new();
+            for (name, ty) in &fd.params {
+                if ty.iter().any(|t| HASH_TYPES.contains(&t.as_str())) {
+                    local_hashy.insert(name);
+                }
+            }
+            for l in &fd.lets {
+                if l.ty.iter().any(|t| HASH_TYPES.contains(&t.as_str()))
+                    || l.init.iter().take(2).any(|t| HASH_TYPES.contains(&t.as_str()))
+                {
+                    local_hashy.insert(&l.name);
+                }
+            }
+            let own_fields = fd
+                .impl_type
+                .as_deref()
+                .and_then(|ty| hashy_fields.get(ty))
+                .cloned()
+                .unwrap_or_default();
+            let is_hashy = |root: Option<&str>, last: Option<&str>| match root {
+                Some("self") => {
+                    last.is_some_and(|l| l != "self" && own_fields.contains(l))
+                }
+                Some(r) => last == Some(r) && local_hashy.contains(r),
+                None => false,
+            };
+            let mut sites: Vec<(u32, u32, String)> = Vec::new();
+            for m in &fd.methods {
+                if ITER_METHODS.contains(&m.name.as_str())
+                    && is_hashy(m.recv_root.as_deref(), m.recv_last.as_deref())
+                {
+                    let over = m.recv_last.as_deref().or(m.recv_root.as_deref()).unwrap_or("");
+                    sites.push((m.line, m.col, format!(".{}() over `{over}`", m.name)));
+                }
+            }
+            for fo in &fd.fors {
+                let hot = local_hashy.contains(fo.root.as_str())
+                    || (fo.root == "self"
+                        && fo.idents.len() > 1
+                        && own_fields.contains(fo.idents[1].as_str()));
+                let what = if fo.root == "self" && fo.idents.len() > 1 {
+                    fo.idents[1].as_str()
+                } else {
+                    fo.root.as_str()
+                };
+                if hot && !sites.iter().any(|(l, c, _)| (*l, *c) == (fo.line, fo.col)) {
+                    sites.push((fo.line, fo.col, format!("for-loop over `{what}`")));
+                }
+            }
+            if sites.is_empty() {
+                continue;
+            }
+            // Escapes: an explicit sort, or a BTree collection mention,
+            // at or below the site line within the same fn.
+            let sorted_after: Vec<u32> = fd
+                .methods
+                .iter()
+                .filter(|m| SORT_METHODS.contains(&m.name.as_str()))
+                .map(|m| m.line)
+                .collect();
+            sites.sort();
+            sites.dedup();
+            for (line, col, what) in sites {
+                if sorted_after.iter().any(|&sl| sl >= line)
+                    || fd.btree_mentions.iter().any(|&ml| ml >= line)
+                {
+                    continue;
+                }
+                emit(
+                    findings,
+                    f,
+                    NONDET_ITER,
+                    line,
+                    col,
+                    format!(
+                        "{what} iterates a hash container on an emission path ({}); \
+                         order is nondeterministic",
+                        fd.qualified()
+                    ),
+                );
+            }
+        }
+    }
 }
 
 /// Rule 3 (doc half): every declared metric name appears in

@@ -1,0 +1,118 @@
+//! SARIF 2.1.0 rendering of a [`LintReport`] (`npuperf lint --sarif-out
+//! F`), hand-serialized like every other JSON artifact in this crate.
+//!
+//! Shape: one `run`, the tool driver listing every rule, one `result`
+//! per finding. Waived findings are emitted with `level: "note"` and an
+//! in-source `suppression` carrying the pragma reason, so SARIF viewers
+//! show waivers as suppressed rather than dropping them — same
+//! visible-debt contract as the JSONL report.
+
+use crate::obs::export::escape_json;
+
+use super::report::LintReport;
+use super::rules::{PRAGMA, RULE_NAMES};
+
+const SARIF_VERSION: &str = "2.1.0";
+const SARIF_SCHEMA: &str = "https://json.schemastore.org/sarif-2.1.0.json";
+
+/// Render the full report as a single SARIF 2.1.0 document.
+pub fn render_sarif(report: &LintReport) -> String {
+    let mut rules = String::new();
+    for (i, rule) in RULE_NAMES.iter().chain(std::iter::once(&PRAGMA)).enumerate() {
+        if i > 0 {
+            rules.push(',');
+        }
+        rules += &format!("{{\"id\":\"{}\"}}", escape_json(rule));
+    }
+    let mut results = String::new();
+    for (i, f) in report.findings.iter().enumerate() {
+        if i > 0 {
+            results.push(',');
+        }
+        let level = if f.allowed.is_some() { "note" } else { "error" };
+        let suppressions = match &f.allowed {
+            Some(reason) => format!(
+                ",\"suppressions\":[{{\"kind\":\"inSource\",\"justification\":\"{}\"}}]",
+                escape_json(reason)
+            ),
+            None => String::new(),
+        };
+        results += &format!(
+            "{{\"ruleId\":\"{}\",\"level\":\"{level}\",\"message\":{{\"text\":\"{}\"}},\
+             \"locations\":[{{\"physicalLocation\":{{\"artifactLocation\":{{\"uri\":\"{}\"}},\
+             \"region\":{{\"startLine\":{},\"startColumn\":{}}}}}}}]{suppressions}}}",
+            escape_json(f.rule),
+            escape_json(&f.message),
+            escape_json(&f.file),
+            f.line,
+            f.col
+        );
+    }
+    format!(
+        "{{\"$schema\":\"{SARIF_SCHEMA}\",\"version\":\"{SARIF_VERSION}\",\
+         \"runs\":[{{\"tool\":{{\"driver\":{{\"name\":\"npuperf-lint\",\
+         \"rules\":[{rules}]}}}},\"results\":[{results}]}}]}}\n"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::report::Finding;
+
+    fn report() -> LintReport {
+        LintReport {
+            findings: vec![
+                Finding {
+                    rule: "no-wall-clock",
+                    file: "rust/src/a.rs".to_string(),
+                    line: 3,
+                    col: 7,
+                    message: "reads host \"time\"".to_string(),
+                    allowed: None,
+                },
+                Finding {
+                    rule: "panic-reachability",
+                    file: "rust/src/b.rs".to_string(),
+                    line: 9,
+                    col: 1,
+                    message: "chain".to_string(),
+                    allowed: Some("dense indices".to_string()),
+                },
+            ],
+            files_scanned: 2,
+        }
+    }
+
+    #[test]
+    fn sarif_is_valid_json_with_the_required_shape() {
+        let doc = render_sarif(&report());
+        crate::obs::validate_json(doc.trim()).expect("SARIF must be valid JSON");
+        assert!(doc.contains("\"version\":\"2.1.0\""));
+        assert!(doc.contains("sarif-2.1.0.json"));
+        assert!(doc.contains("\"name\":\"npuperf-lint\""));
+        assert!(doc.contains("\"ruleId\":\"no-wall-clock\""));
+        assert!(doc.contains("\"startLine\":3"));
+        assert!(doc.contains("\"startColumn\":7"));
+        assert!(doc.contains("reads host \\\"time\\\""), "messages are escaped");
+    }
+
+    #[test]
+    fn waived_findings_become_suppressed_notes() {
+        let doc = render_sarif(&report());
+        assert!(doc.contains("\"level\":\"error\""));
+        assert!(doc.contains("\"level\":\"note\""));
+        assert!(doc.contains("\"suppressions\":[{\"kind\":\"inSource\",\"justification\":\"dense indices\"}]"));
+        let active_count = doc.matches("\"level\":\"error\"").count();
+        assert_eq!(active_count, 1);
+    }
+
+    #[test]
+    fn every_rule_is_declared_on_the_driver() {
+        let doc = render_sarif(&LintReport::default());
+        for rule in RULE_NAMES {
+            assert!(doc.contains(&format!("{{\"id\":\"{rule}\"}}")), "{rule} missing");
+        }
+        assert!(doc.contains("{\"id\":\"pragma\"}"));
+    }
+}

@@ -6,11 +6,15 @@
 //!
 //! ```text
 //! // lint:allow(<rule-name>, "<non-empty reason>")
+//! // lint:allow-file(<rule-name>, "<non-empty reason>")
 //! ```
 //!
-//! A pragma waives findings of `<rule-name>` on its own line and the
-//! line immediately below it. The reason is mandatory: a waiver without
-//! a recorded justification is itself reported (rule name `pragma`).
+//! A `lint:allow` pragma waives findings of `<rule-name>` on its own
+//! line and the line immediately below it. `lint:allow-file` waives the
+//! rule for the whole file — every finding is still reported,
+//! individually carrying the reason, so file-level waivers stay visible
+//! debt. The reason is mandatory in both forms: a waiver without a
+//! recorded justification is itself reported (rule name `pragma`).
 
 use super::lexer::{lex, TokKind, Token};
 use super::rules::RULE_NAMES;
@@ -43,6 +47,9 @@ pub struct SourceFile {
     /// Inclusive line ranges covered by `#[test]` / `#[cfg(test)]` items.
     pub test_regions: Vec<(u32, u32)>,
     pub pragmas: Vec<Pragma>,
+    /// `lint:allow-file` pragmas — whole-file waivers (line is where the
+    /// pragma sits, kept for diagnostics only).
+    pub file_pragmas: Vec<Pragma>,
     pub bad_pragmas: Vec<BadPragma>,
     /// Whole-file test code (anything under `rust/tests/`).
     pub is_test_file: bool,
@@ -59,9 +66,18 @@ impl SourceFile {
             .map(|(i, _)| i)
             .collect();
         let test_regions = find_test_regions(&tokens, &code);
-        let (pragmas, bad_pragmas) = parse_pragmas(&tokens);
+        let (pragmas, file_pragmas, bad_pragmas) = parse_pragmas(&tokens);
         let is_test_file = path.starts_with("rust/tests/") || path.contains("/tests/");
-        SourceFile { path, tokens, code, test_regions, pragmas, bad_pragmas, is_test_file }
+        SourceFile {
+            path,
+            tokens,
+            code,
+            test_regions,
+            pragmas,
+            file_pragmas,
+            bad_pragmas,
+            is_test_file,
+        }
     }
 
     /// Is `line` inside test-only code (a `#[cfg(test)] mod` body, a
@@ -71,11 +87,13 @@ impl SourceFile {
     }
 
     /// The waiver reason if a `lint:allow(rule, …)` pragma covers `line`
-    /// (same line or the line directly above).
+    /// (same line or the line directly above), or a `lint:allow-file`
+    /// pragma covers the whole file.
     pub fn allow(&self, rule: &str, line: u32) -> Option<&str> {
         self.pragmas
             .iter()
             .find(|p| p.rule == rule && (p.line == line || p.line + 1 == line))
+            .or_else(|| self.file_pragmas.iter().find(|p| p.rule == rule))
             .map(|p| p.reason.as_str())
     }
 }
@@ -186,29 +204,37 @@ fn find_test_regions(tokens: &[Token], code: &[usize]) -> Vec<(u32, u32)> {
     regions
 }
 
-/// Extract `lint:allow` pragmas from line comments; anything that looks
-/// like a pragma but does not parse becomes a [`BadPragma`].
-fn parse_pragmas(tokens: &[Token]) -> (Vec<Pragma>, Vec<BadPragma>) {
+/// Extract `lint:allow` / `lint:allow-file` pragmas from line comments;
+/// anything that looks like a pragma but does not parse becomes a
+/// [`BadPragma`].
+fn parse_pragmas(tokens: &[Token]) -> (Vec<Pragma>, Vec<Pragma>, Vec<BadPragma>) {
     let mut good = Vec::new();
+    let mut file_good = Vec::new();
     let mut bad = Vec::new();
     for t in tokens {
         if t.kind != TokKind::LineComment {
             continue;
         }
         let body = t.text.trim_start_matches('/').trim();
-        let Some(rest) = body.strip_prefix("lint:allow") else {
-            continue;
+        // `-file` must be peeled first: both forms share the prefix.
+        let (rest, file_scoped) = match body.strip_prefix("lint:allow-file") {
+            Some(r) => (r, true),
+            None => match body.strip_prefix("lint:allow") {
+                Some(r) => (r, false),
+                None => continue,
+            },
         };
+        let form = if file_scoped { "lint:allow-file" } else { "lint:allow" };
         let mut fail = |message: String| {
             bad.push(BadPragma { line: t.line, col: t.col, message });
         };
         let Some(inner) = rest.trim().strip_prefix('(').and_then(|r| r.strip_suffix(')')) else {
-            fail("malformed pragma: expected lint:allow(rule, \"reason\")".to_string());
+            fail(format!("malformed pragma: expected {form}(rule, \"reason\")"));
             continue;
         };
         let Some((rule, reason)) = inner.split_once(',') else {
             fail(format!(
-                "pragma for `{}` is missing its reason: lint:allow(rule, \"reason\")",
+                "pragma for `{}` is missing its reason: {form}(rule, \"reason\")",
                 inner.trim()
             ));
             continue;
@@ -223,9 +249,14 @@ fn parse_pragmas(tokens: &[Token]) -> (Vec<Pragma>, Vec<BadPragma>) {
             fail(format!("pragma for `{rule}` has an empty reason — justify the waiver"));
             continue;
         }
-        good.push(Pragma { line: t.line, rule, reason });
+        let p = Pragma { line: t.line, rule, reason };
+        if file_scoped {
+            file_good.push(p);
+        } else {
+            good.push(p);
+        }
     }
-    (good, bad)
+    (good, file_good, bad)
 }
 
 #[cfg(test)]
@@ -266,6 +297,22 @@ mod tests {
         assert_eq!(f.bad_pragmas.len(), 2);
         assert!(f.bad_pragmas[0].message.contains("missing its reason"));
         assert!(f.bad_pragmas[1].message.contains("unknown rule"));
+    }
+
+    #[test]
+    fn file_pragma_covers_every_line_with_its_reason() {
+        let src = "// lint:allow-file(panic-reachability, \"dense indices by construction\")\n\
+                   fn a() { x.unwrap(); }\n\nfn b() { y.unwrap(); }\n";
+        let f = SourceFile::parse("rust/src/a.rs", src);
+        assert_eq!(f.file_pragmas.len(), 1);
+        assert!(f.pragmas.is_empty());
+        assert_eq!(f.allow("panic-reachability", 2), Some("dense indices by construction"));
+        assert_eq!(f.allow("panic-reachability", 4), Some("dense indices by construction"));
+        assert_eq!(f.allow("no-wall-clock", 2), None, "only the named rule is waived");
+        // Malformed file pragmas are findings like line pragmas.
+        let g = SourceFile::parse("rust/src/b.rs", "// lint:allow-file(panic-reachability)\n");
+        assert_eq!(g.bad_pragmas.len(), 1);
+        assert!(g.bad_pragmas[0].message.contains("lint:allow-file"));
     }
 
     #[test]

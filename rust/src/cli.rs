@@ -623,11 +623,40 @@ pub fn run(args: &[String]) -> Result<String> {
         "lint" => {
             let root = rest.first().filter(|s| !s.starts_with("--")).copied().unwrap_or(".");
             let report = crate::analysis::lint_repo(std::path::Path::new(root))?;
-            // Write the machine-readable report before deciding pass/fail
-            // so CI can upload it as an artifact on failure.
+            // Write the machine-readable reports before deciding
+            // pass/fail so CI can upload them as artifacts on failure.
             if let Some(path) = opt("--json-out") {
                 std::fs::write(path, report.render_jsonl())
                     .map_err(|e| anyhow!("cannot write {path}: {e}"))?;
+            }
+            if let Some(path) = opt("--sarif-out") {
+                std::fs::write(path, crate::analysis::sarif::render_sarif(&report))
+                    .map_err(|e| anyhow!("cannot write {path}: {e}"))?;
+            }
+            let current = crate::analysis::baseline::Baseline::from_report(&report);
+            if flag("--update-baseline") {
+                let path = opt("--baseline").unwrap_or("lint-baseline.json");
+                std::fs::write(path, current.render())
+                    .map_err(|e| anyhow!("cannot write {path}: {e}"))?;
+                return Ok(format!(
+                    "{}baseline updated: {path} now records {} entries\n",
+                    report.render_human(),
+                    current.entries.len()
+                ));
+            }
+            if let Some(path) = opt("--baseline") {
+                // Ratchet mode: the gate is "no growth over the recorded
+                // baseline" instead of "zero active findings".
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow!("cannot read baseline {path}: {e}"))?;
+                let recorded = crate::analysis::baseline::Baseline::parse(&text)
+                    .map_err(|e| anyhow!("{path}: {e}"))?;
+                let outcome = recorded.check(&current);
+                let out = format!("{}{}", report.render_human(), outcome.render_human());
+                if outcome.passed() {
+                    return Ok(out);
+                }
+                bail!("{out}");
             }
             if report.is_clean() {
                 Ok(report.render_human())
@@ -677,11 +706,16 @@ commands:
   obs <file>                validate an exported artifact: Chrome trace /
                             metrics JSON, JSONL event log, or Prometheus
                             exposition
-  lint [repo-root] [--json-out F]
+  lint [repo-root] [--json-out F] [--sarif-out F]
+       [--baseline F] [--update-baseline]
                             project-specific static analysis: determinism,
-                            panic-freedom on the serve path, metric/doc
-                            consistency (rules in docs/LINTS.md); exits
-                            non-zero on findings, --json-out writes JSONL
+                            panic-freedom (token + call-graph reachability),
+                            unit consistency, iteration-order determinism,
+                            metric/doc consistency (rules in docs/LINTS.md);
+                            exits non-zero on findings, --json-out writes
+                            JSONL, --sarif-out writes SARIF 2.1.0;
+                            --baseline gates on the ratchet (findings may
+                            only shrink), --update-baseline rewrites it
   hw                        hardware spec (table 1)
 global flags: --hw-config FILE | --hw key=value (repeatable) — what-if hardware";
 
@@ -986,6 +1020,32 @@ mod tests {
         for line in jsonl.lines() {
             crate::obs::validate_json(line).expect(line);
         }
+    }
+
+    #[test]
+    fn lint_sarif_and_ratchet_flags_roundtrip() {
+        let dir = scratch("lint-ratchet");
+        let sarif = dir.join("lint.sarif");
+        let base = dir.join("baseline.json");
+        // --update-baseline records the current (clean) run...
+        let out = run_cmd(&[
+            "lint",
+            env!("CARGO_MANIFEST_DIR"),
+            "--sarif-out",
+            sarif.to_str().unwrap(),
+            "--baseline",
+            base.to_str().unwrap(),
+            "--update-baseline",
+        ])
+        .unwrap();
+        assert!(out.contains("baseline updated"), "{out}");
+        let doc = std::fs::read_to_string(&sarif).unwrap();
+        crate::obs::validate_json(doc.trim()).expect("SARIF must be valid JSON");
+        // ...and gating against what was just recorded passes.
+        let out =
+            run_cmd(&["lint", env!("CARGO_MANIFEST_DIR"), "--baseline", base.to_str().unwrap()])
+                .unwrap();
+        assert!(out.contains("clean"), "{out}");
     }
 
     #[test]

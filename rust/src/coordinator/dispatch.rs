@@ -14,7 +14,7 @@
 //! custom registry, a degenerate PJRT input shape, or an admission
 //! refusal each turn into an error reply for the affected requests.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::Arc;
 
@@ -65,7 +65,7 @@ impl Dispatcher {
         &self,
         batch: Batch,
         device: &mut Device,
-        jobs: &mut HashMap<u64, Job>,
+        jobs: &mut BTreeMap<u64, Job>,
         metrics: &mut Metrics,
         tracer: &mut Tracer,
     ) {
@@ -289,7 +289,7 @@ mod tests {
         let clock: Arc<dyn Clock> = Arc::new(ManualClock::new());
         let d = Dispatcher::new(Router::simulate_only(), None, clock, 1024);
         let mut device = Device::new(0, &cfg);
-        let mut jobs = HashMap::new();
+        let mut jobs = BTreeMap::new();
         let mut metrics = Metrics::new();
         let mut tracer = Tracer::new(false, 0);
         let spec = WorkloadSpec::new(OperatorKind::Linear, 1024);
@@ -316,7 +316,7 @@ mod tests {
         let clock: Arc<dyn Clock> = Arc::new(ManualClock::new());
         let d = Dispatcher::new(Router::standard(), None, clock, 1024);
         let mut device = Device::new(0, &cfg);
-        let mut jobs = HashMap::new();
+        let mut jobs = BTreeMap::new();
         let mut metrics = Metrics::new();
         let mut tracer = Tracer::new(false, 0);
         let spec = WorkloadSpec::new(OperatorKind::Causal, 256); // artifact context
@@ -338,7 +338,7 @@ mod tests {
         let clock: Arc<dyn Clock> = Arc::new(ManualClock::new());
         let d = Dispatcher::new(Router::simulate_only(), None, clock, 1024);
         let mut device = Device::new(0, &cfg);
-        let mut jobs = HashMap::new();
+        let mut jobs = BTreeMap::new();
         let mut metrics = Metrics::new();
         let mut tracer = Tracer::new(false, 0);
         let spec = WorkloadSpec::new(OperatorKind::Causal, 65_536);

@@ -317,14 +317,17 @@ fn serve_loop(
     // Dispatcher runs one placed batch on one device.
     let mut fleet = Fleet::new(&cfg);
     let dispatcher = Dispatcher::new(router, exec, clock.clone(), cfg.max_tracked_sessions);
-    let mut jobs: std::collections::HashMap<u64, Job> = Default::default();
+    // BTreeMap so anything that ever iterates the in-flight table (e.g. a
+    // future drain-and-report path) sees request-id order (lint:
+    // nondet-iteration).
+    let mut jobs: std::collections::BTreeMap<u64, Job> = Default::default();
     let mut next_id: u64 = 0;
     let t0 = clock.now_ns();
 
     // Placement + execution for one released batch.
     let dispatch = |batch: super::batcher::Batch,
                     fleet: &mut Fleet,
-                    jobs: &mut std::collections::HashMap<u64, Job>,
+                    jobs: &mut std::collections::BTreeMap<u64, Job>,
                     metrics: &mut Metrics,
                     tracer: &mut Tracer| {
         let d = fleet.place(&batch.sessions);
@@ -649,7 +652,7 @@ mod tests {
             ..CoordinatorConfig::default()
         })
         .unwrap();
-        let mut seen = std::collections::HashMap::new();
+        let mut seen = std::collections::BTreeMap::new();
         for round in 0..3 {
             for (session, n) in [(1u64, 1024usize), (2, 2048)] {
                 let r = c

@@ -183,6 +183,7 @@ impl StateManager {
     /// Sum of logical persistent bytes across open sessions.
     pub fn total_bytes(&self) -> u64 {
         self.meta
+            // lint:allow(nondet-iteration, "order-insensitive sum of per-session footprints")
             .values()
             .map(|m| footprint_for(m.op, m.tokens, m.d_head, m.d_state))
             .sum()

@@ -17,6 +17,7 @@ use super::page_table::PageTable;
 /// session id so eviction order is deterministic.
 pub fn lru_victim(tables: &HashMap<u64, PageTable>, protect: u64) -> Option<u64> {
     tables
+        // lint:allow(nondet-iteration, "min_by_key with a total (last_touch, id) key; the winner is order-independent")
         .iter()
         .filter(|(id, t)| **id != protect && t.resident && !t.pinned && t.resident_pages > 0)
         .min_by_key(|(id, t)| (t.last_touch, **id))

@@ -10,6 +10,8 @@
 //!   consumed. Phase-separated quadratic attention parks 128 MB of scores
 //!   for ~half the run; streaming operators re-consume within ~1-2 ms.
 
+// lint:allow-file(panic-reachability, "per-buffer bookkeeping is indexed by buffer ids the lowering allocated; dense by construction")
+
 use crate::ops::OpGraph;
 
 use super::engine::{ps_to_ns, SimTrace};

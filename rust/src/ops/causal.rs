@@ -59,7 +59,7 @@ pub fn lower(spec: &WorkloadSpec, hw: &NpuConfig, sim: &SimConfig) -> OpGraph {
         );
         // Spill each score tile with a fresh allocation (§V alloc churn).
         let spills = l.spill_tiles(score_buf, (t.min(n) * n) as u64 * eb, tk, vec![mm]);
-        phase1_tail.push(*spills.last().unwrap());
+        phase1_tail.extend(spills.last().copied());
     }
 
     // ---- Phase 2: softmax over re-pulled scores, spill probabilities ---
@@ -72,7 +72,7 @@ pub fn lower(spec: &WorkloadSpec, hw: &NpuConfig, sim: &SimConfig) -> OpGraph {
             BufferAccess::new(prob_buf, (t * n) as u64 * eb, false),
         ]);
         let spills = l.spill_tiles(prob_buf, (t.min(n) * n) as u64 * eb, tk, vec![sm]);
-        phase2_tail.push(*spills.last().unwrap());
+        phase2_tail.extend(spills.last().copied());
     }
 
     // ---- Phase 3: PV with re-pulled probabilities and streamed V -------

@@ -413,6 +413,7 @@ impl OperatorRegistry {
     /// and surface the miss as a request error.
     pub fn for_kind(&self, kind: OperatorKind) -> &dyn CausalOperator {
         self.try_for_kind(kind)
+            // lint:allow(panic-reachability, "assert-style API by contract; the serve path resolves operators via try_for_kind and never calls this")
             .unwrap_or_else(|| panic!("no operator registered for kind {kind:?}"))
     }
 

@@ -11,7 +11,7 @@
 //!               outputs <m>   then m× tensors
 //! ```
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -63,7 +63,9 @@ pub struct ArtifactEntry {
 pub struct Manifest {
     pub dir: PathBuf,
     pub entries: Vec<ArtifactEntry>,
-    by_name: HashMap<String, usize>,
+    /// Name → index into `entries`. BTreeMap so any future iteration
+    /// over the index is in name order (lint: nondet-iteration).
+    by_name: BTreeMap<String, usize>,
 }
 
 fn parse_shapes(s: &str) -> Result<Vec<Vec<usize>>> {
@@ -121,7 +123,7 @@ impl Manifest {
     }
 
     pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
-        self.by_name.get(name).map(|&i| &self.entries[i])
+        self.by_name.get(name).and_then(|&i| self.entries.get(i))
     }
 
     pub fn hlo_path(&self, name: &str) -> PathBuf {

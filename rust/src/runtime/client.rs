@@ -85,7 +85,8 @@ impl HloRuntime {
             })
             .collect::<Result<_>>()?;
 
-        let exe = self.cache.get(name).expect("loaded above");
+        let exe =
+            self.cache.get(name).ok_or_else(|| anyhow!("executable {name} not loaded"))?;
         // lint:allow(no-wall-clock, "PJRT execute() reports measured device wall time")
         let t0 = Instant::now();
         let result = exe

@@ -145,6 +145,8 @@ pub fn selftest(hw: &NpuConfig, sim: &SimConfig, opts: &SelftestOptions) -> Self
 
     section("lint-conformance", crate::analysis::selftest_section());
 
+    section("semantic-lint-conformance", crate::analysis::semantic_selftest_section());
+
     // Golden fixtures capture *default-config* output; with hardware
     // overrides in play the snapshot legitimately differs, so skip
     // rather than fail (the differential sections above still ran on the

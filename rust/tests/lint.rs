@@ -169,6 +169,151 @@ fn lint_report_is_deterministic_and_jsonl_is_valid() {
     }
 }
 
+// ---- Semantic rules (parser + call graph) -----------------------------
+
+#[test]
+fn unit_consistency_flags_mixed_unit_arithmetic() {
+    check_pair(
+        rules::UNIT_CONSISTENCY,
+        "rust/src/npu/fixture.rs",
+        include_str!("lint_fixtures/unit_mix_bad.rs"),
+        include_str!("lint_fixtures/unit_mix_good.rs"),
+    );
+}
+
+#[test]
+fn nondet_iteration_flags_hash_maps_on_emission_paths() {
+    check_pair(
+        rules::NONDET_ITER,
+        "rust/src/obs/fixture.rs",
+        include_str!("lint_fixtures/nondet_iter_bad.rs"),
+        include_str!("lint_fixtures/nondet_iter_good.rs"),
+    );
+}
+
+#[test]
+fn nondet_iteration_ignores_files_off_emission_paths() {
+    // The same HashMap iteration in a module nothing exports from is fine.
+    let report = lint_one(
+        "rust/src/model/fixture.rs",
+        include_str!("lint_fixtures/nondet_iter_bad.rs"),
+    );
+    assert!(report.is_clean(), "{}", report.render_human());
+}
+
+#[test]
+fn panic_reachability_reports_the_full_call_chain() {
+    let entry = include_str!("lint_fixtures/panic_reach_entry.rs");
+    let mut a = Analyzer::new();
+    a.add_source("rust/src/coordinator/dispatch.rs", entry);
+    a.add_source("rust/src/ops/fixture.rs", include_str!("lint_fixtures/panic_reach_bad.rs"));
+    let report = a.run();
+    let finding = report
+        .active()
+        .find(|f| f.rule == rules::PANIC_REACH)
+        .unwrap_or_else(|| panic!("no panic-reachability finding:\n{}", report.render_human()));
+    assert_eq!(finding.file, "rust/src/ops/fixture.rs");
+    // The rendered chain names every frame, entry point to panic site.
+    for frame in [
+        "coordinator::dispatch::Dispatcher::dispatch",
+        "ops::fixture::lower_stage",
+        "ops::fixture::plan_tail",
+    ] {
+        assert!(
+            finding.message.contains(frame),
+            "chain missing frame {frame}: {}",
+            finding.message
+        );
+    }
+
+    let mut good = Analyzer::new();
+    good.add_source("rust/src/coordinator/dispatch.rs", entry);
+    good.add_source("rust/src/ops/fixture.rs", include_str!("lint_fixtures/panic_reach_good.rs"));
+    let report = good.run();
+    assert!(
+        report.is_clean() && report.findings.is_empty(),
+        "panic-free twin must be clean:\n{}",
+        report.render_human()
+    );
+}
+
+// ---- SARIF + ratchet ---------------------------------------------------
+
+#[test]
+fn sarif_export_of_the_repo_is_valid_and_schema_shaped() {
+    let report = lint_repo(Path::new(env!("CARGO_MANIFEST_DIR"))).unwrap();
+    let sarif = npuperf::analysis::sarif::render_sarif(&report);
+    npuperf::obs::validate_json(sarif.trim()).expect("SARIF must be valid JSON");
+    assert!(sarif.contains("\"$schema\":\"https://json.schemastore.org/sarif-2.1.0.json\""));
+    assert!(sarif.contains("\"version\":\"2.1.0\""));
+    assert!(sarif.contains("\"name\":\"npuperf-lint\""));
+    for rule in rules::RULE_NAMES {
+        assert!(sarif.contains(&format!("{{\"id\":\"{rule}\"}}")), "rule {rule} not declared");
+    }
+    // The repo's in-source waivers surface as suppressed notes.
+    assert!(sarif.contains("\"suppressions\":[{\"kind\":\"inSource\""));
+}
+
+#[test]
+fn ratchet_fails_on_growth_and_passes_on_shrinkage() {
+    use npuperf::analysis::baseline::Baseline;
+    let noisy = lint_one(
+        "rust/src/npu/fixture.rs",
+        include_str!("lint_fixtures/unit_mix_bad.rs"),
+    );
+    let quiet = lint_one(
+        "rust/src/npu/fixture.rs",
+        include_str!("lint_fixtures/unit_mix_good.rs"),
+    );
+    let grow = Baseline::from_report(&quiet).check(&Baseline::from_report(&noisy));
+    assert!(!grow.passed(), "new findings must fail the ratchet");
+    assert!(!grow.regressions.is_empty());
+    let shrink = Baseline::from_report(&noisy).check(&Baseline::from_report(&quiet));
+    assert!(shrink.passed(), "fixed findings must pass the ratchet");
+    assert!(!shrink.improvements.is_empty());
+}
+
+#[test]
+fn checked_in_baseline_holds_at_head() {
+    use npuperf::analysis::baseline::Baseline;
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let text = std::fs::read_to_string(root.join("lint-baseline.json")).unwrap();
+    let recorded = Baseline::parse(&text).unwrap();
+    let report = lint_repo(root).unwrap();
+    let outcome = recorded.check(&Baseline::from_report(&report));
+    assert!(outcome.passed(), "{}", outcome.render_human());
+}
+
+// ---- Discovery scope ---------------------------------------------------
+
+#[test]
+fn lint_discovers_benches_with_the_right_rule_scope() {
+    let dir = std::env::temp_dir().join(format!("npuperf-lint-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(dir.join("rust/src")).unwrap();
+    std::fs::create_dir_all(dir.join("rust/benches")).unwrap();
+    std::fs::write(dir.join("rust/src/lib.rs"), "pub fn ok() {}\n").unwrap();
+    // The planted metric-name literal is assembled at runtime so this
+    // test file itself stays lint-clean.
+    let planted = format!(
+        "use std::time::Instant;\nfn main() {{\n    let t0 = Instant::now();\n    \
+         let name = \"{}planted_total\";\n    let _ = (t0, name);\n}}\n",
+        concat!("npu", "perf_"),
+    );
+    std::fs::write(dir.join("rust/benches/planted.rs"), planted).unwrap();
+    let report = lint_repo(&dir).unwrap();
+    assert!(
+        report
+            .active()
+            .any(|f| f.rule == rules::METRIC_NAMES && f.file == "rust/benches/planted.rs"),
+        "planted bench violation not reported:\n{}",
+        report.render_human()
+    );
+    // Benches measure host time by design: no-wall-clock is exempt there,
+    // and only there.
+    assert!(!report.findings.iter().any(|f| f.rule == rules::NO_WALL_CLOCK));
+}
+
 #[test]
 fn lint_repo_rejects_non_repo_roots() {
     let dir = std::env::temp_dir().join(format!("npuperf-lint-noroot-{}", std::process::id()));

@@ -1,0 +1,20 @@
+//! Lint fixture (data, never compiled): iterating a `HashMap` field in
+//! an exporter — `RandomState` order would leak into the rendered
+//! output. Linted under the synthetic path `rust/src/obs/fixture.rs`.
+
+use std::collections::HashMap;
+
+pub struct SeriesExporter {
+    series: HashMap<String, u64>,
+}
+
+impl SeriesExporter {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, value) in &self.series {
+            out.push_str(name);
+            out.push_str(&value.to_string());
+        }
+        out
+    }
+}

@@ -1,0 +1,19 @@
+//! Lint fixture (data, never compiled): the same exporter over a
+//! `BTreeMap` — iteration order is the key order, deterministic.
+
+use std::collections::BTreeMap;
+
+pub struct SeriesExporter {
+    series: BTreeMap<String, u64>,
+}
+
+impl SeriesExporter {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, value) in &self.series {
+            out.push_str(name);
+            out.push_str(&value.to_string());
+        }
+        out
+    }
+}

@@ -1,0 +1,13 @@
+//! Lint fixture (data, never compiled): a panic site two call frames
+//! below the serve entry in `panic_reach_entry.rs`. Linted under the
+//! synthetic path `rust/src/ops/fixture.rs` — outside the token rule's
+//! serve-path file list, so only call-graph reachability can flag it.
+
+pub fn lower_stage() {
+    plan_tail();
+}
+
+fn plan_tail() {
+    let spills: Vec<u64> = Vec::new();
+    let _last = spills.last().unwrap();
+}

@@ -1,0 +1,11 @@
+//! Lint fixture (data, never compiled): a serve-path entry point whose
+//! dispatch transitively reaches a panic planted in another module.
+//! Linted under the synthetic path `rust/src/coordinator/dispatch.rs`.
+
+pub struct Dispatcher;
+
+impl Dispatcher {
+    pub fn dispatch(&self) {
+        crate::ops::fixture::lower_stage();
+    }
+}

@@ -1,0 +1,13 @@
+//! Lint fixture (data, never compiled): the same call chain as
+//! `panic_reach_bad.rs` with the tail made panic-free.
+
+pub fn lower_stage() {
+    plan_tail();
+}
+
+fn plan_tail() {
+    let spills: Vec<u64> = Vec::new();
+    if let Some(last) = spills.last() {
+        let _ = last;
+    }
+}

@@ -1,0 +1,6 @@
+//! Lint fixture (data, never compiled): adds nanoseconds to bytes —
+//! the dimensional mix-up the unit-consistency rule exists to catch.
+
+pub fn queue_eta(busy_until_ns: u64, state_bytes: u64) -> u64 {
+    busy_until_ns + state_bytes
+}

@@ -1,0 +1,7 @@
+//! Lint fixture (data, never compiled): dividing bytes by bandwidth
+//! derives a time — multiply/divide contexts are exempt, including
+//! through an `as` cast.
+
+pub fn transfer_eta_ns(setup_ns: f64, state_bytes: u64, link_gbps: f64) -> f64 {
+    setup_ns + state_bytes as f64 / link_gbps
+}
